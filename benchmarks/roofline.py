@@ -1,0 +1,85 @@
+"""Format dry-run JSON results into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def load(paths=None):
+    recs = []
+    for p in paths or sorted(RESULTS.glob("dryrun*.json")):
+        recs.extend(json.loads(Path(p).read_text()))
+    # dedup (arch, shape, mesh, variant) keeping the last
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"],
+              r.get("variant", "baseline"))] = r
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | HBM GiB/dev | useful frac | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped ({r.get('reason','')[:40]}…) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR {r.get('error','')[:40]} | — | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {}).get("total_hbm_bytes")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {fmt_bytes(mem)} | "
+            f"{t.get('useful_fraction', 0):.3f} | "
+            f"{t.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | status | lower s | compile s | "
+            "HBM GiB/dev | collectives (AR/AG/RS/A2A/CP) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | — | — | — | — |")
+            continue
+        mem = r.get("memory", {}).get("total_hbm_bytes")
+        c = r.get("collectives", {})
+        cc = "/".join(str(c.get(k, {}).get("count", 0)) for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('lower_s','-')} | {r.get('compile_s','-')} | "
+            f"{fmt_bytes(mem)} | {cc} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load(sys.argv[1:] or None)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only axpydot,...]
+Prints ``name,value,derived`` CSV lines; exits non-zero on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import axpydot, gemver, lenet, stencil_bench
+    modules = {
+        "axpydot": axpydot,        # paper Table 1
+        "gemver": gemver,          # paper Table 2
+        "lenet": lenet,            # paper Table 3
+        "stencil": stencil_bench,  # paper Fig. 19
+    }
+    only = set(args.only.split(",")) if args.only else set(modules)
+
+    def report(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    failed = []
+    print("name,value,derived")
+    for name, mod in modules.items():
+        if name not in only:
+            continue
+        try:
+            mod.run(report)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Serving driver: batched greedy decoding with a KV cache.
+
+Run: PYTHONPATH=src python examples/serve_lm.py --arch granite-3-2b --tokens 64
+(uses the reduced config on CPU; the full config is exercised by the
+multi-pod dry-run.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.tokens
+    cache = model.init_cache(args.batch, max_seq)
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab,
+                                      (args.batch, args.prompt_len),
+                                      dtype=np.int32))
+
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # prefill token-by-token (chunked prefill is the production path)
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t:t + 1])
+
+    # batched greedy decode
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+
+    seq = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    tps = args.batch * (args.tokens - 1) / dt
+    print(f"arch={args.arch} (reduced) batch={args.batch}")
+    print(f"generated {seq.shape[1]} tokens/seq; throughput {tps:.1f} tok/s "
+          f"(CPU)")
+    print("first sequence:", seq[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

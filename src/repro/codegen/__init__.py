@@ -1,0 +1,3 @@
+from .compiler import BACKENDS, CompiledSDFG, compile_sdfg
+
+__all__ = ["BACKENDS", "CompiledSDFG", "compile_sdfg"]

@@ -1,0 +1,131 @@
+"""Shared codegen utilities: symbolic-expression evaluation against traced
+JAX values, and memlet-driven container reads/writes.
+
+The paper's code generator translates memlets into array indexing / stream
+push-pop; here they become (dynamic-)slice reads and functional ``.at[]``
+writes. Write-conflict resolution (``wcr='add'``) lowers to scatter-add,
+which — unlike the FPGA case — natively tolerates duplicate indices.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.memlet import Memlet, Range, Subset
+from ..core.symbolic import Expr
+
+
+def eval_expr(expr: Expr, env: Dict[str, object]):
+    """Evaluate an Expr where symbols may be bound to python ints or traced
+    jax scalars. Returns int when fully static."""
+    if isinstance(expr, (int, float)):
+        return expr
+    result = None
+    for mono, coeff in expr.terms.items():
+        term = None
+        for name, power in mono:
+            if name not in env:
+                raise KeyError(f"unbound symbol {name!r} in {expr}")
+            v = env[name]
+            for _ in range(power):
+                term = v if term is None else term * v
+        if isinstance(coeff, Fraction) and coeff.denominator == 1:
+            coeff = coeff.numerator
+        if term is None:
+            term = coeff
+        elif coeff != 1:
+            if isinstance(coeff, Fraction):
+                # exact rational scaling of a traced/int value
+                term = term * coeff.numerator
+                term = term // coeff.denominator
+            else:
+                term = coeff * term
+        result = term if result is None else result + term
+    return 0 if result is None else result
+
+
+def _static_int(v) -> bool:
+    return isinstance(v, int)
+
+
+def subset_static_sizes(subset: Subset, env: Dict[str, object]) -> Tuple[int, ...]:
+    """Range sizes must be static (trace-time constants)."""
+    sizes = []
+    for r in subset:
+        size = eval_expr(r.size, {k: v for k, v in env.items() if _static_int(v)})
+        if not _static_int(size):
+            raise ValueError(f"memlet range size must be static, got {size}")
+        sizes.append(size)
+    return tuple(sizes)
+
+
+def read_memlet(value, memlet: Memlet, env: Dict[str, object]):
+    """Read the memlet's subset out of a container value. Index (size-1)
+    dimensions are squeezed, DaCe-style."""
+    if memlet.subset is None:
+        return value
+    subset = memlet.subset
+    sizes = subset_static_sizes(subset, env)
+    starts = [eval_expr(r.start, env) for r in subset]
+    steps = [eval_expr(r.step, env) for r in subset]
+    if any(not _static_int(s) or s != 1 for s in steps):
+        raise NotImplementedError("strided memlet reads not supported")
+    squeeze = tuple(i for i, r in enumerate(subset) if r.is_index())
+    if len(squeeze) == len(subset):
+        return value[tuple(starts)]  # all-index: scalar (gather if traced)
+    if all(_static_int(s) for s in starts):
+        slc = tuple(slice(st, st + sz) for st, sz in zip(starts, sizes))
+        out = value[slc]
+    else:
+        out = jax.lax.dynamic_slice(value, starts, sizes)
+    if squeeze:
+        out = jnp.squeeze(out, axis=squeeze)
+    return out
+
+
+def write_memlet(container_value, memlet: Memlet, new_value,
+                 env: Dict[str, object]):
+    """Functionally write ``new_value`` into the container per the memlet.
+    Returns the updated container value."""
+    wcr = memlet.wcr
+    if memlet.subset is None:
+        if wcr == "add":
+            return container_value + new_value
+        if wcr == "max":
+            return jnp.maximum(container_value, new_value)
+        return jnp.broadcast_to(new_value, jnp.shape(container_value)) \
+            if jnp.shape(new_value) != jnp.shape(container_value) else new_value
+    subset = memlet.subset
+    sizes = subset_static_sizes(subset, env)
+    starts = [eval_expr(r.start, env) for r in subset]
+    all_index = all(r.is_index() for r in subset)
+    if all_index:
+        ref = container_value.at[tuple(starts)]
+        scalar = new_value
+        if hasattr(scalar, "shape") and scalar.shape != ():
+            scalar = jnp.reshape(scalar, ())
+        if wcr == "add":
+            return ref.add(scalar)
+        if wcr == "max":
+            return ref.max(scalar)
+        return ref.set(scalar)
+    new_value = jnp.reshape(new_value, sizes)
+    if all(_static_int(s) for s in starts):
+        slc = tuple(slice(st, st + sz) for st, sz in zip(starts, sizes))
+        ref = container_value.at[slc]
+        if wcr == "add":
+            return ref.add(new_value)
+        if wcr == "max":
+            return ref.max(new_value)
+        return ref.set(new_value)
+    if wcr == "add":
+        cur = jax.lax.dynamic_slice(container_value, starts, sizes)
+        return jax.lax.dynamic_update_slice(container_value, cur + new_value, starts)
+    if wcr == "max":
+        cur = jax.lax.dynamic_slice(container_value, starts, sizes)
+        return jax.lax.dynamic_update_slice(container_value,
+                                            jnp.maximum(cur, new_value), starts)
+    return jax.lax.dynamic_update_slice(container_value, new_value, starts)

@@ -1,0 +1,451 @@
+"""The XLA-auto backend (Intel-OpenCL analogue, DESIGN.md §2).
+
+Lowers a fully-expanded SDFG into a jittable JAX callable by structural
+interpretation: states execute in control-flow order; within a state, the
+dataflow graph is traversed topologically; tasklets call their jax-traceable
+bodies; map scopes lower to vectorized (vmap) code when the scope is a
+single mapped tasklet, to unrolled trace-time loops for UNROLLED/MESH
+schedules, and to sequential trace-time loops otherwise. XLA then fuses and
+pipelines — the 'compiler does the scheduling' vendor.
+
+Write-conflict-resolution memlets lower to scatter-add; streams materialize
+as arrays shaped by their logical element volume (SPSC + matching access
+order — enforced by validation — make this semantics-preserving).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.memlet import Memlet
+from ..core.sdfg import (AccessNode, Array, LibraryNode, MapEntry, MapExit,
+                         NestedSDFG, Scalar, SDFG, State, Stream, Tasklet)
+from ..core.symbolic import Expr
+from .common import eval_expr, read_memlet, write_memlet
+
+# Maps whose scope is not a single tasklet fall back to a trace-time python
+# loop; cap the unrolled trip count so mistakes fail loudly instead of
+# hanging the tracer.
+SEQUENTIAL_TRIP_LIMIT = 4096
+
+
+def container_shape(desc, env: Dict[str, int]):
+    if isinstance(desc, Scalar):
+        return ()
+    if isinstance(desc, Stream):
+        shape = desc.element_shape or ()
+        if desc.shape:  # array-of-streams: outer dims first
+            shape = tuple(desc.shape) + tuple(shape)
+        return tuple(int(eval_expr(s, env)) for s in shape)
+    return tuple(int(eval_expr(s, env)) for s in desc.shape)
+
+
+class StateLowering:
+    def __init__(self, sdfg: SDFG, state: State, env: Dict[str, object],
+                 symenv: Dict[str, object]):
+        self.sdfg = sdfg
+        self.state = state
+        self.env = env          # container name -> jax value
+        self.symenv = symenv    # symbol name -> int (or traced scalar in maps)
+        self.scopes = state.scope_children()
+
+    # ------------------------------------------------------------------
+    def ensure_value(self, name: str):
+        if name in self.env:
+            return self.env[name]
+        if name in self.sdfg.constants:
+            self.env[name] = jnp.asarray(self.sdfg.constants[name])
+            return self.env[name]
+        desc = self.sdfg.arrays[name]
+        shape = container_shape(desc, self._static_syms())
+        self.env[name] = jnp.zeros(shape, dtype=desc.dtype.np_dtype)
+        return self.env[name]
+
+    def _static_syms(self):
+        return {k: v for k, v in self.symenv.items() if isinstance(v, int)}
+
+    # ------------------------------------------------------------------
+    def run(self):
+        """Schedule processing elements (weakly connected components,
+        paper §2.4) in producer->consumer order over shared containers; on
+        FPGA they run concurrently synchronized by FIFOs, here the stream
+        contents materialize between pipeline stages."""
+        import networkx as nx
+        comps = [frozenset(c) for c in
+                 nx.weakly_connected_components(self.state.graph)]
+        if len(comps) <= 1:
+            order = [n for n in self.state.topological_nodes()
+                     if n in self.scopes.get(None, [])]
+            self._run_nodes(order)
+            return
+        writers: Dict[str, set] = {}
+        readers: Dict[str, set] = {}
+        for i, comp in enumerate(comps):
+            for n in comp:
+                if isinstance(n, AccessNode):
+                    if self.state.in_degree(n) > 0:
+                        writers.setdefault(n.data, set()).add(i)
+                    if self.state.out_degree(n) > 0:
+                        readers.setdefault(n.data, set()).add(i)
+        meta = nx.DiGraph()
+        meta.add_nodes_from(range(len(comps)))
+        for name, ws in writers.items():
+            for w in ws:
+                for r in readers.get(name, ()):  # producer before consumer
+                    if r != w:
+                        meta.add_edge(w, r)
+        try:
+            comp_order = list(nx.topological_sort(meta))
+        except nx.NetworkXUnfeasible as exc:
+            raise NotImplementedError(
+                "feedback between processing elements requires bounded-FIFO "
+                "simulation, unsupported in the materializing backend"
+            ) from exc
+        top = set(self.scopes.get(None, []))
+        topo = self.state.topological_nodes()
+        for ci in comp_order:
+            comp = comps[ci]
+            self._run_nodes([n for n in topo if n in comp and n in top])
+
+    def _run_nodes(self, nodes: List):
+        for node in nodes:
+            if isinstance(node, AccessNode):
+                self._run_access(node)
+            elif isinstance(node, Tasklet):
+                self._run_tasklet(node)
+            elif isinstance(node, MapEntry):
+                self._run_map(node)
+            elif isinstance(node, MapExit):
+                pass  # handled with its entry
+            elif isinstance(node, NestedSDFG):
+                self._run_nested(node)
+            elif isinstance(node, LibraryNode):
+                raise RuntimeError(
+                    f"unexpanded library node {node.label!r} at codegen; call "
+                    f"sdfg.expand_library_nodes() first")
+            else:
+                raise NotImplementedError(type(node).__name__)
+
+    # ------------------------------------------------------------------
+    def _run_access(self, node: AccessNode):
+        # direct data->data edges = copies (paper §2.3 host/device copies)
+        self.ensure_value(node.data)
+        for e in self.state.out_edges(node):
+            if isinstance(e.dst, AccessNode):
+                src_val = read_memlet(self.env[node.data], e.memlet, self.symenv)
+                dst_desc = self.sdfg.arrays[e.dst.data]
+                self.ensure_value(e.dst.data)
+                out_memlet = Memlet(data=e.dst.data, subset=None)
+                self.env[e.dst.data] = write_memlet(
+                    self.env[e.dst.data], out_memlet, src_val, self.symenv)
+
+    def _gather_inputs(self, node) -> Dict[str, object]:
+        kwargs = {}
+        for e in self.state.in_edges(node):
+            if e.dst_conn is None or e.memlet.data is None:
+                continue
+            src_name = e.memlet.data
+            self.ensure_value(src_name)
+            kwargs[e.dst_conn] = read_memlet(self.env[src_name], e.memlet,
+                                             self.symenv)
+        return kwargs
+
+    def _scatter_outputs(self, node, result):
+        out_edges = [e for e in self.state.out_edges(node)
+                     if e.src_conn is not None and e.memlet.data is not None]
+        if not isinstance(result, dict):
+            conns = sorted({e.src_conn for e in out_edges})
+            if isinstance(result, tuple):
+                result = dict(zip(getattr(node, "outputs", conns), result))
+            elif len(conns) == 1:
+                # single output connector (possibly forked to several
+                # access nodes — manual replication, paper §4.2)
+                result = {conns[0]: result}
+        for e in out_edges:
+            val = result[e.src_conn]
+            name = e.memlet.data
+            self.ensure_value(name)
+            self.env[name] = write_memlet(self.env[name], e.memlet, val,
+                                          self.symenv)
+
+    def _run_tasklet(self, node: Tasklet):
+        kwargs = self._gather_inputs(node)
+        result = node.fn(**kwargs)
+        self._scatter_outputs(node, result)
+
+    def _run_nested(self, node: NestedSDFG):
+        inner = node.sdfg
+        inner_env: Dict[str, object] = {}
+        conn_to_container = {}
+        for e in self.state.in_edges(node):
+            if e.dst_conn is None:
+                continue
+            self.ensure_value(e.memlet.data)
+            inner_env[e.dst_conn] = read_memlet(
+                self.env[e.memlet.data], e.memlet, self.symenv)
+        inner_syms = dict(inner.symbol_values)
+        for k, v in node.symbol_mapping.items():
+            inner_syms[k] = eval_expr(v, self.symenv)
+        lower_sdfg_body(inner, inner_env, inner_syms)
+        for e in self.state.out_edges(node):
+            if e.src_conn is None:
+                continue
+            self.ensure_value(e.memlet.data)
+            self.env[e.memlet.data] = write_memlet(
+                self.env[e.memlet.data], e.memlet, inner_env[e.src_conn],
+                self.symenv)
+
+    # ------------------------------------------------------------------
+    # Map lowering
+    # ------------------------------------------------------------------
+    def _map_scope_edges(self, entry: MapEntry):
+        exit_ = next(n for n in self.state.nodes
+                     if isinstance(n, MapExit) and n.entry is entry)
+        return exit_
+
+    def _run_map(self, entry: MapEntry):
+        from ..core.dtypes import ScheduleType
+        exit_ = self._map_scope_edges(entry)
+        children = self.scopes.get(entry, [])
+        inner = [n for n in children if not isinstance(n, MapExit)]
+        m = entry.map
+        static = self._static_syms()
+        sizes = [int(eval_expr(r.size, static)) for r in m.ranges]
+        starts = [eval_expr(r.start, static) for r in m.ranges]
+
+        single_tasklet = (len(inner) == 1 and isinstance(inner[0], Tasklet))
+        if m.schedule in (ScheduleType.UNROLLED, ScheduleType.MESH,
+                          ScheduleType.MXU):
+            self._run_map_sequential(entry, exit_, inner, sizes, starts)
+        elif single_tasklet:
+            self._run_map_vmap(entry, exit_, inner[0], sizes, starts)
+        else:
+            total = int(np.prod(sizes)) if sizes else 1
+            if total > SEQUENTIAL_TRIP_LIMIT:
+                raise NotImplementedError(
+                    f"map {m.label!r}: {total} sequential iterations exceeds "
+                    f"trace-time limit; restructure as mapped tasklet")
+            self._run_map_sequential(entry, exit_, inner, sizes, starts)
+
+    def _run_map_sequential(self, entry, exit_, inner, sizes, starts):
+        """Trace-time loop (paper: unrolled map = replicated hardware)."""
+        m = entry.map
+        idx = [0] * len(sizes)
+
+        def rec(d):
+            if d == len(sizes):
+                self._exec_scope_once(entry, exit_, inner)
+                return
+            for i in range(sizes[d]):
+                self.symenv[m.params[d]] = starts[d] + i
+                rec(d + 1)
+            del self.symenv[m.params[d]]
+
+        rec(0)
+
+    def _exec_scope_once(self, entry, exit_, inner):
+        """Execute scope contents with params bound in symenv. Edges through
+        entry/exit apply their memlets against the enclosing env."""
+        order = [n for n in self.state.topological_nodes() if n in inner]
+        for node in order:
+            if isinstance(node, Tasklet):
+                kwargs = {}
+                for e in self.state.in_edges(node):
+                    if e.dst_conn is None or e.memlet.data is None:
+                        continue
+                    self.ensure_value(e.memlet.data)
+                    kwargs[e.dst_conn] = read_memlet(
+                        self.env[e.memlet.data], e.memlet, self.symenv)
+                result = node.fn(**kwargs)
+                out_edges = [e for e in self.state.out_edges(node)
+                             if e.memlet.data is not None]
+                if len(out_edges) == 1 and not isinstance(result, dict):
+                    result = {out_edges[0].src_conn: result}
+                for e in out_edges:
+                    name = e.memlet.data
+                    self.ensure_value(name)
+                    self.env[name] = write_memlet(
+                        self.env[name], e.memlet, result[e.src_conn],
+                        self.symenv)
+            elif isinstance(node, MapEntry):
+                self._run_map(node)
+            elif isinstance(node, MapExit):
+                pass
+            elif isinstance(node, AccessNode):
+                self._run_access(node)
+            elif isinstance(node, NestedSDFG):
+                self._run_nested(node)
+            else:
+                raise NotImplementedError(type(node).__name__)
+
+    def _run_map_vmap(self, entry, exit_, tasklet: Tasklet, sizes, starts):
+        """Vectorized lowering of the canonical mapped-tasklet pattern."""
+        m = entry.map
+        in_edges = [e for e in self.state.in_edges(tasklet)
+                    if e.memlet.data is not None]
+        out_edges = [e for e in self.state.out_edges(tasklet)
+                     if e.memlet.data is not None]
+        for e in in_edges:
+            self.ensure_value(e.memlet.data)
+
+        captured = {e.dst_conn: self.env[e.memlet.data] for e in in_edges}
+        base_env = dict(self.symenv)
+
+        def body(*param_vals):
+            local = dict(base_env)
+            local.update(dict(zip(m.params, param_vals)))
+            kwargs = {}
+            for e in in_edges:
+                kwargs[e.dst_conn] = read_memlet(captured[e.dst_conn],
+                                                 e.memlet, local)
+            result = tasklet.fn(**kwargs)
+            if not isinstance(result, dict):
+                if len(out_edges) == 1:
+                    result = {out_edges[0].src_conn: result}
+                else:
+                    result = dict(zip(tasklet.outputs, result))
+            return tuple(result[e.src_conn] for e in out_edges)
+
+        if sizes:
+            grids = jnp.meshgrid(*[jnp.arange(s) + st for s, st in
+                                   zip(sizes, starts)], indexing="ij")
+            flat = [g.reshape(-1) for g in grids]
+            outs = jax.vmap(body)(*flat)
+            stacked = tuple(o.reshape(tuple(sizes) + o.shape[1:])
+                            for o in outs)
+        else:
+            stacked = body()
+
+        static = self._static_syms()
+        for e, val in zip(out_edges, stacked):
+            name = e.memlet.data
+            self.ensure_value(name)
+            subset = e.memlet.subset
+            if subset is None:
+                # whole-container write from a mapped tasklet => reduction
+                if e.memlet.wcr == "add":
+                    self.env[name] = self.env[name] + jnp.sum(
+                        val, axis=tuple(range(len(sizes))))
+                else:
+                    self.env[name] = val
+                continue
+            # which params appear in each subset dim?
+            used_params = set()
+            for r in subset:
+                used_params |= (r.start.free_symbols & set(m.params))
+            unused_axes = tuple(i for i, p in enumerate(m.params)
+                                if p not in used_params)
+            if e.memlet.wcr == "add" and unused_axes:
+                val = jnp.sum(val, axis=unused_axes)
+                kept = [i for i in range(len(m.params)) if i not in unused_axes]
+            else:
+                kept = list(range(len(m.params)))
+            if not used_params:
+                # scalar target
+                out_memlet = e.memlet
+                self.env[name] = write_memlet(self.env[name], out_memlet, val,
+                                              static)
+                continue
+            # build index arrays per dim over the kept param grid
+            kept_grids = jnp.meshgrid(
+                *[jnp.arange(sizes[i]) + starts[i] for i in kept],
+                indexing="ij")
+            kept_env = dict(static)
+            kept_env.update({m.params[i]: g for i, g in zip(kept, kept_grids)})
+            idx_arrays = []
+            is_slice = False
+            for r in subset:
+                if not r.is_index():
+                    is_slice = True
+                    break
+                idx_arrays.append(eval_expr(r.start, kept_env))
+            if is_slice:
+                # slice writes: fall back to sequential semantics
+                raise NotImplementedError(
+                    f"vectorized slice-write for map {m.label!r}; use "
+                    f"sequential schedule")
+            idx_arrays = [jnp.asarray(ia) if not hasattr(ia, "shape")
+                          else ia for ia in idx_arrays]
+            idx_arrays = jnp.broadcast_arrays(*idx_arrays) \
+                if len(idx_arrays) > 1 else idx_arrays
+            ref = self.env[name].at[tuple(idx_arrays)]
+            if e.memlet.wcr == "add":
+                self.env[name] = ref.add(val)
+            elif e.memlet.wcr == "max":
+                self.env[name] = ref.max(val)
+            else:
+                self.env[name] = ref.set(val)
+
+
+# ---------------------------------------------------------------------------
+def lower_sdfg_body(sdfg: SDFG, env: Dict[str, object],
+                    symenv: Dict[str, object]):
+    """Execute states in control-flow order against ``env`` in place."""
+    order = sdfg.state_order()
+    visited_guard = 0
+    current = sdfg.start_state if sdfg.start_state is not None else (
+        order[0] if order else None)
+    done = set()
+    while current is not None:
+        StateLowering(sdfg, current, env, symenv).run()
+        done.add(current)
+        succs = list(sdfg.cfg.successors(current))
+        nxt = None
+        for s in succs:
+            edge = sdfg.cfg.edges[current, s]["edge"]
+            if edge.condition is None or edge.condition(symenv):
+                for k, fn in edge.assignments.items():
+                    symenv[k] = fn(symenv)
+                nxt = s
+                break
+        visited_guard += 1
+        if visited_guard > 10_000:
+            raise RuntimeError("control-flow did not terminate")
+        current = nxt
+
+
+def classify_arguments(sdfg: SDFG):
+    """inputs = non-transients read before first write (in program order);
+    outputs = non-transients written anywhere. A container can be both
+    (in/out parameters, DaCe-style)."""
+    written, read_first = set(), set()
+    for st in sdfg.state_order() or sdfg.states:
+        for node in st.topological_nodes():
+            if not isinstance(node, AccessNode):
+                continue
+            desc = sdfg.arrays[node.data]
+            if desc.transient:
+                continue
+            # a node that both writes and reads (in-out) produces before
+            # consuming: count the write first
+            if st.in_degree(node) > 0:
+                written.add(node.data)
+            if st.out_degree(node) > 0 and node.data not in written:
+                read_first.add(node.data)
+    inputs = [n for n in sdfg.argument_names() if n in read_first]
+    outputs = sorted(written)
+    return inputs, outputs
+
+
+def build_callable(sdfg: SDFG):
+    """Build fn(**arrays) -> dict of written non-transient containers."""
+    inputs, written = classify_arguments(sdfg)
+
+    def fn(**kwargs):
+        env: Dict[str, object] = {}
+        for name in inputs:
+            if name not in kwargs:
+                raise TypeError(f"missing SDFG argument {name!r}")
+        for name, v in kwargs.items():
+            env[name] = jnp.asarray(v)
+        for name, v in sdfg.constants.items():
+            env[name] = jnp.asarray(v)
+        symenv = dict(sdfg.symbol_values)
+        lower_sdfg_body(sdfg, env, symenv)
+        return {k: env[k] for k in sorted(written)}
+
+    fn.__name__ = f"sdfg_{sdfg.name}"
+    return fn

@@ -1,0 +1,26 @@
+"""repro.core — the paper's primary contribution, adapted to TPU/JAX.
+
+Data-centric IR (SDFG): states of pure dataflow, memlet-annotated edges,
+maps for parametric parallelism, streams for pipeline composition, and
+multi-level Library Nodes (paper §3) expanded toward platform-specialized
+implementations (XLA-auto vs Pallas-explicit backends).
+"""
+from .dtypes import (DType, ScheduleType, StorageType, TPU_LANES, TPU_SUBLANES,
+                     MXU_DIM, bfloat16, float32, float64, int32)
+from .memlet import Memlet, Range, Subset
+from .sdfg import (AccessNode, Array, Data, DataflowEdge, InterstateEdge,
+                   LibraryNode, Map, MapEntry, MapExit, NestedSDFG, Node,
+                   Scalar, SDFG, State, Stream, Tasklet)
+from .symbolic import Expr, evaluate, prod, simplify, sym
+from .validation import ValidationError, validate_sdfg
+
+__all__ = [
+    "DType", "ScheduleType", "StorageType", "TPU_LANES", "TPU_SUBLANES",
+    "MXU_DIM", "bfloat16", "float32", "float64", "int32",
+    "Memlet", "Range", "Subset",
+    "AccessNode", "Array", "Data", "DataflowEdge", "InterstateEdge",
+    "LibraryNode", "Map", "MapEntry", "MapExit", "NestedSDFG", "Node",
+    "Scalar", "SDFG", "State", "Stream", "Tasklet",
+    "Expr", "evaluate", "prod", "simplify", "sym",
+    "ValidationError", "validate_sdfg",
+]

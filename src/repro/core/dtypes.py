@@ -1,0 +1,105 @@
+"""Storage, schedule, and container metadata for the TPU-adapted SDFG.
+
+The paper's FPGA storage lattice (DDR/HBM off-chip, BRAM/M20K/LUTRAM/URAM
+on-chip, registers, shift registers) maps onto the TPU memory hierarchy:
+
+    HOST   -- host DRAM, outside the device                (paper: host)
+    HBM    -- device off-chip memory                        (paper: global)
+    VMEM   -- on-chip vector memory, ~128 MiB/core on v5e   (paper: local/BRAM)
+    REG    -- vector registers, fully parallel access       (paper: registers)
+
+Shift registers (paper §3.3.2) have no TPU primitive; the stencil Library
+Node expands to explicit sliding-window VMEM buffers instead (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import enum
+
+import numpy as np
+
+
+class StorageType(enum.Enum):
+    DEFAULT = "default"   # resolved by context (transient inside kernels -> VMEM)
+    HOST = "host"
+    HBM = "hbm"
+    VMEM = "vmem"
+    REG = "reg"
+
+    @property
+    def on_device(self) -> bool:
+        return self in (StorageType.HBM, StorageType.VMEM, StorageType.REG)
+
+    @property
+    def off_chip(self) -> bool:
+        """Counts toward the paper's 'off-chip volume' metric."""
+        return self is StorageType.HBM
+
+
+class ScheduleType(enum.Enum):
+    """Map schedules (paper §2.2)."""
+    PIPELINED = "pipelined"   # sequential grid, pipeline parallelism (default)
+    UNROLLED = "unrolled"     # parametric hardware replication (systolic / SIMD)
+    MXU = "mxu"               # unrolled onto the 128x128 systolic MXU
+    MESH = "mesh"             # unrolled across chips (shard_map axis)
+
+
+class DType:
+    """Thin dtype wrapper with byte size, bridging numpy and jax."""
+
+    __slots__ = ("np_dtype",)
+
+    _CANON = {
+        "float32": np.float32, "float64": np.float64, "float16": np.float16,
+        "bfloat16": None,  # filled lazily to avoid importing jax here
+        "int32": np.int32, "int64": np.int64, "int8": np.int8,
+        "uint8": np.uint8, "bool": np.bool_,
+    }
+
+    def __init__(self, name_or_dtype):
+        if isinstance(name_or_dtype, DType):
+            self.np_dtype = name_or_dtype.np_dtype
+            return
+        if isinstance(name_or_dtype, str):
+            if name_or_dtype == "bfloat16":
+                import ml_dtypes  # shipped with jax
+                self.np_dtype = np.dtype(ml_dtypes.bfloat16)
+            else:
+                self.np_dtype = np.dtype(self._CANON[name_or_dtype])
+        else:
+            self.np_dtype = np.dtype(name_or_dtype)
+
+    @property
+    def bytes(self) -> int:
+        return self.np_dtype.itemsize
+
+    @property
+    def name(self) -> str:
+        return self.np_dtype.name
+
+    def __eq__(self, other):
+        if isinstance(other, (str, np.dtype, type)):
+            try:
+                other = DType(other)
+            except Exception:
+                return NotImplemented
+        if isinstance(other, DType):
+            return self.np_dtype == other.np_dtype
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(self.np_dtype)
+
+    def __repr__(self):
+        return f"DType({self.name})"
+
+
+float32 = DType("float32")
+float64 = DType("float64")
+bfloat16 = DType("bfloat16")
+int32 = DType("int32")
+
+# TPU v5e hardware constants used for vector-width legality checks
+# (Vectorization transform) and roofline math.
+TPU_LANES = 128          # minor-dim vector width
+TPU_SUBLANES = 8         # second-minor width for fp32
+MXU_DIM = 128            # systolic array edge

@@ -1,0 +1,120 @@
+"""Memlets: data-movement annotations on dataflow edges (paper Fig. 2/7).
+
+A memlet names the data container being moved, the subset being accessed
+(symbolic ranges, possibly referencing map parameters), the total data
+volume moved over the lifetime of the scope (e.g. ``K*M*N/P`` in Fig. 7),
+and an optional write-conflict resolution (``wcr``) for accumulation.
+
+The *access order* of a memlet — its index expressions with map parameters
+canonicalized to positional indices — is what StreamingComposition compares
+to decide whether a producer and consumer can be fused through a stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+from .symbolic import Expr, ExprLike, prod
+
+
+@dataclass(frozen=True)
+class Range:
+    """Half-open symbolic range [start, stop) with step."""
+    start: Expr
+    stop: Expr
+    step: Expr
+
+    @staticmethod
+    def make(start: ExprLike, stop: ExprLike, step: ExprLike = 1) -> "Range":
+        return Range(Expr.wrap(start), Expr.wrap(stop), Expr.wrap(step))
+
+    @staticmethod
+    def index(i: ExprLike) -> "Range":
+        e = Expr.wrap(i)
+        return Range(e, e + 1, Expr.const(1))
+
+    @property
+    def size(self) -> Expr:
+        return (self.stop - self.start) / self.step
+
+    def is_index(self) -> bool:
+        return self.size == Expr.const(1)
+
+    def subs(self, env) -> "Range":
+        return Range(self.start.subs(env), self.stop.subs(env), self.step.subs(env))
+
+    def __repr__(self):
+        if self.is_index():
+            return f"[{self.start}]"
+        s = f"[{self.start}:{self.stop}"
+        if self.step != Expr.const(1):
+            s += f":{self.step}"
+        return s + "]"
+
+
+class Subset(tuple):
+    """Tuple of Ranges, one per container dimension."""
+
+    def __new__(cls, ranges: Sequence[Range]):
+        return super().__new__(cls, tuple(ranges))
+
+    @staticmethod
+    def full(shape: Sequence[ExprLike]) -> "Subset":
+        return Subset([Range.make(0, s) for s in shape])
+
+    @staticmethod
+    def indices(idx: Sequence[ExprLike]) -> "Subset":
+        return Subset([Range.index(i) for i in idx])
+
+    @property
+    def num_elements(self) -> Expr:
+        return prod(r.size for r in self)
+
+    def subs(self, env) -> "Subset":
+        return Subset([r.subs(env) for r in self])
+
+    def __repr__(self):
+        return "".join(repr(r) for r in self)
+
+
+@dataclass
+class Memlet:
+    """Data movement annotation: container + subset + volume (+ wcr)."""
+    data: str
+    subset: Optional[Subset] = None       # None = whole container
+    volume: Optional[Expr] = None         # None = subset.num_elements (once)
+    wcr: Optional[str] = None             # e.g. "add" for accumulation writes
+    dynamic: bool = False                 # data-dependent volume
+
+    @staticmethod
+    def simple(data: str, subset: Optional[Subset] = None,
+               volume: ExprLike = None, wcr: str = None) -> "Memlet":
+        v = Expr.wrap(volume) if volume is not None else None
+        return Memlet(data=data, subset=subset, volume=v, wcr=wcr)
+
+    def volume_or_subset(self) -> Optional[Expr]:
+        if self.volume is not None:
+            return self.volume
+        if self.subset is not None:
+            return self.subset.num_elements
+        return None
+
+    def access_order(self, param_names: Sequence[str]) -> Tuple:
+        """Canonical access-order key: index expressions with map params
+        remapped to positional placeholders (paper §3.2.3). Two memlets with
+        equal keys iterate their containers in the same order."""
+        if self.subset is None:
+            return ("FULL", self.data and None)
+        env = {p: Expr.sym(f"__i{k}") for k, p in enumerate(param_names)}
+        return tuple(
+            (r.start.subs(env), r.stop.subs(env), r.step.subs(env))
+            for r in self.subset
+        )
+
+    def __repr__(self):
+        s = f"Memlet({self.data}{self.subset if self.subset is not None else ''}"
+        if self.volume is not None:
+            s += f", vol={self.volume}"
+        if self.wcr:
+            s += f", wcr={self.wcr}"
+        return s + ")"

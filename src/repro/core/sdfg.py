@@ -1,0 +1,583 @@
+"""Stateful DataFlow multiGraph (SDFG) IR, adapted for TPU code generation.
+
+Faithful to the paper's Fig.-2 glossary:
+
+  * ``SDFG``        -- control-flow graph of states (+ containers, symbols)
+  * ``State``       -- pure-dataflow multigraph
+  * ``AccessNode``  -- data container access (Array solid / Stream dashed)
+  * ``Tasklet``     -- fine-grained computation; may only touch data that is
+                       explicitly passed via dataflow edges
+  * ``MapEntry/MapExit`` -- parametric parallelism scope (pipelined/unrolled)
+  * ``LibraryNode`` -- abstract behavior ("what"), expanded into parametric
+                       subgraphs ("how") at multiple levels (paper §3)
+  * ``NestedSDFG``  -- control flow embedded in dataflow
+  * edges carry ``Memlet`` annotations capturing *all* data movement
+
+Weakly connected components of a state are independently-schedulable
+*processing elements* (paper §2.4); on TPU these become fused-kernel stages
+pipelined over grid steps (DESIGN.md §2).
+
+The IR also implements the paper's headline analysis: **off-chip data
+volume**, computed by summing memlet volumes incident to HBM containers.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import networkx as nx
+import numpy as np
+
+from .dtypes import DType, ScheduleType, StorageType
+from .memlet import Memlet, Range, Subset
+from .symbolic import Expr, ExprLike, prod
+
+# ---------------------------------------------------------------------------
+# Data descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Data:
+    dtype: DType
+    storage: StorageType = StorageType.DEFAULT
+    transient: bool = False
+
+    @property
+    def is_stream(self) -> bool:
+        return isinstance(self, Stream)
+
+
+@dataclass
+class Array(Data):
+    shape: Tuple[Expr, ...] = ()
+    vector_width: int = 1  # set by the Vectorization transformation
+
+    @property
+    def num_elements(self) -> Expr:
+        return prod(self.shape) if self.shape else Expr.const(1)
+
+    def bytes(self, env: Dict[str, int]) -> int:
+        return self.num_elements.evaluate(env) * self.dtype.bytes
+
+
+@dataclass
+class Scalar(Data):
+    @property
+    def shape(self):
+        return ()
+
+    @property
+    def num_elements(self) -> Expr:
+        return Expr.const(1)
+
+
+@dataclass
+class Stream(Data):
+    """Bounded FIFO (paper §2.5): single-producer, single-consumer on FPGA;
+    on TPU, a VMEM-resident block exchanged between fused pipeline stages.
+    ``shape`` models arrays-of-streams (e.g. systolic pipes A_pipe[P+1])."""
+    buffer_size: int = 1
+    shape: Tuple[Expr, ...] = ()          # array-of-streams dims
+    element_shape: Tuple[Expr, ...] = ()  # logical stream payload per push
+    total_volume: Optional[Expr] = None   # total elements pushed (for codegen)
+
+    @property
+    def num_elements(self) -> Expr:
+        return prod(self.shape) if self.shape else Expr.const(1)
+
+
+# ---------------------------------------------------------------------------
+# Graph nodes
+# ---------------------------------------------------------------------------
+
+_node_counter = itertools.count()
+
+
+class Node:
+    def __init__(self, label: str = ""):
+        self.uid = next(_node_counter)
+        self.label = label or f"{type(self).__name__.lower()}_{self.uid}"
+
+    def __repr__(self):
+        return f"{type(self).__name__}({self.label})"
+
+    def __hash__(self):
+        return self.uid
+
+    def __eq__(self, other):
+        return self is other
+
+
+class AccessNode(Node):
+    def __init__(self, data: str):
+        super().__init__(data)
+        self.data = data
+
+
+class Tasklet(Node):
+    """Computation node. ``fn`` is a jax-traceable callable mapping the
+    input-connector values (kwargs) to a dict/tuple of output-connector
+    values. This is the TPU analogue of the paper's C++ tasklet body."""
+
+    def __init__(self, name: str, inputs: Sequence[str], outputs: Sequence[str],
+                 fn: Callable, side_effect_free: bool = True):
+        super().__init__(name)
+        self.inputs = list(inputs)
+        self.outputs = list(outputs)
+        self.fn = fn
+        self.side_effect_free = side_effect_free
+
+
+@dataclass
+class Map:
+    params: List[str]
+    ranges: List[Range]
+    schedule: ScheduleType = ScheduleType.PIPELINED
+    label: str = "map"
+    # Unroll/vector hints set by Vectorization / expansions:
+    vector_width: int = 1
+
+
+class MapEntry(Node):
+    def __init__(self, map_: Map):
+        super().__init__(map_.label + "_entry")
+        self.map = map_
+
+
+class MapExit(Node):
+    def __init__(self, map_: Map, entry: MapEntry):
+        super().__init__(map_.label + "_exit")
+        self.map = map_
+        self.entry = entry
+
+
+class NestedSDFG(Node):
+    def __init__(self, label: str, sdfg: "SDFG", inputs: Sequence[str],
+                 outputs: Sequence[str], symbol_mapping: Dict[str, ExprLike] = None):
+        super().__init__(label)
+        self.sdfg = sdfg
+        self.inputs = list(inputs)
+        self.outputs = list(outputs)
+        self.symbol_mapping = {k: Expr.wrap(v) for k, v in (symbol_mapping or {}).items()}
+
+
+class LibraryNode(Node):
+    """Abstract-behavior node (paper §3). Subclasses register named
+    expansions at decreasing abstraction levels; ``expand`` rewrites the
+    node in-place into the chosen implementation subgraph."""
+
+    #: name -> callable(node, sdfg, state) -> None (mutates graph)
+    expansions: Dict[str, Callable] = {}
+    default_expansion: str = "xla"
+
+    def __init__(self, name: str, inputs: Sequence[str], outputs: Sequence[str]):
+        super().__init__(name)
+        self.inputs = list(inputs)
+        self.outputs = list(outputs)
+
+    # -- context inspection helpers (paper: "Library Nodes can inspect
+    #    their context using the surrounding memlets and nodes") ----------
+    def in_edges(self, state: "State"):
+        return state.in_edges(self)
+
+    def out_edges(self, state: "State"):
+        return state.out_edges(self)
+
+    def input_desc(self, state: "State", conn: str) -> Data:
+        for e in state.in_edges(self):
+            if e.dst_conn == conn:
+                return state.sdfg.arrays[e.memlet.data]
+        raise KeyError(conn)
+
+    def output_desc(self, state: "State", conn: str) -> Data:
+        for e in state.out_edges(self):
+            if e.src_conn == conn:
+                return state.sdfg.arrays[e.memlet.data]
+        raise KeyError(conn)
+
+    def expand(self, sdfg: "SDFG", state: "State", level: Optional[str] = None) -> str:
+        level = level or self.pick_expansion(sdfg, state)
+        impl = self.expansions[level]
+        impl(self, sdfg, state)
+        return level
+
+    def pick_expansion(self, sdfg: "SDFG", state: "State") -> str:
+        pref = sdfg.expansion_preference
+        for name in pref:
+            if name in self.expansions:
+                return name
+        return self.default_expansion
+
+
+# ---------------------------------------------------------------------------
+# Edges
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DataflowEdge:
+    src: Node
+    src_conn: Optional[str]
+    dst: Node
+    dst_conn: Optional[str]
+    memlet: Memlet
+    key: int = 0  # multigraph key
+
+
+@dataclass
+class InterstateEdge:
+    condition: Optional[Callable[[Dict[str, int]], bool]] = None
+    assignments: Dict[str, Callable[[Dict[str, int]], int]] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# State: pure dataflow multigraph
+# ---------------------------------------------------------------------------
+
+
+class State:
+    def __init__(self, label: str, sdfg: "SDFG"):
+        self.label = label
+        self.sdfg = sdfg
+        self.graph = nx.MultiDiGraph()
+
+    # -- construction ---------------------------------------------------
+    def add_node(self, node: Node) -> Node:
+        self.graph.add_node(node)
+        return node
+
+    def add_access(self, data: str) -> AccessNode:
+        return self.add_node(AccessNode(data))
+
+    def add_tasklet(self, name: str, inputs: Sequence[str], outputs: Sequence[str],
+                    fn: Callable) -> Tasklet:
+        return self.add_node(Tasklet(name, inputs, outputs, fn))
+
+    def add_map(self, label: str, params: Dict[str, Tuple[ExprLike, ExprLike]],
+                schedule: ScheduleType = ScheduleType.PIPELINED) -> Tuple[MapEntry, MapExit]:
+        m = Map(
+            params=list(params.keys()),
+            ranges=[Range.make(lo, hi) for lo, hi in params.values()],
+            schedule=schedule, label=label,
+        )
+        entry = MapEntry(m)
+        exit_ = MapExit(m, entry)
+        self.add_node(entry)
+        self.add_node(exit_)
+        return entry, exit_
+
+    def add_edge(self, src: Node, src_conn: Optional[str], dst: Node,
+                 dst_conn: Optional[str], memlet: Memlet) -> DataflowEdge:
+        key = self.graph.add_edge(src, dst)
+        e = DataflowEdge(src, src_conn, dst, dst_conn, memlet, key)
+        self.graph.edges[src, dst, key]["edge"] = e
+        return e
+
+    def add_nested_sdfg(self, sdfg: "SDFG", inputs, outputs, symbol_mapping=None,
+                        label: str = "nested") -> NestedSDFG:
+        n = NestedSDFG(label, sdfg, inputs, outputs, symbol_mapping)
+        sdfg.parent = self.sdfg
+        return self.add_node(n)
+
+    def add_mapped_tasklet(self, name: str, params: Dict[str, Tuple[ExprLike, ExprLike]],
+                           inputs: Dict[str, Memlet], outputs: Dict[str, Memlet],
+                           fn: Callable,
+                           schedule: ScheduleType = ScheduleType.PIPELINED,
+                           input_nodes: Dict[str, AccessNode] = None,
+                           output_nodes: Dict[str, AccessNode] = None):
+        """Convenience: access -> map entry -> tasklet -> map exit -> access."""
+        entry, exit_ = self.add_map(name, params, schedule)
+        t = self.add_tasklet(name, list(inputs.keys()), list(outputs.keys()), fn)
+        input_nodes = input_nodes or {}
+        output_nodes = output_nodes or {}
+        if not inputs:
+            self.add_edge(entry, None, t, None, Memlet(data=None))
+        for conn, memlet in inputs.items():
+            an = input_nodes.get(memlet.data) or self.add_access(memlet.data)
+            self.add_edge(an, None, entry, f"IN_{memlet.data}",
+                          Memlet.simple(memlet.data))
+            self.add_edge(entry, f"OUT_{memlet.data}", t, conn, memlet)
+        for conn, memlet in outputs.items():
+            an = output_nodes.get(memlet.data) or self.add_access(memlet.data)
+            self.add_edge(t, conn, exit_, f"IN_{memlet.data}", memlet)
+            self.add_edge(exit_, f"OUT_{memlet.data}", an, None,
+                          Memlet.simple(memlet.data, wcr=memlet.wcr))
+        return t, entry, exit_
+
+    def remove_node(self, node: Node):
+        self.graph.remove_node(node)
+
+    def remove_edge(self, e: DataflowEdge):
+        self.graph.remove_edge(e.src, e.dst, e.key)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def nodes(self) -> List[Node]:
+        return list(self.graph.nodes)
+
+    @property
+    def edges(self) -> List[DataflowEdge]:
+        return [d["edge"] for _, _, d in self.graph.edges(data=True)]
+
+    def in_edges(self, node: Node) -> List[DataflowEdge]:
+        return [d["edge"] for _, _, d in self.graph.in_edges(node, data=True)]
+
+    def out_edges(self, node: Node) -> List[DataflowEdge]:
+        return [d["edge"] for _, _, d in self.graph.out_edges(node, data=True)]
+
+    def in_degree(self, node: Node) -> int:
+        return self.graph.in_degree(node)
+
+    def out_degree(self, node: Node) -> int:
+        return self.graph.out_degree(node)
+
+    def topological_nodes(self) -> List[Node]:
+        return list(nx.topological_sort(self.graph))
+
+    def data_nodes(self) -> List[AccessNode]:
+        return [n for n in self.graph.nodes if isinstance(n, AccessNode)]
+
+    def library_nodes(self) -> List[LibraryNode]:
+        out = [n for n in self.graph.nodes if isinstance(n, LibraryNode)]
+        for n in self.graph.nodes:
+            if isinstance(n, NestedSDFG):
+                for st in n.sdfg.states:
+                    out.extend(st.library_nodes())
+        return out
+
+    # -- scopes -------------------------------------------------------------
+    def scope_children(self) -> Dict[Optional[MapEntry], List[Node]]:
+        """Map from scope (None = top level) to directly-contained nodes."""
+        result: Dict[Optional[MapEntry], List[Node]] = {None: []}
+        scope_of: Dict[Node, Optional[MapEntry]] = {}
+        for node in self.topological_nodes():
+            preds = [e.src for e in self.in_edges(node)]
+            entry_preds = [p for p in preds if isinstance(p, MapEntry)]
+            if not preds:
+                scope = None
+            elif entry_preds:
+                scope = entry_preds[0]
+            else:
+                p = preds[0]
+                if isinstance(p, MapExit):
+                    scope = scope_of.get(p.entry, None)
+                else:
+                    scope = scope_of.get(p, None)
+            # MapExit closes its own scope:
+            if isinstance(node, MapExit):
+                scope = scope_of.get(node.entry, None)
+            scope_of[node] = scope
+            result.setdefault(scope, []).append(node)
+            if isinstance(node, MapEntry):
+                result.setdefault(node, [])
+        return result
+
+    # -- processing elements (paper §2.4) ------------------------------------
+    def processing_elements(self) -> List[List[Node]]:
+        """Weakly connected components = independently scheduled PEs.
+        Components that only synchronize through a shared stream container
+        still count as separate PEs (paper: they synchronize by push/pop)."""
+        comps = list(nx.weakly_connected_components(self.graph))
+        return [list(c) for c in comps]
+
+    # -- the paper's headline metric ------------------------------------------
+    def off_chip_volume(self, env: Optional[Dict[str, int]] = None,
+                        symbolic: bool = False):
+        """Total bytes moved to/from HBM in this state, from memlet
+        annotations (paper Tables 1-3 'Off-Chip Volume' column)."""
+        env = env or {}
+        total = Expr.const(0)
+        for e in self.edges:
+            for node in (e.src, e.dst):
+                if isinstance(node, AccessNode):
+                    if node.data in self.sdfg.constants:
+                        continue  # InputToConstant: folded into the program
+                    desc = self.sdfg.arrays[node.data]
+                    if desc.storage.off_chip and not isinstance(desc, Stream):
+                        vol = e.memlet.volume_or_subset()
+                        if vol is None:
+                            vol = desc.num_elements
+                        total = total + vol * desc.dtype.bytes
+                        break  # count each edge once even if both ends are HBM
+        if symbolic:
+            return total
+        full_env = dict(self.sdfg.symbol_values)
+        full_env.update(env)
+        return total.evaluate(full_env)
+
+    def __repr__(self):
+        return f"State({self.label}, {len(self.nodes)} nodes)"
+
+
+# ---------------------------------------------------------------------------
+# SDFG
+# ---------------------------------------------------------------------------
+
+
+class SDFG:
+    def __init__(self, name: str):
+        self.name = name
+        self.arrays: Dict[str, Data] = {}
+        self.symbols: Dict[str, DType] = {}
+        self.symbol_values: Dict[str, int] = {}   # defaults / specialization
+        self.constants: Dict[str, np.ndarray] = {}  # InputToConstant results
+        self.states: List[State] = []
+        self.cfg = nx.DiGraph()
+        self.start_state: Optional[State] = None
+        self.parent: Optional[SDFG] = None
+        #: ordered expansion preference used by LibraryNode.pick_expansion,
+        #: e.g. ("pallas", "xla", "generic") for the explicit backend.
+        self.expansion_preference: Tuple[str, ...] = ("xla", "generic")
+        #: free-form annotations (transformation history, vector width, ...)
+        self.metadata: Dict[str, Any] = {"transformation_history": []}
+
+    # -- containers -----------------------------------------------------
+    def _add(self, name: str, desc: Data, allow_exists=False) -> str:
+        if name in self.arrays and not allow_exists:
+            raise ValueError(f"container {name!r} already exists")
+        self.arrays[name] = desc
+        return name
+
+    def add_array(self, name: str, shape: Sequence[ExprLike], dtype,
+                  storage: StorageType = StorageType.DEFAULT,
+                  transient: bool = False) -> str:
+        shp = tuple(Expr.wrap(s) for s in shape)
+        for s in shp:
+            for sname in s.free_symbols:
+                self.symbols.setdefault(sname, DType("int64"))
+        return self._add(name, Array(dtype=DType(dtype), storage=storage,
+                                     transient=transient, shape=shp))
+
+    def add_transient(self, name: str, shape, dtype,
+                      storage: StorageType = StorageType.DEFAULT) -> str:
+        return self.add_array(name, shape, dtype, storage, transient=True)
+
+    def add_scalar(self, name: str, dtype, storage=StorageType.DEFAULT,
+                   transient=False) -> str:
+        return self._add(name, Scalar(dtype=DType(dtype), storage=storage,
+                                      transient=transient))
+
+    def add_stream(self, name: str, dtype, buffer_size: int = 4,
+                   shape: Sequence[ExprLike] = (),
+                   element_shape: Sequence[ExprLike] = (),
+                   total_volume: ExprLike = None,
+                   storage: StorageType = StorageType.VMEM) -> str:
+        return self._add(name, Stream(
+            dtype=DType(dtype), storage=storage, transient=True,
+            buffer_size=buffer_size,
+            shape=tuple(Expr.wrap(s) for s in shape),
+            element_shape=tuple(Expr.wrap(s) for s in element_shape),
+            total_volume=Expr.wrap(total_volume) if total_volume is not None else None))
+
+    # -- states ----------------------------------------------------------
+    def add_state(self, label: str, is_start: bool = False) -> State:
+        st = State(label, self)
+        self.states.append(st)
+        self.cfg.add_node(st)
+        if is_start or self.start_state is None:
+            self.start_state = st
+        return st
+
+    def add_state_after(self, prev: State, label: str) -> State:
+        st = self.add_state(label)
+        self.add_interstate_edge(prev, st)
+        return st
+
+    def add_state_before(self, nxt: State, label: str) -> State:
+        st = self.add_state(label)
+        # redirect incoming edges of nxt
+        for pred in list(self.cfg.predecessors(nxt)):
+            data = self.cfg.edges[pred, nxt]["edge"]
+            self.cfg.remove_edge(pred, nxt)
+            self.cfg.add_edge(pred, st, edge=data)
+        self.add_interstate_edge(st, nxt)
+        if self.start_state is nxt:
+            self.start_state = st
+        return st
+
+    def add_interstate_edge(self, src: State, dst: State,
+                            edge: InterstateEdge = None):
+        self.cfg.add_edge(src, dst, edge=edge or InterstateEdge())
+
+    def state_order(self) -> List[State]:
+        if not self.states:
+            return []
+        return list(nx.topological_sort(self.cfg))
+
+    # -- whole-graph queries ------------------------------------------------
+    def all_library_nodes(self) -> List[Tuple[State, LibraryNode]]:
+        out = []
+        for st in self.states:
+            for n in st.library_nodes():
+                # find owning state (could be nested)
+                out.append((st, n))
+        return out
+
+    def off_chip_volume(self, env=None, symbolic=False):
+        if symbolic:
+            total = Expr.const(0)
+            for st in self.states:
+                total = total + st.off_chip_volume(env, symbolic=True)
+            return total
+        return sum(st.off_chip_volume(env) for st in self.states)
+
+    def free_symbols(self) -> set:
+        out = set()
+        for desc in self.arrays.values():
+            shape = getattr(desc, "shape", ())
+            for s in shape:
+                out |= s.free_symbols
+        return out
+
+    # -- library-node expansion (paper §3: multi-level lowering) -----------
+    def expand_library_nodes(self, level: Optional[str] = None,
+                             recursive: bool = True) -> List[str]:
+        """Expand until no library nodes remain; returns expansion log."""
+        log = []
+        progress = True
+        while progress:
+            progress = False
+            for st in list(self.states):
+                for node in list(st.graph.nodes):
+                    if isinstance(node, LibraryNode):
+                        used = node.expand(self, st, level)
+                        log.append(f"{node.label}->{used}")
+                        progress = True
+                    elif isinstance(node, NestedSDFG) and recursive:
+                        log.extend(node.sdfg.expand_library_nodes(level))
+        return log
+
+    # -- transformations ----------------------------------------------------
+    def apply(self, transformation, **kwargs) -> int:
+        """Apply a transformation class/instance everywhere it matches.
+        Returns number of applications (paper §3.2)."""
+        from ..transforms.base import Transformation
+        t = transformation() if isinstance(transformation, type) else transformation
+        n = t.apply_everywhere(self, **kwargs)
+        self.metadata["transformation_history"].append(
+            (type(t).__name__, n, kwargs))
+        return n
+
+    # -- validation / compilation -------------------------------------------
+    def validate(self):
+        from .validation import validate_sdfg
+        validate_sdfg(self)
+
+    def specialize(self, **symbol_values: int):
+        self.symbol_values.update(symbol_values)
+        return self
+
+    def compile(self, backend: str = "jnp", jit: bool = True, **kwargs):
+        from ..codegen.compiler import compile_sdfg
+        return compile_sdfg(self, backend=backend, jit=jit, **kwargs)
+
+    def argument_names(self) -> List[str]:
+        """Non-transient containers = program arguments, in insertion order."""
+        return [k for k, v in self.arrays.items()
+                if not v.transient and k not in self.constants]
+
+    def __repr__(self):
+        return (f"SDFG({self.name}: {len(self.states)} states, "
+                f"{len(self.arrays)} containers)")

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, TokenStream, make_global_batch
+
+__all__ = ["DataConfig", "TokenStream", "make_global_batch"]

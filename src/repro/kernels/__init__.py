@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec) for compute hot-spots.
+
+Each kernel package ships kernel.py (the pallas_call), ops.py (jit'd
+wrapper + fusion/library registration), and ref.py (pure-jnp oracle).
+Importing this package registers all pipeline-fusion patterns.
+"""
+from . import attention  # noqa: F401
+from . import axpydot  # noqa: F401
+from . import dot  # noqa: F401
+from . import gemm  # noqa: F401
+from . import rwkv  # noqa: F401
+from . import stencil  # noqa: F401
+
+__all__ = ["attention", "axpydot", "dot", "gemm", "rwkv", "stencil"]

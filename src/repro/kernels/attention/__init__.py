@@ -1,0 +1,4 @@
+from . import ops  # noqa: F401
+from .ops import attention_ref, flash_attention
+
+__all__ = ["attention_ref", "flash_attention", "ops"]

@@ -1,0 +1,5 @@
+from . import kernel as _kernel
+from . import ref as _ref
+
+flash_attention = _kernel.flash_attention
+attention_ref = _ref.attention

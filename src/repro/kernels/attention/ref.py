@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (causal / windowed / GQA)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention(q, k, v, causal=True, window=None):
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh)."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(dh)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

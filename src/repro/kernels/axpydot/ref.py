@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fused AXPYDOT pipeline (paper §4.1)."""
+import jax.numpy as jnp
+
+
+def axpydot(a, x, y, w):
+    z = a * x + y
+    return jnp.dot(z.astype(jnp.float32), w.astype(jnp.float32))[None]

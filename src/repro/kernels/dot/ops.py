@@ -1,0 +1,5 @@
+from . import kernel as _kernel
+from . import ref as _ref
+
+dot = _kernel.dot
+dot_ref = _ref.dot

@@ -1,0 +1,5 @@
+from . import kernel as _kernel
+from . import ref as _ref
+
+matmul = _kernel.matmul
+matmul_ref = _ref.matmul

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the tiled GEMM kernel."""
+import jax.numpy as jnp
+
+
+def _act(name, x):
+    if name is None:
+        return x
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "silu":
+        return x / (1.0 + jnp.exp(-x))
+    if name == "gelu":
+        return 0.5 * x * (1.0 + jnp.tanh(
+            0.7978845608028654 * (x + 0.044715 * x ** 3)))
+    raise ValueError(name)
+
+
+def matmul(a, b, bias=None, activation=None, out_dtype=None):
+    out = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = _act(activation, out)
+    return out.astype(out_dtype or a.dtype)

@@ -1,0 +1,4 @@
+from . import ops  # noqa: F401
+from .ops import wkv_chunked, wkv_ref
+
+__all__ = ["wkv_chunked", "wkv_ref", "ops"]

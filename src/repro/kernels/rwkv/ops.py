@@ -1,0 +1,5 @@
+from . import kernel as _kernel
+from . import ref as _ref
+
+wkv_chunked = _kernel.wkv_chunked
+wkv_ref = _ref.wkv

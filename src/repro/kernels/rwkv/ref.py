@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the WKV6 recurrence: the sequential scan."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv(r, k, v, w, u, state0):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd); state0: (B,H,hd,hd).
+    out_t = r_t . (S_{t-1} + u*k_t v_t^T); S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(state, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhkv,bhk->bhv", state + u[..., :, None] * kv, rt)
+        return wt[..., :, None] * state + kv, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state

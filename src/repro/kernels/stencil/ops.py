@@ -1,0 +1,12 @@
+from . import kernel as _kernel
+from . import ref as _ref
+
+diffusion2d = _kernel.diffusion2d
+jacobi3d = _kernel.jacobi3d
+diffusion3d = _kernel.diffusion3d
+stencil2d = _kernel.stencil2d
+stencil2d_chain = _kernel.stencil2d_chain
+diffusion2d_ref = _ref.diffusion2d
+jacobi3d_ref = _ref.jacobi3d
+diffusion3d_ref = _ref.diffusion3d
+stencil2d_ref = _ref.stencil2d

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the stencil kernels (paper §6, StencilFlow).
+
+Constant-0 boundary conditions, matching the paper's Fig.-17 JSON programs.
+"""
+import jax.numpy as jnp
+
+
+def diffusion2d(a, coeffs):
+    """b = c0*a[j,k] + c1*a[j-1,k] + c2*a[j+1,k] + c3*a[j,k-1] + c4*a[j,k+1]."""
+    c0, c1, c2, c3, c4 = [jnp.float32(c) for c in coeffs]
+    p = jnp.pad(a, 1)
+    return (c0 * p[1:-1, 1:-1] + c1 * p[:-2, 1:-1] + c2 * p[2:, 1:-1]
+            + c3 * p[1:-1, :-2] + c4 * p[1:-1, 2:]).astype(a.dtype)
+
+
+def jacobi3d(a):
+    """7-point Jacobi: average of the 6 neighbors and the center / 7."""
+    p = jnp.pad(a, 1)
+    c = jnp.float32(1.0 / 7.0)
+    out = c * (p[1:-1, 1:-1, 1:-1] + p[:-2, 1:-1, 1:-1] + p[2:, 1:-1, 1:-1]
+               + p[1:-1, :-2, 1:-1] + p[1:-1, 2:, 1:-1]
+               + p[1:-1, 1:-1, :-2] + p[1:-1, 1:-1, 2:])
+    return out.astype(a.dtype)
+
+
+def stencil2d(a, coeffs, offsets):
+    """Generic 2D stencil, constant-0 boundary."""
+    r = max(max(abs(di), abs(dj)) for di, dj in offsets)
+    p = jnp.pad(a, r)
+    H, W = a.shape
+    out = jnp.zeros((H, W), jnp.float32)
+    for c, (di, dj) in zip(coeffs, offsets):
+        out = out + jnp.float32(c) * p[r + di:r + di + H, r + dj:r + dj + W]
+    return out.astype(a.dtype)
+
+
+def diffusion3d(a, alpha=0.1):
+    """Explicit diffusion step: a + alpha * 3D laplacian(a)."""
+    p = jnp.pad(a, 1)
+    lap = (p[:-2, 1:-1, 1:-1] + p[2:, 1:-1, 1:-1]
+           + p[1:-1, :-2, 1:-1] + p[1:-1, 2:, 1:-1]
+           + p[1:-1, 1:-1, :-2] + p[1:-1, 1:-1, 2:]
+           - 6.0 * p[1:-1, 1:-1, 1:-1])
+    return (a + jnp.float32(alpha) * lap).astype(a.dtype)

@@ -1,0 +1,4 @@
+"""Launcher: meshes, sharding rules, train/serve steps, multi-pod dry-run."""
+from .mesh import make_production_mesh, make_smoke_mesh
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]

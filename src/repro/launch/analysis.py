@@ -1,0 +1,211 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are NOT in cost_analysis, so we parse the optimized HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Hardware: TPU v5e-class constants.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e-class hardware constants (per assignment)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|"
+                       r"u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count..:\{.n.:.(\d+).\}')
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?to_apply=%?([\w\.\-]+)")
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Sum operand sizes of collective ops in optimized HLO text,
+    **weighted by loop trip counts**: XLA emits a while-loop body once, so a
+    collective inside the layer scan must count n_periods times. We read
+    the ``known_trip_count`` backend config off each while op and propagate
+    multipliers through nested loops/calls."""
+    # 1. split into computations; collect per-computation collectives + edges
+    comp = None
+    per_comp: Dict[str, Dict] = {}
+    edges: Dict[str, list] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and (stripped.startswith("%")
+                                         or stripped.startswith("ENTRY")):
+            m = _COMP_RE.match(stripped)
+            if m:
+                comp = m.group(1)
+                per_comp.setdefault(
+                    comp, {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES})
+                edges.setdefault(comp, [])
+                continue
+        if comp is None:
+            continue
+        wm = _WHILE_RE.search(stripped)
+        if wm:
+            tm = _TRIP_RE.search(stripped)
+            trips = int(tm.group(1)) if tm else 1
+            edges[comp].append((wm.group(1), trips))
+        cm = _CALL_RE.search(stripped)
+        if cm:
+            edges[comp].append((cm.group(1), 1))
+        m = re.search(r"=\s*[^=]*?\b(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start|-done)?\(", stripped)
+        if not m or "-done(" in stripped:
+            continue
+        kind = m.group(1)
+        paren = stripped[stripped.index("(", m.start()):]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(paren))
+        per_comp[comp][kind]["count"] += 1
+        per_comp[comp][kind]["bytes"] += nbytes
+
+    # 2. propagate multipliers from every root (computations nobody calls)
+    called = {child for es in edges.values() for child, _ in es}
+    mult: Dict[str, float] = {}
+    roots = [c for c in per_comp if c not in called]
+    stack = [(r, 1.0) for r in roots]
+    while stack:
+        c, m = stack.pop()
+        if mult.get(c, 0) >= m:
+            continue
+        mult[c] = max(mult.get(c, 0.0), m)
+        for child, trips in edges.get(c, []):
+            stack.append((child, m * trips))
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for c, stats in per_comp.items():
+        f = mult.get(c, 1.0)
+        for k in _COLLECTIVES:
+            out[k]["count"] += int(stats[k]["count"] * f)
+            out[k]["bytes"] += int(stats[k]["bytes"] * f)
+    out["total_bytes"] = sum(out[k]["bytes"] for k in _COLLECTIVES)
+    out["total_count"] = sum(out[k]["count"] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(compiled, n_chips: int, model_flops: float = None) -> Dict:
+    """cost_analysis() of the SPMD partitioned program reports PER-DEVICE
+    flops/bytes (verified against 6*N*D/chips for the dense archs); the
+    optimized HLO text likewise shows per-device shard shapes. Terms are
+    therefore per-chip work over per-chip capability:
+
+        compute_s    = flops_per_dev / peak
+        memory_s     = bytes_per_dev / HBM_bw
+        collective_s = collective_bytes_per_dev / link_bw
+    """
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_stats(hlo)
+    terms = {
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": nbytes,
+        "collective_bytes_per_dev": coll["total_bytes"],
+        "collective_ops": {k: coll[k] for k in _COLLECTIVES},
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": nbytes / HBM_BW,
+        "collective_s": coll["total_bytes"] / LINK_BW,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom.replace("_s", "")
+    if model_flops:
+        mf_dev = model_flops / n_chips
+        terms["model_flops"] = model_flops
+        terms["useful_fraction"] = mf_dev / flops if flops else 0.0
+        # roofline fraction: useful model FLOPs over the time implied by the
+        # dominant term (what fraction of peak the step achieves)
+        t_bound = max(terms["compute_s"], terms["memory_s"],
+                      terms["collective_s"])
+        if t_bound > 0:
+            terms["roofline_fraction"] = mf_dev / (t_bound * PEAK_FLOPS)
+    return terms
+
+
+def terms_from_counts(flops: float, nbytes: float, coll_bytes: float,
+                      n_chips: int, model_flops: float = None) -> Dict:
+    """Roofline terms from (per-device) op counts — used with the
+    depth-extrapolated exact costs (dryrun.probe_costs)."""
+    terms = {
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": nbytes,
+        "collective_bytes_per_dev": coll_bytes,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": nbytes / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom.replace("_s", "")
+    if model_flops:
+        mf_dev = model_flops / n_chips
+        terms["model_flops"] = model_flops
+        terms["useful_fraction"] = mf_dev / flops if flops else 0.0
+        t_bound = max(terms["compute_s"], terms["memory_s"],
+                      terms["collective_s"])
+        if t_bound > 0:
+            terms["roofline_fraction"] = mf_dev / (t_bound * PEAK_FLOPS)
+    return terms
+
+
+def memory_per_device(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = getattr(ma, attr)
+    out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def train_model_flops(n_active_params: float, tokens: float) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def decode_model_flops(n_active_params: float, tokens: float,
+                       kv_read_flops: float = 0.0) -> float:
+    return 2.0 * n_active_params * tokens + kv_read_flops

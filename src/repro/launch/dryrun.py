@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Docstring and __future__ imports follow.
+DOC = """Multi-pod dry-run (deliverable e): prove the distribution config is
+coherent without hardware.
+
+For every (architecture x input-shape) cell, lower + compile train_step /
+serve_step on the single-pod (16,16)=(data,model) mesh and the multi-pod
+(2,16,16)=(pod,data,model) mesh, print memory_analysis() and
+cost_analysis(), extract the roofline terms (launch/analysis.py), and dump
+everything to JSON for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config
+from ..models import _flags
+from ..models.transformer import build_schedule
+from . import analysis
+from .mesh import make_production_mesh
+from .steps import lower_cell
+
+
+def probe_costs(cfg, shape, mesh, remat: bool = True) -> dict:
+    """Exact per-step flops/bytes by depth extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies ONCE, so the full model's
+    numbers undercount the layer stack. We *lower* (no compile — seconds,
+    not minutes) two shallow variants (period and 2*period layers) with
+    every scan unrolled, take the per-period slope, and extrapolate:
+
+        total(L) = shallow(P) + slope * (L - P) / P
+
+    lowered.cost_analysis() reports whole-program (unpartitioned) numbers;
+    we divide by the chip count (valid for evenly-sharded programs — the
+    sharding rules shard every large tensor). Collective bytes come from
+    the full compiled HLO with trip-count weighting (analysis.py).
+    """
+    n_chips = mesh.devices.size
+    period, _, _ = (build_schedule(cfg) if cfg.family != "encdec"
+                    else ([None], None, []))
+    P = len(period) if cfg.family != "encdec" else 1
+
+    def measure(n_layers):
+        changes = {"n_layers": n_layers}
+        if cfg.n_encoder_layers:
+            changes["n_encoder_layers"] = n_layers
+        c = dataclasses.replace(cfg, **changes)
+        _flags.UNROLL_SCANS = True
+        try:
+            lowered = lower_cell(c, shape, mesh, remat=remat)
+        finally:
+            _flags.UNROLL_SCANS = False
+        cost = lowered.cost_analysis() or {}
+        return {
+            "flops": float(cost.get("flops", 0.0)) / n_chips,
+            "bytes": float(cost.get("bytes accessed", 0.0)) / n_chips,
+        }
+
+    m1 = measure(P)
+    m2 = measure(2 * P)
+    L = cfg.n_layers
+    out = {}
+    for k in ("flops", "bytes"):
+        slope = (m2[k] - m1[k])
+        out[k] = m1[k] + slope * (L - P) / P
+    out["per_period"] = {k: (m2[k] - m1[k]) for k in m1}
+    out["intercept"] = {k: 2 * m1[k] - m2[k] for k in m1}
+    return out
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             remat: bool = True, verbose: bool = True,
+             probe: bool = True, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    if optimized:
+        # beyond-paper hillclimbed variant (EXPERIMENTS §Perf): chunked
+        # online-softmax attention + scatter/gather MoE dispatch
+        cfg = dataclasses.replace(cfg, attention_impl="chunked",
+                                  moe_dispatch="sort")
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "status": "ok",
+           "variant": "optimized" if optimized else "baseline"}
+    if shape_name in cfg.skip_shapes:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: long_500k skipped per "
+                         "assignment (DESIGN.md §4)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh, remat=remat)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = analysis.memory_per_device(compiled)
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            mf = analysis.train_model_flops(cfg.n_active_params(), tokens)
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            mf = 2.0 * cfg.n_active_params() * tokens
+        else:
+            mf = analysis.decode_model_flops(cfg.n_active_params(),
+                                             shape.global_batch)
+        terms = analysis.roofline_terms(compiled, n_chips, model_flops=mf)
+        rec["memory"] = mem
+        rec["roofline_raw"] = {k: v for k, v in terms.items()
+                               if k != "collective_ops"}
+        rec["collectives"] = terms["collective_ops"]
+        # exact costs via depth extrapolation (see probe_costs docstring);
+        # collective bytes already trip-count-weighted from the full compile
+        if probe:
+            pr = probe_costs(cfg, shape, mesh, remat=remat)
+            rec["probe"] = pr
+            rec["roofline"] = analysis.terms_from_counts(
+                pr["flops"], pr["bytes"],
+                terms["collective_bytes_per_dev"], n_chips, model_flops=mf)
+            terms = dict(rec["roofline"])
+        else:
+            rec["roofline"] = rec["roofline_raw"]
+        if verbose:
+            print(f"--- {arch} x {shape_name} on {rec['mesh']} ---")
+            print("memory_analysis:", json.dumps(mem))
+            print("cost(/dev, depth-extrapolated): flops=%.3e bytes=%.3e "
+                  "coll=%.3e" % (terms["hlo_flops_per_dev"],
+                                 terms["hlo_bytes_per_dev"],
+                                 terms["collective_bytes_per_dev"]))
+            print("terms: compute=%.4fs memory=%.4fs collective=%.4fs "
+                  "dominant=%s roofline=%.3f" % (
+                      terms["compute_s"], terms["memory_s"],
+                      terms["collective_s"], terms["dominant"],
+                      terms.get("roofline_fraction", 0.0)))
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"--- {arch} x {shape_name} on {rec['mesh']}: FAILED ---")
+            print(rec["error"])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip cost extrapolation (multi-pod pass: the "
+                         "roofline table is single-pod only)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="hillclimbed variant (chunked attention + sort MoE "
+                         "dispatch) instead of the paper-faithful baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        remat=not args.no_remat,
+                                        probe=not args.no_probe,
+                                        optimized=args.optimized))
+
+    RESULTS_DIR.mkdir(exist_ok=True)
+    out = Path(args.out) if args.out else RESULTS_DIR / "dryrun.json"
+    existing = []
+    if out.exists():
+        existing = json.loads(out.read_text())
+        keys = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r["mesh"]) not in keys]
+    out.write_text(json.dumps(existing + results, indent=1))
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {ok} ok, {sk} skipped, {err} failed -> {out}")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+2D (fsdp x tensor) sharding: weight matrices shard their input-ish dim over
+the data axes (ZeRO/FSDP — pods included, so 1T-param states fit per chip)
+and their parallel dim over the model axis (Megatron TP). MoE expert stacks
+shard experts over the model axis (EP). KV caches shard heads over model
+when divisible, otherwise sequence (long-context decode: sequence-sharded
+KV, softmax combine inserted by GSPMD). Every rule checks divisibility and
+falls back to replication per-dimension.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .mesh import dp_axes, mesh_axis_sizes
+
+# rule tables: leaf-name -> per-dim roles, trailing dims of the unstacked
+# leaf. roles: 'fsdp' (shard over data axes), 'tp' (model axis), None.
+_PARAM_RULES = {
+    # embeddings / heads
+    "embed": ("tp", "fsdp"),          # (V, D): vocab-parallel
+    "lm_head": ("fsdp", "tp"),        # (D, V)
+    "stub_proj": ("fsdp", "tp"),
+    "frame_proj": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wg": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "b_in": ("tp",), "b_out": (None,),
+    "cm_wk": ("fsdp", "tp"), "cm_wv": ("tp", "fsdp"),
+    # moe (leading E dim = expert parallel over model axis)
+    "router": ("fsdp", "tp"),
+    "moe_gate": ("tp", "fsdp", None), "moe_up": ("tp", "fsdp", None),
+    "moe_down": ("tp", None, "fsdp"),
+    "sh_gate": ("fsdp", "tp"), "sh_up": ("fsdp", "tp"),
+    "sh_down": ("tp", "fsdp"),
+    # mamba
+    "conv_w": (None, "tp"), "w_bcdt": ("tp", None),
+    "A_log": ("tp", None), "dt_bias": ("tp",), "D": ("tp",),
+    # rwkv
+    "wr": ("fsdp", "tp"), "w_decay": (None,), "u_bonus": ("tp", None),
+    "mix_rkvwg": (None, None), "cm_mix": (None,),
+}
+
+_STACKED_CONTAINERS = ("body", "encoder", "decoder")
+
+
+def _role_to_axis(role, dim_size: int, sizes: Dict[str, int],
+                  fsdp_axes: Tuple[str, ...]):
+    if role == "tp" and "model" in sizes:
+        if dim_size % sizes["model"] == 0:
+            return "model"
+        return None
+    if role == "fsdp" and fsdp_axes:
+        # use as many dp axes as divide the dim (pod outermost)
+        usable = []
+        prod = 1
+        for a in fsdp_axes:
+            if dim_size % (prod * sizes[a]) == 0:
+                usable.append(a)
+                prod *= sizes[a]
+        if usable:
+            return tuple(usable) if len(usable) > 1 else usable[0]
+        return None
+    return None
+
+
+def param_pspecs(cfg: ModelConfig, params, mesh) -> Dict:
+    """PartitionSpec pytree matching ``params`` (works for opt states too
+    via tree-prefix broadcasting by the caller)."""
+    sizes = mesh_axis_sizes(mesh)
+    fsdp = dp_axes(mesh)
+
+    def spec_for_path(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        stacked = any(n in _STACKED_CONTAINERS for n in names)
+        rule = _PARAM_RULES.get(name)
+        shape = leaf.shape
+        core_shape = shape[1:] if stacked else shape
+        if rule is None or len(rule) != len(core_shape):
+            return P()  # replicate unknowns (norm scales etc.)
+        spec = []
+        if stacked:
+            spec.append(None)
+        for role, d in zip(rule, core_shape):
+            spec.append(_role_to_axis(role, d, sizes, fsdp))
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for_path, params)
+
+
+def opt_pspecs(optimizer_name: str, params, params_specs) -> Dict:
+    """Optimizer-state specs mirror parameter specs (ZeRO); adafactor's
+    factored moments drop the reduced dimension's axis."""
+    if optimizer_name == "adamw":
+        return {"m": params_specs, "v": params_specs}
+    if optimizer_name == "adafactor":
+        def leaf(p, s):
+            if not isinstance(s, P) or len(s) != p.ndim:
+                s = P(*([None] * p.ndim))
+            if p.ndim >= 2:
+                return {"vr": P(*s[:-1]),
+                        "vc": P(*(list(s[:-2]) + [s[-1]]))}
+            return {"v": s}
+        return jax.tree.map(leaf, params, params_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    raise ValueError(optimizer_name)
+
+
+def batch_axes(batch_size: int, mesh) -> Optional[Tuple[str, ...]]:
+    sizes = mesh_axis_sizes(mesh)
+    usable, prod = [], 1
+    for a in dp_axes(mesh):
+        if batch_size % (prod * sizes[a]) == 0:
+            usable.append(a)
+            prod *= sizes[a]
+    if not usable:
+        return None
+    return tuple(usable) if len(usable) > 1 else usable[0]
+
+
+def batch_pspecs(cfg: ModelConfig, specs: Dict, mesh) -> Dict:
+    out = {}
+    for k, v in specs.items():
+        b = batch_axes(v.shape[0], mesh)
+        out[k] = P(b, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache, mesh) -> Dict:
+    """KV cache: batch over dp axes; heads over model if divisible, else
+    sequence over model (sequence-parallel long-context decode)."""
+    sizes = mesh_axis_sizes(mesh)
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        name = [n for n in names if isinstance(n, str)][-1] \
+            if any(isinstance(n, str) for n in names) else ""
+        stacked = "body" in names or "layers" in names
+        shape = leaf.shape
+        core = shape[1:] if stacked else shape
+        prefix = [None] if stacked else []
+        if name in ("k", "v", "ck", "cv") and len(core) == 4:
+            b, s, h, hd = core
+            ba = batch_axes(b, mesh)
+            if "model" in sizes and h % sizes["model"] == 0:
+                return P(*prefix, ba, None, "model", None)
+            if "model" in sizes and s % sizes["model"] == 0:
+                return P(*prefix, ba, "model", None, None)
+            return P(*prefix, ba, None, None, None)
+        if name == "conv" and len(core) == 3:
+            b, k, din = core
+            ba = batch_axes(b, mesh)
+            tp = "model" if din % sizes.get("model", 1) == 0 else None
+            return P(*prefix, ba, None, tp)
+        if name == "ssm" and len(core) == 3:
+            b, din, n = core
+            ba = batch_axes(b, mesh)
+            tp = "model" if din % sizes.get("model", 1) == 0 else None
+            return P(*prefix, ba, tp, None)
+        if name == "wkv" and len(core) == 4:
+            b, h, hd, hd2 = core
+            ba = batch_axes(b, mesh)
+            tp = "model" if h % sizes.get("model", 1) == 0 else None
+            return P(*prefix, ba, tp, None, None)
+        if name in ("shift1", "shift2") and len(core) == 3:
+            ba = batch_axes(core[0], mesh)
+            tp = "model" if core[2] % sizes.get("model", 1) == 0 else None
+            return P(*prefix, ba, None, tp)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def to_shardings(pspec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,134 @@
+"""Jitted train_step / serve_step builders with explicit shardings.
+
+``train_step``: loss -> grad -> clip -> optimizer update, donated state.
+``serve_step``: one decode step against a KV cache (donated).
+Both are what the multi-pod dry-run lowers and compiles per (arch x shape
+x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.registry import build_model, input_specs
+from ..optim import clip_by_global_norm, get_optimizer
+from . import sharding as shd
+
+
+def abstract_params(model, cfg: ModelConfig):
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, mesh, *, optimizer_name: str = None,
+                    clip_norm: float = 1.0, remat: bool = True):
+    """Returns (step_fn, state_shardings, batch_shardings, abstract_state).
+
+    step(state, batch) -> (state, metrics); jit with shardings + donation.
+    """
+    model = build_model(cfg)
+    model.remat = remat
+    opt = get_optimizer(optimizer_name or cfg.optimizer)
+    a_params = abstract_params(model, cfg)
+    a_opt = jax.eval_shape(opt.init, a_params)
+    a_state = {"params": a_params, "opt": a_opt,
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    p_specs = shd.param_pspecs(cfg, a_params, mesh)
+    o_specs = shd.opt_pspecs(opt.name, a_params, p_specs)
+    state_specs = {"params": p_specs, "opt": o_specs, "step": P()}
+    state_shardings = shd.to_shardings(state_specs, mesh)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt.update(grads, state["opt"],
+                                         state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step, state_shardings, a_state, model, opt
+
+
+def make_serve_step(cfg: ModelConfig, mesh, batch: int, max_seq: int):
+    """Returns (step_fn, cache_shardings, abstract_cache, model).
+
+    serve_step(params, cache, tokens) -> (logits, cache): one new token
+    against a KV cache of max_seq (the decode_* / long_* shapes)."""
+    model = build_model(cfg)
+    a_params = abstract_params(model, cfg)
+    p_specs = shd.param_pspecs(cfg, a_params, mesh)
+    a_cache = jax.eval_shape(
+        functools.partial(model.init_cache, batch, max_seq))
+    c_specs = shd.cache_pspecs(cfg, a_cache, mesh)
+    param_shardings = shd.to_shardings(p_specs, mesh)
+    cache_shardings = shd.to_shardings(c_specs, mesh)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step, param_shardings, cache_shardings, a_params, a_cache, \
+        model
+
+
+def _maybe_axis(n: int, axis: str, mesh):
+    sizes = shd.mesh_axis_sizes(mesh)
+    return axis if axis in sizes and n % sizes[axis] == 0 else None
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, remat: bool = True):
+    """Lower (not compile) one (arch x shape) cell on a mesh. Returns the
+    jax ``Lowered`` plus metadata. Used by dryrun.py and the roofline."""
+    with jax.sharding.set_mesh(mesh):
+        return _lower_cell_inner(cfg, shape, mesh, remat)
+
+
+def _lower_cell_inner(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      remat: bool = True):
+    specs = input_specs(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        step, state_shardings, a_state, model, _ = make_train_step(
+            cfg, mesh, remat=remat)
+        b_specs = shd.batch_pspecs(cfg, specs, mesh)
+        b_shardings = shd.to_shardings(b_specs, mesh)
+        if shape.kind == "prefill":
+            # inference prefill: forward only (logits), no optimizer
+            def fwd(params, batch):
+                logits, _ = model.forward(params, batch)
+                return logits
+            vocab_p = -(-cfg.vocab // 256) * 256
+            fn = jax.jit(
+                fwd,
+                in_shardings=(state_shardings["params"], b_shardings),
+                out_shardings=NamedSharding(mesh, P(
+                    shd.batch_axes(shape.global_batch, mesh), None,
+                    _maybe_axis(vocab_p, "model", mesh))))
+            lowered = fn.lower(a_state["params"], specs)
+        else:
+            fn = jax.jit(step,
+                         in_shardings=(state_shardings, b_shardings),
+                         out_shardings=(state_shardings,
+                                        NamedSharding(mesh, P())),
+                         donate_argnums=(0,))
+            lowered = fn.lower(a_state, specs)
+        return lowered
+    # decode shapes
+    serve_step, param_sh, cache_sh, a_params, a_cache, model = \
+        make_serve_step(cfg, mesh, shape.global_batch, shape.seq_len)
+    vocab_p = -(-cfg.vocab // 256) * 256
+    tok_sh = NamedSharding(mesh, P(
+        shd.batch_axes(shape.global_batch, mesh), None))
+    logits_sh = NamedSharding(mesh, P(
+        shd.batch_axes(shape.global_batch, mesh), None,
+        _maybe_axis(vocab_p, "model", mesh)))
+    fn = jax.jit(serve_step,
+                 in_shardings=(param_sh, cache_sh, tok_sh),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(1,))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return fn.lower(a_params, a_cache, tokens)

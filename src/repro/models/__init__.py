@@ -1,0 +1,7 @@
+"""LM model stack: composable layer blocks + the 10 assigned architectures."""
+from .registry import build_model, example_batch, input_specs
+from .transformer import TransformerLM
+from .encdec import EncDecLM
+
+__all__ = ["build_model", "example_batch", "input_specs", "TransformerLM",
+           "EncDecLM"]

@@ -1,0 +1,6 @@
+"""Shared trace-time flags (module to avoid circular imports).
+
+UNROLL_SCANS: set by the dry-run cost probes so every lax.scan unrolls and
+XLA cost_analysis counts all iterations (while bodies count once).
+"""
+UNROLL_SCANS = False

@@ -1,0 +1,504 @@
+"""Layer blocks: attention, Mamba SSM, RWKV6 time-mix, FFN/MoE.
+
+Each block is (init_fn, apply_fn) over explicit param dicts, with optional
+decode-cache threading. Blocks are scan-stackable: apply works identically
+on unstacked params (leading layer dim removed by scan).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import (apply_rope, attention_xla, dense_init, gelu_mlp,
+                     layer_norm, moe_block, rms_norm, swiglu)
+
+
+def _norm(cfg: ModelConfig, x, p, prefix: str):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p[f"{prefix}_scale"])
+    return layer_norm(x, p[f"{prefix}_scale"] + 1.0, p[f"{prefix}_bias"])
+
+
+def _norm_init(cfg: ModelConfig, d: int) -> Dict:
+    out = {"_scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        out["_bias"] = jnp.zeros((d,), jnp.float32)
+    return out
+
+
+def _with_prefix(d: Dict, prefix: str) -> Dict:
+    return {prefix + k: v for k, v in d.items()}
+
+
+# ---------------------------------------------------------------------------
+# Attention block (GQA + RoPE + optional sliding window)
+# ---------------------------------------------------------------------------
+def attn_init(cfg: ModelConfig, key) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dt),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d),
+                         scale=1.0 / np.sqrt(cfg.n_heads * hd * 2
+                                             * cfg.n_layers), dtype=dt),
+    }
+    p.update(_with_prefix(_norm_init(cfg, d), "ln"))
+    return p
+
+
+def attn_apply(cfg: ModelConfig, p: Dict, x, *, window: Optional[int],
+               cache: Optional[Dict] = None, positions=None,
+               kv_override: Optional[Tuple] = None, causal: bool = True):
+    """x: (B, S, D). cache: {'k','v'} (B, Smax, Hkv, Dh) + 'pos' scalar.
+    kv_override: cross-attention (encoder memory)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = _norm(cfg, x, p, "ln")
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = h.astype(adt)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(adt)
+                   ).reshape(b, s, cfg.n_heads, hd)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dh->bsh", h, p["wk"].astype(adt)
+                       ).reshape(b, s, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, p["wv"].astype(adt)
+                       ).reshape(b, s, cfg.n_kv_heads, hd)
+    else:
+        k, v = kv_override
+
+    if positions is None:
+        base = cache["pos"] if cache is not None else 0
+        positions = base + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    if kv_override is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    q_offset = 0
+    if cache is not None and kv_override is None:
+        # decode: insert new k/v at position, attend over the whole cache
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        k, v = ck.astype(adt), cv.astype(adt)
+        q_offset = pos
+        out = attention_xla(q, k, v, causal=True, window=window,
+                            q_offset=q_offset)
+    elif cfg.attention_impl == "chunked" and s > 1:
+        from .layers import attention_chunked
+        out = attention_chunked(q, k, v,
+                                causal=causal and kv_override is None,
+                                window=window)
+    else:
+        out = attention_xla(q, k, v, causal=causal and kv_override is None,
+                            window=window)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(adt))
+    return x + out.astype(x.dtype), new_cache
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective-SSM block (Jamba's recurrent layer)
+# ---------------------------------------------------------------------------
+def mamba_init(cfg: ModelConfig, key) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.expand * d
+    n = cfg.d_state
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "w_in": dense_init(ks[0], (d, 2 * d_in), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, d_in), scale=0.5, dtype=dt),
+        "w_bcdt": dense_init(ks[2], (d_in, 2 * n + 1), dtype=dt),
+        "dt_bias": jnp.full((d_in,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))).astype(dt),
+        "D": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[3], (d_in, d),
+                            scale=1.0 / np.sqrt(d_in * 2 * cfg.n_layers),
+                            dtype=dt),
+    }
+    p.update(_with_prefix(_norm_init(cfg, d), "ln"))
+    return p
+
+
+#: mamba chunk length; per-step log-decay is clamped to >= -5 so the
+#: exp(cumsum) within a chunk stays in fp32 range (5*16 = 80 < 88).
+SSM_CHUNK = 16
+
+
+def _ssm_scan_ref(u, ldA, dBu, C, state0):
+    """Reference selective scan (associative scan over time). Materializes
+    (B,S,Din,N) states — smoke-test sizes only; the chunked path below is
+    the production formulation."""
+    dA = jnp.exp(ldA)                                    # (B,S,Din,N)
+    if state0 is not None:
+        dBu = dBu.at[:, 0].add(dA[:, 0] * state0)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b1 * a2 + b2
+
+    _, states = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", states, C)
+    return y, states[:, -1]
+
+
+def _ssm_scan_chunked(u, ldA, dBu, C, state0, chunk: int = SSM_CHUNK):
+    """Chunked selective scan (TPU adaptation, DESIGN.md §4): one
+    (B,chunk,Din,N) slab lives at a time; chunks propagate the (B,Din,N)
+    state through a short scan. exp/cumsum stay in fp32 range thanks to
+    the per-step clamp on ldA."""
+    Bsz, S, Din = u.shape
+    N = ldA.shape[-1]
+    nC = S // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(Bsz, nC, chunk, *x.shape[2:]), 1, 0)
+
+    xs = (to_chunks(ldA), to_chunks(dBu), to_chunks(C))
+
+    def step(state, xs):
+        ldA_c, dBu_c, C_c = xs          # (B,chunk,Din,N) x2, (B,chunk,N)
+        la = jnp.cumsum(ldA_c, axis=1)
+        prefix = jnp.cumsum(jnp.exp(-la) * dBu_c, axis=1)
+        states = jnp.exp(la) * (state[:, None] + prefix)
+        y = jnp.einsum("bcdn,bcn->bcd", states, C_c)
+        return states[:, -1], y
+
+    state_f, ys = jax.lax.scan(step, state0, xs,
+                               unroll=nC if _flags.UNROLL_SCANS else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, Din)
+    return y, state_f
+
+
+def mamba_apply(cfg: ModelConfig, p: Dict, x, *, cache: Optional[Dict] = None):
+    b, s, d = x.shape
+    d_in = cfg.expand * d
+    n = cfg.d_state
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = _norm(cfg, x, p, "ln").astype(adt)
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"].astype(adt))
+    u, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time
+    conv_w = p["conv_w"].astype(jnp.float32)
+    K = cfg.d_conv
+    if cache is not None:
+        prev = cache["conv"]                          # (B, K-1, Din)
+        u_ext = jnp.concatenate([prev.astype(adt), u], axis=1)
+        new_conv = u_ext[:, -(K - 1):].astype(cache["conv"].dtype)
+    else:
+        u_ext = jnp.concatenate([jnp.zeros((b, K - 1, d_in), adt), u], axis=1)
+        new_conv = None
+    uf = u_ext.astype(jnp.float32)
+    conv = sum(uf[:, i:i + s] * conv_w[i] for i in range(K))
+    u = jax.nn.silu(conv)
+
+    bcdt = jnp.einsum("bsd,dk->bsk", u.astype(adt), p["w_bcdt"].astype(adt)
+                      ).astype(jnp.float32)
+    B_, C_, dt_ = bcdt[..., :n], bcdt[..., n:2 * n], bcdt[..., 2 * n:]
+    dt_ = jax.nn.softplus(dt_ + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    # per-step log decay, clamped for chunked-scan fp32 stability
+    ldA = jnp.clip(dt_[..., None] * A, -5.0, 0.0)        # (B,S,Din,N)
+    dBu = dt_[..., None] * B_[:, :, None, :] * u[..., None]
+    state0 = cache["ssm"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((b, d_in, n), jnp.float32)
+    if s == 1:
+        last_state = jnp.exp(ldA[:, 0]) * state0 + dBu[:, 0]
+        y = jnp.einsum("bdn,bn->bd", last_state, C_[:, 0])[:, None]
+    elif s % SSM_CHUNK == 0:
+        y, last_state = _ssm_scan_chunked(u, ldA, dBu, C_, state0)
+    else:
+        y, last_state = _ssm_scan_ref(u, ldA, dBu, C_, state0)
+    y = y + p["D"].astype(jnp.float32) * u
+    y = y.astype(adt) * jax.nn.silu(z.astype(jnp.float32)).astype(adt)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(adt))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv,
+                     "ssm": last_state.astype(cache["ssm"].dtype)}
+    return x + out.astype(x.dtype), new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in = cfg.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, cfg.d_state), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (Finch): data-dependent decay time-mix + channel mix
+# ---------------------------------------------------------------------------
+def rwkv_init(cfg: ModelConfig, key) -> Dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "mix_rkvwg": dense_init(ks[0], (5, d), scale=0.1, dtype=dt),
+        "wr": dense_init(ks[1], (d, d), dtype=dt),
+        "wk": dense_init(ks[2], (d, d), dtype=dt),
+        "wv": dense_init(ks[3], (d, d), dtype=dt),
+        "wg": dense_init(ks[4], (d, d), dtype=dt),
+        "w_decay": dense_init(ks[5], (d,), scale=1.0, dtype=dt),
+        "u_bonus": dense_init(ks[6], (H, hd), scale=0.5, dtype=dt),
+        "wo": dense_init(ks[7], (d, d),
+                         scale=1.0 / np.sqrt(d * 2 * cfg.n_layers), dtype=dt),
+        # channel mix
+        "cm_wk": dense_init(jax.random.fold_in(key, 10), (d, cfg.d_ff),
+                            dtype=dt),
+        "cm_wv": dense_init(jax.random.fold_in(key, 11), (cfg.d_ff, d),
+                            scale=1.0 / np.sqrt(cfg.d_ff * 2 * cfg.n_layers),
+                            dtype=dt),
+        "cm_mix": dense_init(jax.random.fold_in(key, 12), (d,), scale=0.1,
+                             dtype=dt),
+    }
+    p.update(_with_prefix(_norm_init(cfg, d), "ln1"))
+    p.update(_with_prefix(_norm_init(cfg, d), "ln2"))
+    return p
+
+
+from . import _flags
+
+#: WKV chunk length: bounded so exp(sum log w) stays in fp32 range
+#: (|log w| <= 3.5 per step by construction -> 3.5*16 = 56 < 88).
+WKV_CHUNK = 16
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Sequential reference for the WKV6 linear recurrence.
+    r,k,v: (B,S,H,hd); w decay in (0,1) applies to the key dim;
+    u bonus: (H,hd). state: (B,H,hd_k,hd_v).
+    out_t = r_t . (S_{t-1} + u*k_t v_t^T); S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(state, xs):
+        rt, kt, vt, wt = xs          # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]        # (B,H,hd,hd)
+        out = jnp.einsum("bhkv,bhk->bhv", state + u[..., :, None] * kv, rt)
+        new_state = wt[..., :, None] * state + kv
+        return new_state, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1), state  # (B,S,H,hd)
+
+
+def _wkv_chunked(r, k, v, w, u, state0, chunk: int = WKV_CHUNK):
+    """Chunkwise WKV6 (GLA-style): intra-chunk terms become causal matmuls
+    on the MXU; only the O(S/chunk) inter-chunk state propagation scans.
+    This is the TPU adaptation of the recurrence (DESIGN.md §4) and the
+    formulation the Pallas kernel implements.
+
+    With A_t = prod_{s<=t} w_s (per key channel, within a chunk):
+      out_t = (r_t*A_{t-1}) . S_chunk0
+              + sum_{j<t} [(r_t*A_{t-1}/A_j) . k_j] v_j
+              + (r_t . (u*k_t)) v_t
+      S_next = diag(A_last) S_chunk0 + sum_j (A_last/A_j) k_j v_j^T
+    """
+    B, S, H, hd = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    N = S // C
+
+    def chunkify(x):
+        return x.reshape(B, N, C, H, hd)
+
+    rc, kc, vc, wc = map(chunkify, (r, k, v, w))
+    lw = jnp.log(jnp.maximum(wc, 1e-8))
+    la = jnp.cumsum(lw, axis=2)                    # inclusive log-decay
+    a_incl = jnp.exp(la)                           # A_j
+    a_prev = jnp.exp(la - lw)                      # A_{t-1}
+    a_last = jnp.exp(la[:, :, -1])                 # (B,N,H,hd) chunk decay
+    r_t = rc * a_prev
+    k_t = kc * jnp.exp(-la)
+    k_rev = kc * jnp.exp(la[:, :, -1:, :, :] - la)  # (A_last/A_j) k_j
+
+    # intra-chunk: strictly-causal scores + diagonal bonus term
+    scores = jnp.einsum("bnthd,bnjhd->bnhtj", r_t, k_t)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    out_intra = jnp.einsum("bnhtj,bnjhd->bnthd", scores, vc)
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, u, kc)
+    out_intra = out_intra + diag[..., None] * vc
+
+    # inter-chunk state propagation
+    t_mat = jnp.einsum("bnjhd,bnjhe->bnhde", k_rev, vc)  # (B,N,H,hd,hd)
+
+    def step(state, xs):
+        d_n, t_n = xs                              # (B,H,hd), (B,H,hd,hd)
+        new_state = d_n[..., :, None] * state + t_n
+        return new_state, state                    # emit the *incoming* state
+
+    d_xs = jnp.moveaxis(a_last, 1, 0)
+    t_xs = jnp.moveaxis(t_mat, 1, 0)
+    state_f, init_states = jax.lax.scan(step, state0, (d_xs, t_xs),
+                                        unroll=N if _flags.UNROLL_SCANS else 1)
+    init_states = jnp.moveaxis(init_states, 0, 1)  # (B,N,H,hd,hd)
+    out_inter = jnp.einsum("bnthd,bnhde->bnthe", r_t, init_states)
+    out = (out_intra + out_inter).reshape(B, S, H, hd)
+    return out, state_f
+
+
+def rwkv_apply(cfg: ModelConfig, p: Dict, x, *, cache: Optional[Dict] = None):
+    b, s, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    adt = jnp.dtype(cfg.activation_dtype)
+
+    # --- time mix ---
+    h = _norm(cfg, x, p, "ln1").astype(jnp.float32)
+    prev_tm = cache["shift1"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((b, 1, d), jnp.float32)
+    shifted = jnp.concatenate([prev_tm, h[:, :-1]], axis=1)
+    mix = jax.nn.sigmoid(p["mix_rkvwg"].astype(jnp.float32))  # (5, d)
+    def lerp(i):
+        return h + (shifted - h) * mix[i]
+    r = jnp.einsum("bsd,de->bse", lerp(0).astype(adt), p["wr"].astype(adt))
+    k = jnp.einsum("bsd,de->bse", lerp(1).astype(adt), p["wk"].astype(adt))
+    v = jnp.einsum("bsd,de->bse", lerp(2).astype(adt), p["wv"].astype(adt))
+    g = jnp.einsum("bsd,de->bse", lerp(4).astype(adt), p["wg"].astype(adt))
+    # data-dependent decay (Finch): w = exp(-softplus(base + lora(x)))
+    wdec = jax.nn.sigmoid(lerp(3) * p["w_decay"].astype(jnp.float32))
+    w = jnp.exp(-0.5 - 3.0 * wdec)  # in (0,1), data-dependent
+
+    rs = r.reshape(b, s, H, hd).astype(jnp.float32)
+    ks_ = k.reshape(b, s, H, hd).astype(jnp.float32)
+    vs = v.reshape(b, s, H, hd).astype(jnp.float32)
+    ws = w.reshape(b, s, H, hd)
+    state0 = cache["wkv"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((b, H, hd, hd), jnp.float32)
+    ub = p["u_bonus"].astype(jnp.float32)
+    if s == 1:
+        out, new_state = _wkv_scan(rs, ks_, vs, ws, ub, state0)
+    elif s % WKV_CHUNK == 0:
+        out, new_state = _wkv_chunked(rs, ks_, vs, ws, ub, state0)
+    else:
+        out, new_state = _wkv_scan(rs, ks_, vs, ws, ub, state0)
+    out = out.reshape(b, s, d)
+    out = out * jax.nn.silu(g.astype(jnp.float32))
+    x = x + jnp.einsum("bsd,de->bse", out.astype(adt),
+                       p["wo"].astype(adt)).astype(x.dtype)
+
+    # --- channel mix ---
+    h2 = _norm(cfg, x, p, "ln2").astype(jnp.float32)
+    prev_cm = cache["shift2"].astype(jnp.float32) if cache is not None else \
+        jnp.zeros((b, 1, d), jnp.float32)
+    shifted2 = jnp.concatenate([prev_cm, h2[:, :-1]], axis=1)
+    mix2 = jax.nn.sigmoid(p["cm_mix"].astype(jnp.float32))
+    hk = h2 + (shifted2 - h2) * mix2
+    kk = jnp.einsum("bsd,df->bsf", hk.astype(adt), p["cm_wk"].astype(adt))
+    kk = jnp.square(jnp.maximum(kk.astype(jnp.float32), 0.0)).astype(adt)
+    out2 = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"].astype(adt))
+    x = x + out2.astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "shift1": h[:, -1:].astype(cache["shift1"].dtype),
+            "shift2": h2[:, -1:].astype(cache["shift2"].dtype),
+            "wkv": new_state.astype(cache["wkv"].dtype),
+        }
+    return x, new_cache
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    return {
+        "shift1": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift2": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                         dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE sublayer
+# ---------------------------------------------------------------------------
+def ffn_init(cfg: ModelConfig, key, is_moe: bool) -> Dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict = {}
+    if is_moe:
+        m = cfg.moe
+        ks = jax.random.split(key, 5)
+        e, f = m.n_experts, m.d_ff_expert
+        p["router"] = dense_init(ks[0], (d, e), dtype=dt)
+        p["moe_gate"] = dense_init(ks[1], (e, d, f), dtype=dt)
+        p["moe_up"] = dense_init(ks[2], (e, d, f), dtype=dt)
+        p["moe_down"] = dense_init(
+            ks[3], (e, f, d), scale=1.0 / np.sqrt(f * 2 * cfg.n_layers),
+            dtype=dt)
+        if m.shared_expert:
+            ks2 = jax.random.split(ks[4], 3)
+            p["sh_gate"] = dense_init(ks2[0], (d, f), dtype=dt)
+            p["sh_up"] = dense_init(ks2[1], (d, f), dtype=dt)
+            p["sh_down"] = dense_init(
+                ks2[2], (f, d), scale=1.0 / np.sqrt(f * 2 * cfg.n_layers),
+                dtype=dt)
+    else:
+        f = cfg.d_ff
+        ks = jax.random.split(key, 3)
+        if cfg.act == "swiglu":
+            p["w_gate"] = dense_init(ks[0], (d, f), dtype=dt)
+            p["w_up"] = dense_init(ks[1], (d, f), dtype=dt)
+            p["w_down"] = dense_init(
+                ks[2], (f, d), scale=1.0 / np.sqrt(f * 2 * cfg.n_layers),
+                dtype=dt)
+        else:
+            p["w_in"] = dense_init(ks[0], (d, f), dtype=dt)
+            p["b_in"] = jnp.zeros((f,), dt)
+            p["w_out"] = dense_init(
+                ks[1], (f, d), scale=1.0 / np.sqrt(f * 2 * cfg.n_layers),
+                dtype=dt)
+            p["b_out"] = jnp.zeros((d,), dt)
+    p.update(_with_prefix(_norm_init(cfg, d), "ln"))
+    return p
+
+
+def ffn_apply(cfg: ModelConfig, p: Dict, x, is_moe: bool):
+    adt = jnp.dtype(cfg.activation_dtype)
+    h = _norm(cfg, x, p, "ln").astype(adt)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        m = cfg.moe
+        shared = None
+        if m.shared_expert:
+            shared = {"w_gate": p["sh_gate"].astype(adt),
+                      "w_up": p["sh_up"].astype(adt),
+                      "w_down": p["sh_down"].astype(adt)}
+        out, aux = moe_block(
+            h, p["router"], p["moe_gate"].astype(adt),
+            p["moe_up"].astype(adt), p["moe_down"].astype(adt),
+            top_k=m.top_k, capacity_factor=m.capacity_factor, shared=shared,
+            dispatch=cfg.moe_dispatch)
+    elif cfg.act == "swiglu":
+        out = swiglu(h, p["w_gate"].astype(adt), p["w_up"].astype(adt),
+                     p["w_down"].astype(adt))
+    else:
+        out = gelu_mlp(h, p["w_in"].astype(adt), p["b_in"].astype(adt),
+                       p["w_out"].astype(adt), p["b_out"].astype(adt))
+    return x + out.astype(x.dtype), aux

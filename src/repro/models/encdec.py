@@ -1,0 +1,222 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, D) from ``input_specs``. Encoder:
+bidirectional self-attention stack; decoder: causal self-attention +
+cross-attention + FFN. Decode caches both the self-attn KV and the
+projected encoder memory K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import _flags, blocks
+from .layers import dense_init, layer_norm, rms_norm
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        # Megatron-style vocab padding (see TransformerLM)
+        self.vocab_padded = -(-cfg.vocab // 256) * 256
+
+    def _maybe_remat(self, fn):
+        return jax.checkpoint(fn) if self.remat else fn
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        dt = jnp.dtype(cfg.param_dtype)
+        params: Dict = {
+            "embed": dense_init(ks[0], (self.vocab_padded, cfg.d_model),
+                                scale=1.0, dtype=dt),
+            "frame_proj": dense_init(ks[1], (cfg.d_model, cfg.d_model),
+                                     dtype=dt),
+        }
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {"attn": blocks.attn_init(cfg, k1),
+                    "ffn": blocks.ffn_init(cfg, k2, False)}
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"attn": blocks.attn_init(cfg, k1),
+                    "cross": blocks.attn_init(cfg, k2),
+                    "ffn": blocks.ffn_init(cfg, k3, False)}
+
+        params["encoder"] = jax.vmap(enc_layer)(
+            jax.random.split(ks[2], cfg.n_encoder_layers))
+        params["decoder"] = jax.vmap(dec_layer)(
+            jax.random.split(ks[3], cfg.n_layers))
+        params["final_scale"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.norm == "layernorm":
+            params["final_bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["lm_head"] = dense_init(
+            ks[4], (cfg.d_model, self.vocab_padded), dtype=dt)
+        return params
+
+    # ------------------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.activation_dtype)
+        x = jnp.einsum("btd,de->bte", frames.astype(adt),
+                       params["frame_proj"].astype(adt))
+
+        def body(x, p):
+            def blk(p_, x_):
+                x_, _ = blocks.attn_apply(cfg, p_["attn"], x_, window=None,
+                                          causal=False)
+                x_, _ = blocks.ffn_apply(cfg, p_["ffn"], x_, False)
+                return x_
+            return self._maybe_remat(blk)(p, x), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"],
+                            unroll=self.cfg.n_encoder_layers
+                            if _flags.UNROLL_SCANS else 1)
+        return x
+
+    def _cross_kv(self, cfg, p, memory):
+        adt = jnp.dtype(cfg.activation_dtype)
+        b, t, _ = memory.shape
+        hd = cfg.head_dim
+        k = jnp.einsum("btd,dh->bth", memory, p["wk"].astype(adt)
+                       ).reshape(b, t, cfg.n_kv_heads, hd)
+        v = jnp.einsum("btd,dh->bth", memory, p["wv"].astype(adt)
+                       ).reshape(b, t, cfg.n_kv_heads, hd)
+        return k, v
+
+    def _decoder_stack(self, params, x, memory, cache=None, pos=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            x = carry
+            p = xs[0]
+            c = xs[1] if cache is not None else None
+            if c is None:
+                def blk(p_, x_, mem_):
+                    x_, _ = blocks.attn_apply(cfg, p_["attn"], x_,
+                                              window=None)
+                    kv_ = self._cross_kv(cfg, p_["cross"], mem_)
+                    x_, _ = blocks.attn_apply(cfg, p_["cross"], x_,
+                                              window=None, kv_override=kv_)
+                    x_, _ = blocks.ffn_apply(cfg, p_["ffn"], x_, False)
+                    return x_
+                return self._maybe_remat(blk)(p, x, memory), {}
+            ac = {"k": c["k"], "v": c["v"], "pos": pos}
+            x, nc = blocks.attn_apply(cfg, p["attn"], x, window=None,
+                                      cache=ac)
+            kv = (c["ck"], c["cv"])
+            x, _ = blocks.attn_apply(cfg, p["cross"], x, window=None,
+                                     kv_override=kv)
+            x, _ = blocks.ffn_apply(cfg, p["ffn"], x, False)
+            new_c = {"k": nc["k"], "v": nc["v"], "ck": kv[0], "cv": kv[1]}
+            return x, new_c
+
+        if cache is not None:
+            x, new_caches = jax.lax.scan(body, x,
+                                         (params["decoder"], cache["layers"]))
+            return x, new_caches
+        x, _ = jax.lax.scan(body, x, (params["decoder"],),
+                            unroll=self.cfg.n_layers
+                            if _flags.UNROLL_SCANS else 1)
+        return x, None
+
+    def _final(self, params, x):
+        cfg = self.cfg
+        if cfg.norm == "rmsnorm":
+            x = rms_norm(x, params["final_scale"])
+        else:
+            x = layer_norm(x, params["final_scale"] + 1.0,
+                           params["final_bias"])
+        adt = jnp.dtype(cfg.activation_dtype)
+        from .layers import psc
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(adt),
+                            params["lm_head"].astype(adt))
+        logits = psc(logits, "batch", None, "model")
+        if self.vocab_padded != cfg.vocab:
+            pad_mask = jnp.arange(self.vocab_padded) >= cfg.vocab
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                               logits)
+        return logits
+
+    def forward(self, params, batch: Dict):
+        memory = self.encode(params, batch["frames"])
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+            jnp.dtype(self.cfg.activation_dtype))
+        x, _ = self._decoder_stack(params, x, memory)
+        return self._final(params, x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch: Dict):
+        logits, _ = self.forward(params, batch)
+        targets = batch["tokens"][:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - tgt)
+
+    # -- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16,
+                   t_enc: int = None) -> Dict:
+        cfg = self.cfg
+        t_enc = t_enc or cfg.n_stub_tokens
+        hd = cfg.head_dim
+        L = cfg.n_layers
+
+        def zeros(shape):
+            return jnp.zeros(shape, dtype)
+
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "layers": {
+                "k": zeros((L, batch, max_seq, cfg.n_kv_heads, hd)),
+                "v": zeros((L, batch, max_seq, cfg.n_kv_heads, hd)),
+                "ck": zeros((L, batch, t_enc, cfg.n_kv_heads, hd)),
+                "cv": zeros((L, batch, t_enc, cfg.n_kv_heads, hd)),
+            },
+        }
+
+    def prefill_cache(self, params, cache, frames):
+        """Project encoder memory into per-layer cross K/V."""
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+
+        def per_layer(p):
+            return self._cross_kv(cfg, p["cross"], memory)
+
+        ck, cv = jax.vmap(per_layer)(params["decoder"])
+        cache["layers"]["ck"] = ck.astype(cache["layers"]["ck"].dtype)
+        cache["layers"]["cv"] = cv.astype(cache["layers"]["cv"].dtype)
+        return cache
+
+    def decode_step(self, params, cache: Dict, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(cfg.activation_dtype))
+        pos = cache["pos"]
+
+        def body(x, xs):
+            p, c = xs
+            ac = {"k": c["k"], "v": c["v"], "pos": pos}
+            x, nc = blocks.attn_apply(cfg, p["attn"], x, window=None,
+                                      cache=ac)
+            kv = (c["ck"].astype(x.dtype), c["cv"].astype(x.dtype))
+            x, _ = blocks.attn_apply(cfg, p["cross"], x, window=None,
+                                     kv_override=kv)
+            x, _ = blocks.ffn_apply(cfg, p["ffn"], x, False)
+            return x, {"k": nc["k"], "v": nc["v"], "ck": c["ck"],
+                       "cv": c["cv"]}
+
+        x, new_layers = jax.lax.scan(body, x,
+                                     (params["decoder"], cache["layers"]),
+                                     unroll=self.cfg.n_layers
+                                     if _flags.UNROLL_SCANS else 1)
+        logits = self._final(params, x)
+        return logits, {"pos": pos + tokens.shape[1], "layers": new_layers}

@@ -1,0 +1,57 @@
+"""Model registry: config -> model instance + input_specs builder."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+from .encdec import EncDecLM
+from .transformer import TransformerLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return TransformerLM(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: int = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "decode":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    else:
+        s_tok = S
+        if cfg.n_stub_tokens and cfg.family in ("vlm",):
+            s_tok = S - cfg.n_stub_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_tok), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["stub_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_stub_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_stub_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def example_batch(cfg: ModelConfig, shape_name: str, batch: int, seq: int,
+                  seed: int = 0) -> Dict[str, np.ndarray]:
+    """Small concrete batch for smoke tests."""
+    rng = np.random.default_rng(seed)
+    batch_d: Dict[str, np.ndarray] = {}
+    batch_d["tokens"] = rng.integers(0, cfg.vocab, (batch, seq),
+                                     dtype=np.int32)
+    if cfg.family == "vlm":
+        batch_d["stub_embeds"] = rng.standard_normal(
+            (batch, cfg.n_stub_tokens, cfg.d_model)).astype(np.float32)
+    if cfg.family == "encdec":
+        batch_d["frames"] = rng.standard_normal(
+            (batch, cfg.n_stub_tokens, cfg.d_model)).astype(np.float32)
+    return batch_d

@@ -1,0 +1,298 @@
+"""Decoder-only LM covering dense / GQA / RoPE / MoE / local-global /
+hybrid(Mamba) / RWKV / VLM-stub families through one scan-based layer
+schedule.
+
+Layers are grouped into a *period* of structurally-distinct positions
+(e.g. jamba: 1 attention + 7 mamba; gemma3: 5 local + 1 global; MoE
+every-k). Parameters for each period position are stacked over periods and
+the model scans over periods — one lowered layer body per position
+regardless of depth, keeping dry-run HLO compact at 61-72 layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import _flags, blocks
+from .layers import dense_init, layer_norm, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str                    # attn | mamba | rwkv
+    is_moe: bool = False
+    window: Optional[int] = None
+
+
+def build_schedule(cfg: ModelConfig) -> Tuple[List[BlockSpec], int,
+                                              List[BlockSpec]]:
+    """Returns (period_specs, n_periods, tail_specs)."""
+    def pos_spec(i: int) -> BlockSpec:
+        if cfg.family == "ssm":
+            return BlockSpec("rwkv")
+        kind = "attn"
+        if cfg.hybrid_period:
+            kind = "attn" if i % cfg.hybrid_period == cfg.hybrid_attn_index \
+                else "mamba"
+        is_moe = bool(cfg.moe) and (i % cfg.moe.moe_every
+                                    == cfg.moe.moe_every - 1)
+        window = None
+        if cfg.local_global_ratio and kind == "attn":
+            l, g = cfg.local_global_ratio
+            if (i % (l + g)) < l:
+                window = cfg.window
+        elif cfg.window and kind == "attn":
+            window = cfg.window
+        return BlockSpec(kind, is_moe, window)
+
+    period = 1
+    if cfg.hybrid_period:
+        period = np.lcm(period, cfg.hybrid_period)
+    if cfg.moe:
+        period = np.lcm(period, cfg.moe.moe_every)
+    if cfg.local_global_ratio:
+        period = np.lcm(period, sum(cfg.local_global_ratio))
+    period = int(period)
+    n_periods = cfg.n_layers // period
+    remainder = cfg.n_layers - n_periods * period
+    period_specs = [pos_spec(i) for i in range(period)]
+    tail_specs = [pos_spec(n_periods * period + i) for i in range(remainder)]
+    return period_specs, n_periods, tail_specs
+
+
+def _block_init(cfg: ModelConfig, spec: BlockSpec, key) -> Dict:
+    p = {}
+    k1, k2 = jax.random.split(key)
+    if spec.kind == "attn":
+        p["attn"] = blocks.attn_init(cfg, k1)
+        p["ffn"] = blocks.ffn_init(cfg, k2, spec.is_moe)
+    elif spec.kind == "mamba":
+        p["mamba"] = blocks.mamba_init(cfg, k1)
+        p["ffn"] = blocks.ffn_init(cfg, k2, spec.is_moe)
+    elif spec.kind == "rwkv":
+        p["rwkv"] = blocks.rwkv_init(cfg, k1)
+    return p
+
+
+def _block_apply(cfg: ModelConfig, spec: BlockSpec, p: Dict, x, *,
+                 cache: Optional[Dict] = None, pos=None):
+    """Returns (x, aux, new_cache)."""
+    new_cache = {}
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "attn":
+        c = None
+        if cache is not None:
+            c = {"k": cache["k"], "v": cache["v"], "pos": pos}
+        x, nc = blocks.attn_apply(cfg, p["attn"], x, window=spec.window,
+                                  cache=c)
+        if nc is not None:
+            new_cache = {"k": nc["k"], "v": nc["v"]}
+        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe)
+    elif spec.kind == "mamba":
+        x, nc = blocks.mamba_apply(cfg, p["mamba"], x, cache=cache)
+        if nc is not None:
+            new_cache = nc
+        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe)
+    elif spec.kind == "rwkv":
+        x, nc = blocks.rwkv_apply(cfg, p["rwkv"], x, cache=cache)
+        if nc is not None:
+            new_cache = nc
+    return x, aux, new_cache
+
+
+def _block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                      max_seq: int, dtype) -> Dict:
+    if spec.kind == "attn":
+        c = blocks.attn_cache_init(cfg, batch, max_seq, dtype)
+        return {"k": c["k"], "v": c["v"]}
+    if spec.kind == "mamba":
+        return blocks.mamba_cache_init(cfg, batch)
+    if spec.kind == "rwkv":
+        return blocks.rwkv_cache_init(cfg, batch)
+    return {}
+
+
+class TransformerLM:
+    """Families: dense | moe | ssm(rwkv) | hybrid | vlm."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = False):
+        self.cfg = cfg
+        #: per-layer activation checkpointing: the scan stores only the
+        #: layer-boundary activations; attention/FFN internals recompute in
+        #: the backward pass (required to fit train_4k at 256 chips).
+        self.remat = remat
+        #: Megatron-style vocab padding: the embedding/lm_head vocab dim is
+        #: padded to a multiple of 256 so it shards over the model axis
+        #: (granite's 49155 etc.); padded logits are masked to -inf.
+        self.vocab_padded = -(-cfg.vocab // 256) * 256
+        self.period_specs, self.n_periods, self.tail_specs = \
+            build_schedule(cfg)
+
+    def _apply_block(self, spec, p, x, **kw):
+        if self.remat and not kw.get("cache"):
+            fn = jax.checkpoint(
+                lambda p_, x_: _block_apply(self.cfg, spec, p_, x_)[:2])
+            x, aux = fn(p, x)
+            return x, aux, {}
+        return _block_apply(self.cfg, spec, p, x, **kw)
+
+    # -- parameters ------------------------------------------------------
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        dt = jnp.dtype(cfg.param_dtype)
+        params: Dict = {
+            "embed": dense_init(keys[0], (self.vocab_padded, cfg.d_model),
+                                scale=1.0, dtype=dt),
+        }
+        body = []
+        for pi, spec in enumerate(self.period_specs):
+            pk = jax.random.split(jax.random.fold_in(keys[1], pi),
+                                  self.n_periods)
+            body.append(jax.vmap(
+                functools.partial(_block_init, cfg, spec))(pk))
+        params["body"] = body
+        params["tail"] = [
+            _block_init(cfg, spec, jax.random.fold_in(keys[2], i))
+            for i, spec in enumerate(self.tail_specs)]
+        params["final_scale"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if cfg.norm == "layernorm":
+            params["final_bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                keys[3], (cfg.d_model, self.vocab_padded), dtype=dt)
+        if cfg.n_stub_tokens:
+            params["stub_proj"] = dense_init(keys[4],
+                                             (cfg.d_model, cfg.d_model),
+                                             dtype=dt)
+        return params
+
+    # -- forward ----------------------------------------------------------
+    def _final_norm(self, params, x):
+        if self.cfg.norm == "rmsnorm":
+            return rms_norm(x, params["final_scale"])
+        return layer_norm(x, params["final_scale"] + 1.0,
+                          params["final_bias"])
+
+    def _logits(self, params, x):
+        from .layers import psc
+        adt = jnp.dtype(self.cfg.activation_dtype)
+        head = params["embed"].T if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(adt), head.astype(adt))
+        logits = psc(logits, "batch", None, "model")
+        if self.cfg.tie_embeddings:  # gemma-style tied-head scaling
+            logits = logits * np.float32(1.0 / np.sqrt(self.cfg.d_model)
+                                         ).astype(logits.dtype)
+        if self.vocab_padded != self.cfg.vocab:
+            pad_mask = jnp.arange(self.vocab_padded) >= self.cfg.vocab
+            logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                               logits)
+        return logits
+
+    def embed_tokens(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0).astype(
+            jnp.dtype(self.cfg.activation_dtype))
+
+    def forward(self, params, batch: Dict):
+        """batch: {'tokens': (B,S) int32, optional 'stub_embeds':
+        (B, n_stub, D)} -> (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, batch["tokens"])
+        if cfg.n_stub_tokens and "stub_embeds" in batch:
+            stub = batch["stub_embeds"].astype(x.dtype)
+            stub = jnp.einsum("bsd,de->bse", stub,
+                              params["stub_proj"].astype(x.dtype))
+            x = jnp.concatenate([stub, x], axis=1)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        from .layers import psc
+
+        def period_body(carry, xs):
+            x, aux = carry
+            for pi, spec in enumerate(self.period_specs):
+                x, a, _ = self._apply_block(spec, xs[pi], x)
+                # sequence parallelism: layer-boundary activations shard
+                # their sequence dim over 'model'; GSPMD all-gathers for
+                # attention and reduce-scatters after (Megatron-SP).
+                x = psc(x, "batch", "seq_model", None)
+                aux = aux + a
+            return (x, aux), None
+
+        if self.n_periods > 0:
+            (x, aux_total), _ = jax.lax.scan(
+                period_body, (x, aux_total), tuple(params["body"]),
+                length=self.n_periods,
+                unroll=self.n_periods if _flags.UNROLL_SCANS else 1)
+        for spec, p in zip(self.tail_specs, params["tail"]):
+            x, a, _ = self._apply_block(spec, p, x)
+            aux_total = aux_total + a
+        x = self._final_norm(params, x)
+        logits = self._logits(params, x)
+        if cfg.n_stub_tokens and "stub_embeds" in batch:
+            logits = logits[:, cfg.n_stub_tokens:]
+        return logits, aux_total
+
+    def loss(self, params, batch: Dict):
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        targets = tokens[:, 1:]
+        lg = logits[:, :-1].astype(jnp.float32)
+        # logsumexp-form CE: avoids a second (B,S,V) log-probability buffer
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+        nll = lse - tgt
+        return jnp.mean(nll) + 0.01 * aux
+
+    # -- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Dict:
+        cfg = self.cfg
+        cache: Dict = {"pos": jnp.zeros((), jnp.int32), "body": [], "tail": []}
+        for spec in self.period_specs:
+            one = _block_cache_init(cfg, spec, batch, max_seq, dtype)
+            cache["body"].append(jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.n_periods,) + x.shape), one))
+        for spec in self.tail_specs:
+            cache["tail"].append(
+                _block_cache_init(cfg, spec, batch, max_seq, dtype))
+        return cache
+
+    def decode_step(self, params, cache: Dict, tokens):
+        """tokens: (B, 1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        pos = cache["pos"]
+
+        def period_body(x, xs):
+            p_slice, c_slice = xs
+            new_cs = []
+            for pi, spec in enumerate(self.period_specs):
+                x, _, nc = _block_apply(cfg, spec, p_slice[pi], x,
+                                        cache=c_slice[pi], pos=pos)
+                new_cs.append(nc)
+            return x, tuple(new_cs)
+
+        new_cache: Dict = {"pos": pos + tokens.shape[1], "body": [],
+                           "tail": []}
+        if self.n_periods > 0:
+            x, new_body = jax.lax.scan(
+                period_body, x,
+                (tuple(params["body"]), tuple(cache["body"])),
+                length=self.n_periods,
+                unroll=self.n_periods if _flags.UNROLL_SCANS else 1)
+            new_cache["body"] = list(new_body)
+        for spec, p, c in zip(self.tail_specs, params["tail"],
+                              cache["tail"]):
+            x, _, nc = _block_apply(cfg, spec, p, x, cache=c, pos=pos)
+            new_cache["tail"].append(nc)
+        x = self._final_norm(params, x)
+        logits = self._logits(params, x)
+        return logits, new_cache

@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adafactor, adamw, clip_by_global_norm,
+                         get_optimizer, global_norm, warmup_cosine)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "clip_by_global_norm",
+           "get_optimizer", "global_norm", "warmup_cosine"]

@@ -1,0 +1,5 @@
+from .cluster_sim import FaultPlan, SimulatedCluster
+from .trainer import HeartbeatMonitor, Trainer, TrainerConfig
+
+__all__ = ["FaultPlan", "SimulatedCluster", "HeartbeatMonitor", "Trainer",
+           "TrainerConfig"]

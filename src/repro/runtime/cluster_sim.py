@@ -1,0 +1,80 @@
+"""Simulated cluster for fault-tolerance tests.
+
+A SimulatedCluster drives N logical hosts through training steps, injecting
+failures (host death at step k) and stragglers (slow host with factor f).
+It validates the control-plane behavior the real deployment relies on:
+detection -> checkpoint restore -> (optionally) elastic mesh shrink ->
+bit-exact continuation thanks to the counter-based data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .trainer import HeartbeatMonitor
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    die_at_step: Optional[int] = None
+    die_host: int = 0
+    straggle_host: Optional[int] = None
+    straggle_factor: float = 3.0
+
+
+class SimulatedCluster:
+    def __init__(self, n_hosts: int, step_time_s: float = 0.01,
+                 plan: FaultPlan = None,
+                 deadline_s: float = 1.0, straggler_factor: float = 2.0):
+        self.n_hosts = n_hosts
+        self.step_time_s = step_time_s
+        self.plan = plan or FaultPlan()
+        self.monitor = HeartbeatMonitor(deadline_s, straggler_factor)
+        self.restarts: List[Dict] = []
+        self.step_log: List[Dict] = []
+
+    def host_step_duration(self, host: int, step: int) -> float:
+        if (self.plan.die_at_step is not None
+                and step >= self.plan.die_at_step
+                and host == self.plan.die_host):
+            return float("inf")  # never heartbeats
+        base = self.step_time_s
+        if self.plan.straggle_host == host:
+            base *= self.plan.straggle_factor
+        return base * (1.0 + 0.01 * ((host * 2654435761 + step) % 7))
+
+    def run(self, n_steps: int, do_step: Callable[[int], None],
+            save_ckpt: Callable[[int], None],
+            restore_ckpt: Callable[[], int],
+            checkpoint_every: int = 5) -> Dict:
+        """do_step(step) performs real training work; the simulation layers
+        cluster behavior around it."""
+        step = 0
+        alive = set(range(self.n_hosts))
+        while step < n_steps:
+            durations = {h: self.host_step_duration(h, step) for h in alive}
+            slowest = max(durations.values())
+            if slowest == float("inf"):
+                # failure detected via missed heartbeat -> restart cycle
+                dead = [h for h, d in durations.items() if d == float("inf")]
+                restart_from = restore_ckpt()
+                self.restarts.append({"step": step, "dead_hosts": dead,
+                                      "resumed_from": restart_from,
+                                      "new_n_hosts": self.n_hosts - len(dead)})
+                alive -= set(dead)  # elastic: continue on fewer hosts
+                self.plan.die_at_step = None
+                step = restart_from
+                continue
+            for h, d in durations.items():
+                status = self.monitor.record(h, d)
+            do_step(step)
+            self.step_log.append({"step": step, "t": slowest})
+            step += 1
+            if step % checkpoint_every == 0:
+                save_ckpt(step)
+        return {"restarts": self.restarts,
+                "straggler_events": [e for e in self.monitor.events
+                                     if e[0] == "straggler"],
+                "steps_run": len(self.step_log)}

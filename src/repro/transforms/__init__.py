@@ -1,0 +1,12 @@
+"""Mid-level transformations (paper §3.2), adapted to TPU."""
+from .base import Transformation
+from .device_offload import DeviceOffload
+from .input_to_constant import InputToConstant
+from .map_tiling import MapTiling
+from .streaming import StreamingComposition, StreamingMemory
+from .vectorization import Vectorization
+
+__all__ = [
+    "Transformation", "DeviceOffload", "InputToConstant", "MapTiling",
+    "StreamingComposition", "StreamingMemory", "Vectorization",
+]

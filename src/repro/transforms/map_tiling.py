@@ -1,0 +1,66 @@
+"""MapTiling: split a map dimension into (tile, intra-tile) — the
+platform-agnostic transformation the paper lists among the DaCe toolbox
+(§3.2), used on TPU to align block shapes with VMEM capacity.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from ..core.memlet import Range
+from ..core.sdfg import MapEntry, SDFG
+from ..core.symbolic import Expr, sym
+from .base import Transformation
+
+
+class MapTiling(Transformation):
+    def __init__(self, tile_size: int = 128, map_label: str = None):
+        self.tile_size = tile_size
+        self.map_label = map_label
+
+    def find_matches(self, sdfg: SDFG, tile_size: int = None,
+                     map_label: str = None, **kwargs):
+        ts = tile_size or self.tile_size
+        label = map_label or self.map_label
+        for st in sdfg.states:
+            for node in st.nodes:
+                if not isinstance(node, MapEntry):
+                    continue
+                m = node.map
+                if label and not m.label.startswith(label):
+                    continue
+                if len(m.params) != 1 or m.label.endswith("_tiled"):
+                    continue
+                r = m.ranges[0]
+                try:
+                    n = r.size.evaluate(sdfg.symbol_values)
+                except Exception:
+                    continue
+                if n % ts == 0 and n > ts:
+                    yield {"state": st, "entry": node, "tile": ts}
+
+    def apply_match(self, sdfg: SDFG, match: Dict):
+        st, entry, ts = match["state"], match["entry"], match["tile"]
+        m = entry.map
+        p = m.params[0]
+        lo = m.ranges[0].start
+        n = m.ranges[0].size
+        pt, pi = f"{p}_tile", f"{p}_in"
+        m.params = [pt, pi]
+        m.ranges = [Range.make(0, n / ts), Range.make(0, ts)]
+        m.label += "_tiled"
+        # rewrite memlets in the scope: p -> lo + p_tile*ts + p_in
+        repl = {p: lo + sym(pt) * ts + sym(pi)}
+        scopes = st.scope_children()
+        stack = list(scopes.get(entry, []))
+        nodes = {entry} | set(stack)
+        while stack:
+            nd = stack.pop()
+            if isinstance(nd, MapEntry):
+                for child in scopes.get(nd, []):
+                    if child not in nodes:
+                        nodes.add(child)
+                        stack.append(child)
+        for e in st.edges:
+            if e.src in nodes or e.dst in nodes:
+                if e.memlet.subset is not None:
+                    e.memlet.subset = e.memlet.subset.subs(repl)

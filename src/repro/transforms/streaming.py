@@ -1,0 +1,278 @@
+"""StreamingMemory and StreamingComposition (paper §3.2.2-§3.2.3).
+
+StreamingMemory extracts reads/writes of off-chip containers into dedicated
+streaming accessor components (on FPGA: burst readers; on TPU: the
+HBM->VMEM pipeline stage that Pallas double-buffers). It does not change
+off-chip volume — it restructures access for bandwidth.
+
+StreamingComposition fuses consecutive computations through a stream when
+the producer's write order equals the consumer's read order, removing the
+off-chip round-trip entirely: the container becomes a VMEM stream and its
+2x HBM volume disappears. This is the transformation behind the paper's
+headline Table-1/2/3 gains.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import networkx as nx
+
+from ..core.dtypes import StorageType
+from ..core.memlet import Memlet
+from ..core.sdfg import (AccessNode, Array, LibraryNode, MapEntry, MapExit,
+                         Scalar, SDFG, State, Stream, Tasklet)
+from .base import Transformation
+
+
+def _access_order_key(state: State, edge, endpoint: str):
+    """Canonical access-order key for a producer/consumer edge.
+
+    For edges into/out of map scopes, the key combines the scope's
+    iteration ranges with the memlet's index expressions, both canonicalized
+    over positional parameters (paper §3.2.3: 'canonicalizing the memlets'
+    symbolic expressions by remapping symbol names to indices'). For
+    whole-array accesses the key is ('FULL', shape).
+    """
+    node = edge.src if endpoint == "producer" else edge.dst
+    scope_map = None
+    if endpoint == "producer" and isinstance(node, MapExit):
+        scope_map = node.map
+    if endpoint == "consumer" and isinstance(node, MapEntry):
+        scope_map = node.map
+    memlet = edge.memlet
+    if scope_map is None:
+        return ("FULL",)
+    params = scope_map.params
+    env = {p: f"__i{k}" for k, p in enumerate(params)}
+    ranges = tuple((r.start.subs(env), r.stop.subs(env), r.step.subs(env))
+                   for r in scope_map.ranges)
+    # find the inner memlet (through the scope) for the same data
+    inner = None
+    if endpoint == "producer":
+        for e in state.in_edges(node):
+            if e.memlet.data == memlet.data:
+                inner = e.memlet
+                break
+    else:
+        for e in state.out_edges(node):
+            if e.memlet.data == memlet.data:
+                inner = e.memlet
+                break
+    if inner is None or inner.subset is None:
+        return ("FULL",)
+    order = inner.access_order(params)
+    return (ranges, order)
+
+
+class StreamingComposition(Transformation):
+    """array node with in-degree 1 / out-degree 1 and matching access
+    orders -> convert the container into a VMEM stream."""
+
+    def find_matches(self, sdfg: SDFG, **kwargs):
+        counts: Dict[str, int] = {}
+        for st in sdfg.states:
+            for node in st.data_nodes():
+                counts[node.data] = counts.get(node.data, 0) + 1
+        for st in sdfg.states:
+            for node in st.data_nodes():
+                desc = sdfg.arrays[node.data]
+                if (desc.transient and isinstance(desc, Array)
+                        and not isinstance(desc, Stream)
+                        and not isinstance(desc, Scalar)
+                        and st.in_degree(node) == 1
+                        and st.out_degree(node) == 1
+                        and counts[node.data] == 1):
+                    yield {"state": st, "node": node}
+
+    def can_apply(self, sdfg: SDFG, match: Dict) -> bool:
+        st, node = match["state"], match["node"]
+        if node not in st.graph:
+            return False
+        if node.data in sdfg.metadata.get("pin_hbm", ()):
+            return False  # performance engineer pinned it off-chip
+        desc = sdfg.arrays[node.data]
+        if isinstance(desc, Stream):
+            return False
+        in_e = st.in_edges(node)[0]
+        out_e = st.out_edges(node)[0]
+        prod_key = _access_order_key(st, in_e, "producer")
+        cons_key = _access_order_key(st, out_e, "consumer")
+        return prod_key == cons_key
+
+    def apply_match(self, sdfg: SDFG, match: Dict):
+        st, node = match["state"], match["node"]
+        desc: Array = sdfg.arrays[node.data]
+        sdfg.arrays[node.data] = Stream(
+            dtype=desc.dtype, storage=StorageType.VMEM, transient=True,
+            buffer_size=4, shape=(), element_shape=tuple(desc.shape),
+            total_volume=desc.num_elements)
+        # split into producer-side and consumer-side access nodes: the two
+        # PEs hold no dataflow edge, synchronizing only through the stream
+        # container (paper §2.5 / Fig. 3)
+        out_e = st.out_edges(node)[0]
+        consumer_side = st.add_access(node.data)
+        st.add_edge(consumer_side, None, out_e.dst, out_e.dst_conn,
+                    out_e.memlet)
+        st.remove_edge(out_e)
+
+
+class StreamingMemory(Transformation):
+    """Extract off-chip reads/writes into streaming accessor components.
+
+    Reads: for each HBM access node feeding computation, insert a reader
+    tasklet (memory -> stream) and redirect the consumer to the stream.
+    Multiple consumers with the same access order share one reader with
+    multiple output streams (paper: broadcast); dependent accesses get
+    separate components (deadlock avoidance via reachability).
+    """
+
+    def find_matches(self, sdfg: SDFG, **kwargs):
+        for st in sdfg.states:
+            for node in st.data_nodes():
+                desc = sdfg.arrays[node.data]
+                if isinstance(desc, (Stream, Scalar)) or not isinstance(desc, Array):
+                    continue
+                if not desc.storage.off_chip:
+                    continue
+                if sdfg.metadata.get("streamed_" + node.data):
+                    continue
+                reads = [e for e in st.out_edges(node)
+                         if not isinstance(e.dst, AccessNode)]
+                writes = [e for e in st.in_edges(node)
+                          if not isinstance(e.src, AccessNode)]
+                if reads:
+                    yield {"state": st, "node": node, "edges": reads,
+                           "mode": "read"}
+                if writes:
+                    yield {"state": st, "node": node, "edges": writes,
+                           "mode": "write"}
+
+    def can_apply(self, sdfg: SDFG, match: Dict) -> bool:
+        return match["node"] in match["state"].graph and not \
+            sdfg.metadata.get("streamed_" + match["node"].data + "_" +
+                              match["mode"])
+
+    def apply_match(self, sdfg: SDFG, match: Dict):
+        st: State = match["state"]
+        node: AccessNode = match["node"]
+        desc: Array = sdfg.arrays[node.data]
+        mode = match["mode"]
+        sdfg.metadata["streamed_" + node.data + "_" + mode] = True
+
+        # group consumer/producer edges by access order; dependent groups
+        # (reachability between endpoints) are kept separate
+        groups: List[List] = []
+        for e in match["edges"]:
+            key = _access_order_key(
+                st, e, "consumer" if mode == "read" else "producer")
+            placed = False
+            for g in groups:
+                if g[0][0] == key and not self._dependent(st, g[0][1], e):
+                    g.append((key, e))
+                    placed = True
+                    break
+            if not placed:
+                groups.append([(key, e)])
+
+        for gi, group in enumerate(groups):
+            stream_names = []
+            for si, (_, e) in enumerate(group):
+                sname = f"{node.data}_{mode}_stream"
+                if gi or si:
+                    sname += f"_{gi}_{si}"
+                base = sname
+                k = 0
+                while sname in sdfg.arrays:
+                    k += 1
+                    sname = f"{base}_{k}"
+                sdfg.add_stream(sname, desc.dtype, buffer_size=4,
+                                element_shape=tuple(desc.shape),
+                                total_volume=desc.num_elements,
+                                storage=StorageType.VMEM)
+                stream_names.append(sname)
+            if mode == "read":
+                # reader PE: mem -> stream(s)  (paper red/black boxes, Fig. 3)
+                reader = st.add_tasklet(
+                    f"read_{node.data}" + (f"_{gi}" if gi else ""),
+                    ["mem"], [f"s{k}" for k in range(len(group))],
+                    (lambda n_out: (lambda mem: {f"s{k}": mem for k in
+                                                 range(n_out)}))(len(group)))
+                st.add_edge(node, None, reader, "mem",
+                            Memlet.simple(node.data,
+                                          volume=desc.num_elements))
+                for k, ((key, e), sname) in enumerate(zip(group, stream_names)):
+                    s_prod = st.add_access(sname)   # producer-side node
+                    s_cons = st.add_access(sname)   # consumer-side node (no
+                    #                       edge between PEs, paper Fig. 3)
+                    st.add_edge(reader, f"s{k}", s_prod, None,
+                                Memlet.simple(sname,
+                                              volume=desc.num_elements))
+                    st.add_edge(s_cons, None, e.dst, e.dst_conn,
+                                self._retarget(e.memlet, sname))
+                    self._retarget_scope(st, e.dst, node.data, sname)
+                    st.remove_edge(e)
+            else:
+                # writer PE: stream -> mem (paper blue box)
+                writer = st.add_tasklet(
+                    f"write_{node.data}" + (f"_{gi}" if gi else ""),
+                    [f"s{k}" for k in range(len(group))], ["mem"],
+                    (lambda n_in: (lambda **kw: {"mem": kw["s0"]}))(len(group)))
+                st.add_edge(writer, "mem", node, None,
+                            Memlet.simple(node.data,
+                                          volume=desc.num_elements))
+                for k, ((key, e), sname) in enumerate(zip(group, stream_names)):
+                    s_prod = st.add_access(sname)
+                    s_cons = st.add_access(sname)
+                    st.add_edge(e.src, e.src_conn, s_prod, None,
+                                self._retarget(e.memlet, sname))
+                    st.add_edge(s_cons, None, writer, f"s{k}",
+                                Memlet.simple(sname,
+                                              volume=desc.num_elements))
+                    self._retarget_scope(st, e.src, node.data, sname)
+                    st.remove_edge(e)
+
+    @staticmethod
+    def _retarget(memlet: Memlet, new_data: str) -> Memlet:
+        return Memlet(data=new_data, subset=memlet.subset,
+                      volume=memlet.volume, wcr=memlet.wcr)
+
+    @staticmethod
+    def _retarget_scope(st: State, scope_node, old: str, new: str):
+        """Rewrite memlets inside a map scope that reference the old
+        container (reads through OUT_<old> connectors)."""
+        if not isinstance(scope_node, (MapEntry, MapExit)):
+            return
+        stack = [scope_node]
+        seen = set()
+        while stack:
+            n = stack.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            for e in st.out_edges(n):
+                if e.memlet.data == old:
+                    e.memlet.data = new
+                if e.src_conn and e.src_conn == f"OUT_{old}":
+                    e.src_conn = f"OUT_{new}"
+                if e.dst_conn and e.dst_conn == f"IN_{old}":
+                    e.dst_conn = f"IN_{new}"
+                if not isinstance(e.dst, (AccessNode,)):
+                    stack.append(e.dst)
+            for e in st.in_edges(n):
+                if e.memlet.data == old:
+                    e.memlet.data = new
+                if e.src_conn and e.src_conn == f"OUT_{old}":
+                    e.src_conn = f"OUT_{new}"
+                if e.dst_conn and e.dst_conn == f"IN_{old}":
+                    e.dst_conn = f"IN_{new}"
+
+    @staticmethod
+    def _dependent(st: State, e1, e2) -> bool:
+        """Reachability between the two consumers/producers => dependent
+        accesses must not share a streaming component (deadlock avoidance,
+        paper §3.2.2)."""
+        try:
+            return (nx.has_path(st.graph, e1.dst, e2.dst)
+                    or nx.has_path(st.graph, e2.dst, e1.dst))
+        except Exception:
+            return True

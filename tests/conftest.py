@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout import path (tests run with PYTHONPATH=src, but be robust)
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: deliberately no --xla_force_host_platform_device_count here;
+# smoke tests and benches must see 1 device (dry-run sets 512 itself).

@@ -1,0 +1,70 @@
+"""Flash-attention and chunked-WKV Pallas kernels vs jnp oracles."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from repro.kernels.attention import attention_ref, flash_attention
+from repro.kernels.rwkv import wkv_chunked, wkv_ref
+
+RNG = np.random.default_rng(11)
+
+
+def _qkv(b, sq, sk, hq, hkv, dh, dtype=np.float32):
+    q = RNG.standard_normal((b, sq, hq, dh)).astype(dtype)
+    k = RNG.standard_normal((b, sk, hkv, dh)).astype(dtype)
+    v = RNG.standard_normal((b, sk, hkv, dh)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(b=1, s=256, hq=4, hkv=4, dh=64),            # MHA
+    dict(b=2, s=128, hq=8, hkv=2, dh=32),            # GQA 4:1
+    dict(b=1, s=512, hq=2, hkv=1, dh=64),            # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(cfg, causal):
+    q, k, v = _qkv(cfg["b"], cfg["s"], cfg["s"], cfg["hq"], cfg["hkv"],
+                   cfg["dh"])
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_sliding_window():
+    q, k, v = _qkv(1, 256, 256, 4, 4, 32)
+    out = flash_attention(q, k, v, causal=True, window=64, bq=64, bk=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    import ml_dtypes
+    q, k, v = _qkv(1, 128, 128, 4, 4, 64, dtype=ml_dtypes.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# -- WKV ------------------------------------------------------------------
+@pytest.mark.parametrize("S", [16, 64, 160])
+@pytest.mark.parametrize("hd", [8, 32])
+def test_wkv_kernel_matches_sequential(S, hd):
+    B, H = 2, 3
+    r, k, v = (jnp.asarray(RNG.standard_normal((B, S, H, hd)) * 0.5,
+                           jnp.float32) for _ in range(3))
+    w = jnp.asarray(np.exp(-0.5 - 3.0 * RNG.uniform(0, 1, (B, S, H, hd))),
+                    jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((H, hd)) * 0.3, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    out_k, st_k = wkv_chunked(r, k, v, w, u, interpret=True)
+    out_r, st_r = wkv_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,65 @@
+"""LeNet-5 case study (paper §5): ladder correctness + volume ordering."""
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401
+from repro.frontends.ml import build_lenet, init_lenet_params, lenet_reference
+from repro.transforms import (DeviceOffload, InputToConstant,
+                              StreamingComposition)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = init_lenet_params()
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((16, 1, 28, 28)).astype(np.float32)
+    return params, x, np.asarray(lenet_reference(params, x))
+
+
+def test_naive_matches_reference(setup):
+    params, x, exp = setup
+    sdfg = build_lenet(16)
+    sdfg.apply(DeviceOffload)
+    out = sdfg.compile("jnp")(x=x, **params)
+    np.testing.assert_allclose(np.asarray(out["probs"]), exp, rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_ladder_volumes_and_fused_pallas(setup):
+    params, x, exp = setup
+    s1 = build_lenet(16)
+    s1.apply(DeviceOffload)
+    v_naive = s1.off_chip_volume()
+
+    s2 = build_lenet(16)
+    assert s2.apply(InputToConstant, parameters=params) == len(params)
+    s2.apply(DeviceOffload)
+    v_const = s2.off_chip_volume()
+    s2.apply(StreamingComposition)
+    v_stream = s2.off_chip_volume()
+    assert v_naive > v_const > v_stream  # paper Table-3 ordering
+
+    c = s2.compile("pallas")
+    # conv+pool stages fuse (paper Fig. 16 streaming between operators)
+    assert c.report["fused_regions"].count("Conv2d+MaxPool2d") == 2
+    out = c(x=x)
+    np.testing.assert_allclose(np.asarray(out["probs"]), exp, rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_input_to_constant_ratio_matches_paper(setup):
+    """Paper Table 3: InputToConstant gives a ~1.2x volume reduction.
+
+    Our memlet accounting reads each weight once per execution (i.e. the
+    naive baseline is already weight-cached on-chip), so the paper's ratio
+    appears at small batch where weights are a comparable fraction of
+    traffic; at batch 1000 the FPGA naive re-streams weights per tile,
+    which we don't model (EXPERIMENTS §Paper)."""
+    params, _, _ = setup
+    s1 = build_lenet(32)
+    s1.apply(DeviceOffload)
+    s2 = build_lenet(32)
+    s2.apply(InputToConstant, parameters=params)
+    s2.apply(DeviceOffload)
+    ratio = s1.off_chip_volume() / s2.off_chip_volume()
+    assert 1.1 < ratio < 1.35  # paper: 0.28/0.22 GiB = 1.27x

@@ -1,0 +1,59 @@
+"""Optimized perf variants must be numerically equivalent to baselines."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import build_model, example_batch
+from repro.models.layers import (attention_chunked, attention_xla, moe_block)
+
+RNG = np.random.default_rng(5)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("gqa", [(8, 8), (8, 2)])
+def test_chunked_attention_matches_naive(window, gqa):
+    hq, hkv = gqa
+    b, s, dh = 2, 128, 32
+    q = jnp.asarray(RNG.standard_normal((b, s, hq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, hkv, dh)), jnp.float32)
+    naive = attention_xla(q, k, v, causal=True, window=window)
+    chunked = attention_chunked(q, k, v, causal=True, window=window, bk=32)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sort_moe_matches_onehot():
+    b, s, d, e, f, k = 2, 16, 8, 4, 16, 2
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    router = jnp.asarray(RNG.standard_normal((d, e)), jnp.float32)
+    wg = jnp.asarray(RNG.standard_normal((e, d, f)) * 0.3, jnp.float32)
+    wu = jnp.asarray(RNG.standard_normal((e, d, f)) * 0.3, jnp.float32)
+    wd = jnp.asarray(RNG.standard_normal((e, f, d)) * 0.3, jnp.float32)
+    out1, aux1 = moe_block(x, router, wg, wu, wd, top_k=k,
+                           capacity_factor=8.0, dispatch="onehot")
+    out2, aux2 = moe_block(x, router, wg, wu, wd, top_k=k,
+                           capacity_factor=8.0, dispatch="sort")
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "llama4-scout-17b-a16e"])
+def test_optimized_model_matches_baseline(arch):
+    base_cfg = dataclasses.replace(get_config(arch).reduced(),
+                                   activation_dtype="float32")
+    opt_cfg = dataclasses.replace(base_cfg, attention_impl="chunked",
+                                  moe_dispatch="sort")
+    m1, m2 = build_model(base_cfg), build_model(opt_cfg)
+    params = m1.init(jax.random.PRNGKey(0))
+    batch = {kk: jnp.asarray(v) for kk, v in
+             example_batch(base_cfg, "train", 2, 32).items()}
+    l1, _ = m1.forward(params, batch)
+    l2, _ = m2.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,91 @@
+"""IR construction, validation, data-movement accounting."""
+import numpy as np
+import pytest
+
+from repro.core import (Memlet, SDFG, StorageType, Subset, ValidationError,
+                        sym)
+from repro.frontends import blas
+from repro.frontends.api import Program
+from repro.transforms import DeviceOffload, StreamingComposition
+
+
+def build_axpydot(n=256):
+    p = Program("axpydot")
+    a = p.scalar_input("a", "float32")
+    x, y, w = (p.input(nm, (n,)) for nm in ("x", "y", "w"))
+    z = blas.axpy(a, x, y)
+    r = blas.dot(z, w)
+    p.output("result", r)
+    return p.finalize()
+
+
+def test_validation_passes():
+    build_axpydot().validate()
+
+
+def test_unknown_container_rejected():
+    sdfg = SDFG("bad")
+    st_ = sdfg.add_state("s", is_start=True)
+    t = st_.add_tasklet("t", [], ["o"], lambda: {"o": 0.0})
+    acc = st_.add_access("ghost_not_added")  # container never declared
+    st_.add_edge(t, "o", acc, None, Memlet.simple("ghost_not_added"))
+    with pytest.raises(ValidationError):
+        sdfg.validate()
+
+
+def test_stream_volume_check():
+    sdfg = SDFG("vol")
+    sdfg.add_array("x", (8,), "float32")
+    sdfg.add_array("y", (8,), "float32")
+    sdfg.add_stream("s", "float32", element_shape=(8,))
+    st_ = sdfg.add_state("s0", is_start=True)
+    xin = st_.add_access("x")
+    t1 = st_.add_tasklet("prod", ["i"], ["o"], lambda i: i)
+    t2 = st_.add_tasklet("cons", ["i"], ["o"], lambda i: i)
+    sin = st_.add_access("s")
+    sout = st_.add_access("s")
+    yout = st_.add_access("y")
+    st_.add_edge(xin, None, t1, "i", Memlet.simple("x"))
+    st_.add_edge(t1, "o", sin, None, Memlet.simple("s", volume=8))
+    st_.add_edge(sout, None, t2, "i", Memlet.simple("s", volume=4))  # != 8
+    st_.add_edge(t2, "o", yout, None, Memlet.simple("y"))
+    with pytest.raises(ValidationError, match="Fig.-7"):
+        sdfg.validate()
+
+
+def test_off_chip_volume_accounting():
+    n = 128
+    sdfg = build_axpydot(n)
+    sdfg.apply(DeviceOffload)
+    naive = sdfg.off_chip_volume()
+    # pre-copies 3n*4, kernel: x,y,w reads + z write + z read + result, post 4
+    assert naive == 3 * n * 4 + (5 * n * 4 + 4) + 4
+    sdfg2 = build_axpydot(n)
+    sdfg2.apply(DeviceOffload)
+    assert sdfg2.apply(StreamingComposition) == 1
+    assert naive - sdfg2.off_chip_volume() == 2 * n * 4  # z round-trip gone
+
+
+def test_processing_elements_detected():
+    from repro.transforms import StreamingMemory
+    sdfg = build_axpydot(64)
+    sdfg.apply(DeviceOffload)
+    sdfg.apply(StreamingComposition)
+    sdfg.apply(StreamingMemory)
+    main = [s for s in sdfg.states if s.label == "main"][0]
+    # readers(x,y,w) + axpy + dot + writer(result) = 6 concurrent PEs
+    assert len(main.processing_elements()) == 6
+
+
+def test_symbolic_volume():
+    n = sym("n")
+    p = Program("sym")
+    x = p.input("x", (n,))
+    y = p.input("y", (n,))
+    a = p.scalar_input("a")
+    z = blas.axpy(a, x, y)
+    p.output("z", z)
+    sdfg = p.finalize()
+    sdfg.apply(DeviceOffload)
+    vol = sdfg.off_chip_volume(symbolic=True)
+    assert vol.evaluate({"n": 100}) == sdfg.off_chip_volume(env={"n": 100})

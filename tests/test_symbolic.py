@@ -1,0 +1,53 @@
+"""Symbolic engine unit + property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.symbolic import Expr, evaluate, prod, sym
+
+
+def test_basic_algebra():
+    n, m = sym("n"), sym("m")
+    e = (n + 1) * m - m
+    assert e == n * m
+    assert (n * m / m) == n
+    assert evaluate(n * m + 2, {"n": 3, "m": 4}) == 14
+
+
+def test_division_exact():
+    n = sym("n")
+    assert (n * 4) / 2 == n * 2
+    # rational monomials (paper Fig. 7: K*M*N/P) evaluate exactly
+    assert (sym("n") / sym("m")).evaluate({"n": 12, "m": 4}) == 3
+
+
+def test_subs():
+    n, p = sym("n"), sym("p")
+    e = n * n / p
+    assert e.subs({"n": 6, "p": 4}).as_const() == 9
+
+
+small_ints = st.integers(min_value=-20, max_value=20)
+
+
+@given(a=small_ints, b=small_ints, c=small_ints)
+@settings(max_examples=100, deadline=None)
+def test_poly_eval_matches_python(a, b, c):
+    n, m = sym("n"), sym("m")
+    e = a * n * n + b * n * m + c
+    for nv in (0, 1, 3):
+        for mv in (1, 2):
+            assert e.evaluate({"n": nv, "m": mv}) == a * nv * nv + b * nv * mv + c
+
+
+@given(xs=st.lists(small_ints.filter(lambda v: v != 0), min_size=1,
+                   max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_prod_matches(xs):
+    import math
+    assert prod(xs).as_int() == math.prod(xs)
+
+
+def test_canonical_equality_for_access_orders():
+    i, j = sym("i"), sym("j")
+    assert (i * 4 + j) == (j + i * 4)
+    assert hash(i * 4 + j) == hash(j + 4 * i)

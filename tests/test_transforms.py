@@ -1,0 +1,121 @@
+"""Mid-level transformation tests (paper §3.2)."""
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (register fusions)
+from repro.core.dtypes import ScheduleType
+from repro.frontends import blas
+from repro.frontends.api import Program
+from repro.transforms import (DeviceOffload, InputToConstant, MapTiling,
+                              StreamingComposition, StreamingMemory,
+                              Vectorization)
+
+
+def build_axpydot(n):
+    p = Program("axpydot")
+    a = p.scalar_input("a", "float32")
+    x, y, w = (p.input(nm, (n,)) for nm in ("x", "y", "w"))
+    r = blas.dot(blas.axpy(a, x, y), w)
+    p.output("result", r)
+    return p.finalize()
+
+
+@pytest.fixture
+def axpydot_inputs():
+    rng = np.random.default_rng(0)
+    n = 512
+    return dict(
+        n=n, a=np.float32(0.7),
+        x=rng.standard_normal(n).astype(np.float32),
+        y=rng.standard_normal(n).astype(np.float32),
+        w=rng.standard_normal(n).astype(np.float32),
+    )
+
+
+def expected_axpydot(d):
+    return np.dot((d["a"] * d["x"] + d["y"]).astype(np.float32), d["w"])
+
+
+def test_ladder_preserves_semantics(axpydot_inputs):
+    d = axpydot_inputs
+    exp = expected_axpydot(d)
+    for transforms in ([DeviceOffload],
+                       [DeviceOffload, StreamingComposition],
+                       [DeviceOffload, StreamingComposition,
+                        StreamingMemory]):
+        sdfg = build_axpydot(d["n"])
+        for t in transforms:
+            sdfg.apply(t)
+        out = sdfg.compile("jnp")(a=d["a"], x=d["x"], y=d["y"], w=d["w"])
+        np.testing.assert_allclose(np.asarray(out["result"]).ravel()[0], exp,
+                                   rtol=1e-4)
+
+
+def test_composition_requires_matching_orders():
+    # an array read twice (out-degree 2) must NOT compose
+    n = 64
+    p = Program("no_compose")
+    a = p.scalar_input("a", "float32")
+    x, y = p.input("x", (n,)), p.input("y", (n,))
+    z = blas.axpy(a, x, y)
+    r1 = blas.dot(z, x)
+    # second consumer of z
+    st = p.state
+    from repro.library.blas import Dot
+    from repro.core import Memlet
+    d2 = st.add_node(Dot("dot_b"))
+    st.add_edge(z.node, None, d2, "x", Memlet.simple(z.name))
+    st.add_edge(st.add_access("y"), None, d2, "w", Memlet.simple("y"))
+    r2h = p.temp((1,), "float32", name="r2")
+    st.add_edge(d2, "result", r2h.fresh_write_node(), None,
+                Memlet.simple("r2"))
+    p.output("result", r1)
+    p.output("r2", r2h)
+    sdfg = p.finalize()
+    sdfg.apply(DeviceOffload)
+    assert sdfg.apply(StreamingComposition) == 0  # z has two consumers
+
+
+def test_input_to_constant(axpydot_inputs):
+    d = axpydot_inputs
+    sdfg = build_axpydot(d["n"])
+    n_applied = sdfg.apply(InputToConstant, parameters={"w": d["w"]})
+    assert n_applied == 1
+    sdfg.apply(DeviceOffload)
+    # w no longer an argument, not counted in off-chip volume
+    assert "w" not in sdfg.argument_names()
+    out = sdfg.compile("jnp")(a=d["a"], x=d["x"], y=d["y"])
+    np.testing.assert_allclose(np.asarray(out["result"]).ravel()[0],
+                               expected_axpydot(d), rtol=1e-4)
+
+
+def test_input_to_constant_refuses_written_arrays():
+    n = 32
+    p = Program("w_written")
+    a = p.scalar_input("a", "float32")
+    x, y = p.input("x", (n,)), p.input("y", (n,))
+    z = blas.axpy(a, x, y)
+    p.output("z", z)
+    sdfg = p.finalize()
+    # z is written -> cannot become constant
+    assert sdfg.apply(InputToConstant,
+                      parameters={"z": np.zeros(n, np.float32)}) == 0
+
+
+def test_vectorization_sets_width():
+    sdfg = build_axpydot(512)
+    sdfg.apply(Vectorization, width=128)
+    assert sdfg.metadata["vector_width"] == 128
+    assert sdfg.arrays["x"].vector_width == 128
+
+
+def test_map_tiling(axpydot_inputs):
+    d = axpydot_inputs
+    sdfg = build_axpydot(d["n"])
+    sdfg.apply(DeviceOffload)
+    sdfg.expand_library_nodes(level="generic")
+    n_tiled = sdfg.apply(MapTiling, tile_size=64)
+    assert n_tiled >= 1
+    out = sdfg.compile("jnp")(a=d["a"], x=d["x"], y=d["y"], w=d["w"])
+    np.testing.assert_allclose(np.asarray(out["result"]).ravel()[0],
+                               expected_axpydot(d), rtol=1e-4)
