@@ -14,6 +14,8 @@ import numpy as np
 import repro.kernels  # noqa: F401
 from repro.frontends import blas
 from repro.frontends.api import Program
+from repro.pipeline import (DeviceOffloadPass, StreamingCompositionPass,
+                            StreamingMemoryPass, lower)
 from repro.transforms import (DeviceOffload, StreamingComposition,
                               StreamingMemory)
 
@@ -58,26 +60,20 @@ def run(report):
     pes = len([s for s in streamed.states if s.label == "main"][0]
               .processing_elements())
 
-    # runtimes at reduced N
-    s1 = build(BENCH_N)
-    s1.apply(DeviceOffload)
-    c1 = s1.compile("jnp")
+    # runtimes at reduced N, through the staged pipeline
+    c1 = lower(build(BENCH_N)).optimize([DeviceOffloadPass()]).compile("jnp")
     t_naive = _time(c1, a=a, x=x, y=y, w=w)
     out = c1(a=a, x=x, y=y, w=w)
     assert abs(float(np.asarray(out["result"]).ravel()[0]) - exp) < \
         1e-3 * abs(exp)
 
-    s2 = build(BENCH_N)
-    s2.apply(DeviceOffload)
-    s2.apply(StreamingComposition)
-    s2.apply(StreamingMemory)
-    c2 = s2.compile("jnp")
+    c2 = lower(build(BENCH_N)).optimize(
+        [DeviceOffloadPass(), StreamingCompositionPass(),
+         StreamingMemoryPass()]).compile("jnp")
     t_stream = _time(c2, a=a, x=x, y=y, w=w)
 
-    s3 = build(BENCH_N)
-    s3.apply(DeviceOffload)
-    s3.apply(StreamingComposition)
-    c3 = s3.compile("pallas")
+    c3 = lower(build(BENCH_N)).optimize(
+        [DeviceOffloadPass(), StreamingCompositionPass()]).compile("pallas")
     t_fused = _time(c3, a=a, x=x, y=y, w=w)
 
     report("axpydot_naive_volume_GiB", v_naive / 2**30,

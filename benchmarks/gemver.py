@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import Memlet
 from repro.frontends import blas
 from repro.frontends.api import Program
+from repro.pipeline import lower
 from repro.transforms import DeviceOffload, StreamingComposition
 
 PAPER_N = 16_384
@@ -105,7 +106,7 @@ def run(report):
             _variants(PAPER_N).items()}
     times = {}
     for name, s in _variants(n).items():
-        c = s.compile("jnp")
+        c = lower(s).compile("jnp")
         c(**d)  # compile
         t0 = time.perf_counter()
         out = c(**d)

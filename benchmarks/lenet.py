@@ -9,6 +9,8 @@ import numpy as np
 
 import repro.kernels  # noqa: F401
 from repro.frontends.ml import build_lenet, init_lenet_params, lenet_reference
+from repro.pipeline import (DeviceOffloadPass, InputToConstantPass,
+                            StreamingCompositionPass, lower)
 from repro.transforms import (DeviceOffload, InputToConstant,
                               StreamingComposition)
 
@@ -38,9 +40,8 @@ def run(report):
 
     vols = _volumes(PAPER_BATCH, params)
 
-    s1 = build_lenet(BENCH_BATCH)
-    s1.apply(DeviceOffload)
-    c1 = s1.compile("jnp")
+    c1 = lower(build_lenet(BENCH_BATCH)).optimize(
+        [DeviceOffloadPass()]).compile("jnp")
     c1(x=x, **params)
     t0 = time.perf_counter()
     o1 = c1(x=x, **params)
@@ -48,11 +49,9 @@ def run(report):
     np.testing.assert_allclose(np.asarray(o1["probs"]), exp, rtol=1e-2,
                                atol=1e-4)
 
-    s2 = build_lenet(BENCH_BATCH)
-    s2.apply(InputToConstant, parameters=params)
-    s2.apply(DeviceOffload)
-    s2.apply(StreamingComposition)
-    c2 = s2.compile("pallas")
+    c2 = lower(build_lenet(BENCH_BATCH)).optimize(
+        [InputToConstantPass(parameters=params), DeviceOffloadPass(),
+         StreamingCompositionPass()]).compile("pallas")
     c2(x=x)
     t0 = time.perf_counter()
     o2 = c2(x=x)

@@ -11,6 +11,7 @@ import numpy as np
 import repro.kernels  # noqa: F401
 from repro.frontends.stencil import build_stencil_program
 from repro.kernels import stencil
+from repro.pipeline import lower
 from repro.transforms import DeviceOffload, StreamingComposition
 
 # reduced domains (paper: 2^17 x 4096 and 2^15 x 128 x 128)
@@ -64,7 +65,7 @@ def run(report):
     v0 = sdfg.off_chip_volume()
     sdfg.apply(StreamingComposition)
     v1 = sdfg.off_chip_volume()
-    c = sdfg.compile("pallas")
+    c = lower(sdfg).compile("pallas")
     a = rng.standard_normal((512, 256)).astype(np.float32)
     c(a=a, b_coeffs=co, d_coeffs=co)
     t0 = time.perf_counter()

@@ -1,7 +1,8 @@
 """Paper §5 case study: LeNet-5 inference ladder (Table 3).
 
-naive -> InputToConstant -> StreamingComposition, compiled with the
-Pallas backend (conv+pool stages fuse into im2col systolic GEMM kernels).
+naive -> InputToConstant -> StreamingComposition, driven through the
+staged pipeline (Lowered.optimize with pass pipelines) and compiled with
+the Pallas backend (conv+pool stages fuse into im2col systolic GEMMs).
 
 Run: PYTHONPATH=src python examples/lenet_pipeline.py
 """
@@ -11,8 +12,8 @@ import numpy as np
 
 import repro.kernels  # noqa: F401
 from repro.frontends.ml import build_lenet, init_lenet_params, lenet_reference
-from repro.transforms import (DeviceOffload, InputToConstant,
-                              StreamingComposition)
+from repro.pipeline import (DeviceOffloadPass, InputToConstantPass,
+                            StreamingCompositionPass, lower)
 
 
 def main():
@@ -23,24 +24,22 @@ def main():
     expected = np.asarray(lenet_reference(params, x))
 
     print("== naive (all parameters and intermediates off-chip)")
-    s1 = build_lenet(batch)
-    s1.apply(DeviceOffload)
-    print(f"   off-chip volume: {s1.off_chip_volume()/2**20:.2f} MiB")
-    out = s1.compile("jnp")(x=x, **params)
+    l1 = lower(build_lenet(batch)).optimize([DeviceOffloadPass()])
+    print(f"   off-chip volume: {l1.sdfg.off_chip_volume()/2**20:.2f} MiB")
+    out = l1.compile("jnp")(x=x, **params)
     np.testing.assert_allclose(np.asarray(out["probs"]), expected,
                                rtol=1e-2, atol=1e-4)
 
     print("== InputToConstant (paper: parameters fixed in hardware)")
-    s2 = build_lenet(batch)
-    s2.apply(InputToConstant, parameters=params)
-    s2.apply(DeviceOffload)
-    v_const = s2.off_chip_volume()
+    l2 = lower(build_lenet(batch)).optimize(
+        [InputToConstantPass(parameters=params), DeviceOffloadPass()])
+    v_const = l2.sdfg.off_chip_volume()
     print(f"   off-chip volume: {v_const/2**20:.2f} MiB")
 
     print("== + StreamingComposition, Pallas backend")
-    s2.apply(StreamingComposition)
-    v_stream = s2.off_chip_volume()
-    c = s2.compile("pallas")
+    l2.optimize([StreamingCompositionPass()])
+    v_stream = l2.sdfg.off_chip_volume()
+    c = l2.compile("pallas")
     t0 = time.perf_counter()
     out = c(x=x)
     dt = time.perf_counter() - t0

@@ -11,7 +11,8 @@ import numpy as np
 import repro.kernels  # noqa: F401
 from repro.frontends.stencil import build_stencil_program
 from repro.kernels.stencil import stencil2d_ref
-from repro.transforms import DeviceOffload, StreamingComposition
+from repro.pipeline import (DeviceOffloadPass, StreamingCompositionPass,
+                            lower)
 
 PROGRAM = {
     "name": "diffusion_2it",
@@ -30,15 +31,16 @@ PROGRAM = {
 def main():
     print("== parse JSON program ->", len(PROGRAM["program"]),
           "stencil operators")
-    sdfg = build_stencil_program(PROGRAM)
-    sdfg.apply(DeviceOffload)
-    v0 = sdfg.off_chip_volume()
-    n_comp = sdfg.apply(StreamingComposition)
-    v1 = sdfg.off_chip_volume()
+    staged = lower(build_stencil_program(PROGRAM))
+    staged.optimize([DeviceOffloadPass()])
+    v0 = staged.sdfg.off_chip_volume()
+    staged.optimize([StreamingCompositionPass()])
+    n_comp = staged.reports[-1]["passes"][0]["summary"]
+    v1 = staged.sdfg.off_chip_volume()
     print(f"== StreamingComposition: {n_comp} intermediate(s) -> streams; "
           f"volume {v0/2**20:.1f} -> {v1/2**20:.1f} MiB")
 
-    c = sdfg.compile("pallas")
+    c = staged.compile("pallas")
     print("== fused:", c.report["fused_regions"])
 
     rng = np.random.default_rng(0)

@@ -1,63 +1,35 @@
-"""Compile SDFGs to executable JAX callables.
+"""Legacy one-shot compile entry point, now a shim over the staged
+pipeline (repro.pipeline): ``compile_sdfg(s, ...)`` is exactly
+``pipeline.lower(s).compile(..., in_place=True)``.
 
-Mirrors the paper's backend split (§2.1): one generic traversal
-(jnp_backend's structural interpretation), with the two 'vendors':
+The backend split (paper §2.1) lives in ``pipeline.passes
+.default_pipeline``: ``jnp`` prefers (xla, generic) expansions and lets
+XLA fuse (the Intel-OpenCL analogue); ``pallas`` runs pipeline-fusion
+first and prefers (pallas, xla, generic) (the Vivado-HLS analogue). Both
+produce the same function semantics; tests cross-validate them.
 
-  * ``backend='jnp'``    -- XLA-auto: expansion preference (xla, generic);
-                            XLA fuses/pipelines (the Intel-OpenCL analogue).
-  * ``backend='pallas'`` -- explicit: pipeline-fusion pass first replaces
-                            stream-connected Library-Node chains with fused
-                            Pallas kernels, then prefers (pallas, xla,
-                            generic) expansions (the Vivado-HLS analogue).
-
-Both produce the same function semantics; tests cross-validate them.
+``in_place=True`` preserves the historical contract that the caller's
+SDFG is expanded by compilation (callers inspect the lowered graph);
+staged callers get a pristine ``Lowered`` plus a private compiled copy.
+In-place compiles deliberately bypass ``pipeline.COMPILATION_CACHE`` —
+the produced callable would alias the caller's live graph and a hit
+would skip the in-place expansion — so only the staged path
+(``Lowered.compile``) is served from the cache.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-
 from ..core.sdfg import SDFG
-from . import jnp_backend
+from ..pipeline.stages import BACKENDS, Compiled, Lowered
 
-BACKENDS = ("jnp", "pallas")
-
-
-class CompiledSDFG:
-    def __init__(self, sdfg: SDFG, fn, jitted, backend: str, report: dict):
-        self.sdfg = sdfg
-        self.fn = fn
-        self.jitted = jitted
-        self.backend = backend
-        self.report = report
-
-    def __call__(self, **kwargs):
-        return self.jitted(**kwargs) if self.jitted is not None else self.fn(**kwargs)
-
-    def lower(self, **kwargs):
-        return jax.jit(self.fn).lower(**kwargs)
+#: compat alias: the executable stage used to be defined here.
+CompiledSDFG = Compiled
 
 
 def compile_sdfg(sdfg: SDFG, backend: str = "jnp", jit: bool = True,
                  interpret: bool = True,
-                 expansion_level: Optional[str] = None) -> CompiledSDFG:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
-    report = {"backend": backend, "fused_regions": [], "expansions": []}
-
-    sdfg.validate()
-    if backend == "pallas":
-        sdfg.expansion_preference = ("pallas", "xla", "generic")
-        sdfg.metadata["pallas_interpret"] = interpret
-        from .pipeline_fusion import fuse_stream_pipelines
-        report["fused_regions"] = fuse_stream_pipelines(sdfg, interpret=interpret)
-    else:
-        sdfg.expansion_preference = ("xla", "generic")
-
-    report["expansions"] = sdfg.expand_library_nodes(level=expansion_level)
-    sdfg.validate()
-
-    fn = jnp_backend.build_callable(sdfg)
-    jitted = jax.jit(fn) if jit else None
-    return CompiledSDFG(sdfg, fn, jitted, backend, report)
+                 expansion_level: Optional[str] = None) -> Compiled:
+    return Lowered(sdfg).compile(
+        backend=backend, jit=jit, interpret=interpret,
+        expansion_level=expansion_level, in_place=True)

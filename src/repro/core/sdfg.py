@@ -22,6 +22,7 @@ volume**, computed by summing memlet volumes incident to HBM containers.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -531,6 +532,59 @@ class SDFG:
                 out |= s.free_symbols
         return out
 
+    # -- content hash (pipeline cache key) ----------------------------------
+    def content_hash(self) -> str:
+        """Structural hash over topology, descriptors, and symbols.
+
+        Two SDFGs built identically (same frontend calls, same transforms)
+        hash equal, so the compilation cache can serve repeated
+        ``compile()`` calls — including across separately-built but
+        identical programs. Mutating the graph, a descriptor, a symbol
+        binding, a constant, or compile-relevant metadata changes the hash.
+        """
+        h = hashlib.sha256()
+
+        def put(*parts):
+            for p in parts:
+                h.update(repr(p).encode())
+                h.update(b"\x00")
+
+        put("sdfg", self.name, self.expansion_preference)
+        for name, dt in sorted(self.symbols.items()):
+            put("sym", name, dt.name)
+        for name, v in sorted(self.symbol_values.items()):
+            put("symval", name, v)
+        for name, arr in sorted(self.constants.items()):
+            a = np.ascontiguousarray(arr)
+            put("const", name, a.dtype.str, a.shape,
+                hashlib.sha1(a.tobytes()).hexdigest())
+        for key in sorted(self.metadata):
+            if key == "transformation_history":
+                continue  # provenance, not content
+            put("meta", key, _stable_repr(self.metadata[key]))
+        for name, desc in sorted(self.arrays.items()):
+            put("container", name, _descriptor_signature(desc))
+
+        states = {st: i for i, st in enumerate(self.states)}
+        for st in self.states:
+            put("state", st.label)
+            index = {}
+            for i, node in enumerate(st.graph.nodes):
+                index[node] = i
+                put("node", i, _node_signature(node))
+            for u, v, k, d in st.graph.edges(keys=True, data=True):
+                e = d["edge"]
+                put("edge", index[e.src], e.src_conn, index[e.dst],
+                    e.dst_conn, k, e.memlet)
+        for src, dst, d in self.cfg.edges(data=True):
+            e = d.get("edge")
+            put("cfedge", states[src], states[dst],
+                _callable_fingerprint(getattr(e, "condition", None)),
+                sorted((k, _callable_fingerprint(v)) for k, v in
+                       (getattr(e, "assignments", None) or {}).items()))
+        put("start", states.get(self.start_state))
+        return h.hexdigest()
+
     # -- library-node expansion (paper §3: multi-level lowering) -----------
     def expand_library_nodes(self, level: Optional[str] = None,
                              recursive: bool = True) -> List[str]:
@@ -570,6 +624,9 @@ class SDFG:
         return self
 
     def compile(self, backend: str = "jnp", jit: bool = True, **kwargs):
+        """Legacy one-shot compile; delegates to the staged pipeline
+        (pipeline.Lowered) with in-place lowering. Prefer
+        ``pipeline.lower(sdfg).compile(...)`` in new code."""
         from ..codegen.compiler import compile_sdfg
         return compile_sdfg(self, backend=backend, jit=jit, **kwargs)
 
@@ -581,3 +638,107 @@ class SDFG:
     def __repr__(self):
         return (f"SDFG({self.name}: {len(self.states)} states, "
                 f"{len(self.arrays)} containers)")
+
+
+# ---------------------------------------------------------------------------
+# Content-hash helpers
+# ---------------------------------------------------------------------------
+
+
+def _stable_repr(value) -> str:
+    if isinstance(value, np.ndarray):
+        a = np.ascontiguousarray(value)
+        return f"ndarray({a.dtype},{a.shape}," \
+               f"{hashlib.sha1(a.tobytes()).hexdigest()})"
+    if isinstance(value, dict):
+        return "{" + ",".join(f"{k}:{_stable_repr(v)}"
+                              for k, v in sorted(value.items())) + "}"
+    if isinstance(value, (set, frozenset)):
+        return "{" + ",".join(sorted(_stable_repr(v) for v in value)) + "}"
+    if isinstance(value, (list, tuple)):
+        return "(" + ",".join(_stable_repr(v) for v in value) + ")"
+    return repr(value)
+
+
+def _callable_fingerprint(fn) -> str:
+    """Stable-enough identity for a tasklet body / interstate condition:
+    qualname + bytecode digest + primitive constants and closure values.
+    Distinct-but-equal callables may fingerprint apart (a cache miss, never
+    a false hit within one build style)."""
+    if fn is None:
+        return "none"
+    parts = [getattr(fn, "__qualname__", None) or repr(type(fn))]
+    code = getattr(fn, "__code__", None)
+    if code is not None:
+        parts.append(hashlib.sha1(code.co_code).hexdigest())
+        # co_names: bytecode only stores name *indices*, so two bodies
+        # calling different globals (sin vs cos) share co_code
+        parts.append(_stable_repr(code.co_names))
+        parts.append(_stable_repr(tuple(
+            c for c in code.co_consts
+            if isinstance(c, (int, float, str, bytes, bool, type(None))))))
+    for d in (getattr(fn, "__defaults__", None) or ()):
+        parts.append(_callable_fingerprint(d) if callable(d)
+                     else _stable_repr(d))
+    for cell in (getattr(fn, "__closure__", None) or ()):
+        try:
+            v = cell.cell_contents
+        except ValueError:
+            continue
+        parts.append(_closure_value_fingerprint(v))
+    return "|".join(parts)
+
+
+def _closure_value_fingerprint(v) -> str:
+    if isinstance(v, (int, float, str, bytes, bool, tuple, list, dict, set,
+                      frozenset, type(None), np.ndarray)):
+        return _stable_repr(v)
+    if callable(v):
+        return _callable_fingerprint(v)
+    if hasattr(v, "__array__"):  # jax arrays etc.; repr would truncate
+        return _stable_repr(np.asarray(v))
+    # arbitrary object: repr may embed an address — at worst a cache
+    # miss across rebuilds, never a false hit
+    return f"{type(v).__name__}:{v!r}"
+
+
+def _descriptor_signature(desc: Data) -> tuple:
+    sig = (type(desc).__name__, desc.dtype.name, desc.storage.value,
+           desc.transient)
+    if isinstance(desc, Stream):
+        sig += (desc.buffer_size, desc.shape, desc.element_shape,
+                desc.total_volume)
+    elif isinstance(desc, Array):
+        sig += (desc.shape, desc.vector_width)
+    return sig
+
+
+def _map_signature(m: Map) -> tuple:
+    return (m.label, tuple(m.params), tuple(m.ranges), m.schedule.value,
+            m.vector_width)
+
+
+def _node_signature(node: Node) -> tuple:
+    if isinstance(node, AccessNode):
+        return ("access", node.data)
+    if isinstance(node, Tasklet):
+        return ("tasklet", node.label, tuple(node.inputs),
+                tuple(node.outputs), _callable_fingerprint(node.fn))
+    if isinstance(node, MapEntry):
+        return ("map_entry", _map_signature(node.map))
+    if isinstance(node, MapExit):
+        return ("map_exit", node.map.label)
+    if isinstance(node, NestedSDFG):
+        return ("nested", node.label, tuple(node.inputs),
+                tuple(node.outputs),
+                tuple(sorted((k, repr(v))
+                             for k, v in node.symbol_mapping.items())),
+                node.sdfg.content_hash())
+    if isinstance(node, LibraryNode):
+        # every instance attribute is potentially computation-defining
+        # (Ger.alpha, Gemv.trans, Conv2d.activation, Stencil.offsets, ...)
+        attrs = tuple(sorted(
+            (k, _callable_fingerprint(v) if callable(v) else _stable_repr(v))
+            for k, v in vars(node).items() if k != "uid"))
+        return ("library", type(node).__name__, attrs)
+    return (type(node).__name__, node.label)

@@ -13,9 +13,14 @@ provide the equivalent builder API plus a ``@dc_program`` decorator:
         r = blas.dot(z, w)
         p.output("result", r)
 
-Handles track access nodes; each op appends Library Nodes to the current
-state, exchanging data through (initially off-chip) transient arrays —
-the 'unoptimized SDFG' the mid-level transformations then rewrite.
+    axpydot.lower(n=1024).optimize([...]).compile(backend="pallas")
+
+``@dc_program`` returns a ``pipeline.Wrapped`` stage: calling it builds
+the raw SDFG; ``.lower()`` enters the staged Wrapped -> Lowered ->
+Compiled flow (ARCHITECTURE.md). Handles track access nodes; each op
+appends Library Nodes to the current state, exchanging data through
+(initially off-chip) transient arrays — the 'unoptimized SDFG' the
+mid-level transformations then rewrite.
 """
 from __future__ import annotations
 
@@ -61,6 +66,15 @@ class Program:
         self.sdfg = SDFG(name)
         self.state = self.sdfg.add_state("main", is_start=True)
         self._tmp = itertools.count()
+        self._label_counts: dict = {}
+
+    def fresh_label(self, base: str) -> str:
+        """Program-local deterministic labels (``axpy0``, ``axpy1``, ...):
+        two identical builds produce identical labels, so their SDFGs
+        content-hash equal and share one compilation-cache entry."""
+        k = self._label_counts.get(base, 0)
+        self._label_counts[base] = k + 1
+        return f"{base}{k}"
 
     # -- containers ------------------------------------------------------
     def input(self, name: str, shape: Sequence[ExprLike], dtype="float32"
@@ -89,6 +103,12 @@ class Program:
         desc.transient = False
         # rename container to the requested name
         if name != value.name:
+            if name in self.sdfg.arrays:
+                raise ValueError(
+                    f"cannot rename {value.name!r} to output {name!r}: a "
+                    f"container named {name!r} already exists in the "
+                    "program; pick a fresh output name or write into the "
+                    "existing container explicitly")
             self.sdfg.arrays[name] = self.sdfg.arrays.pop(value.name)
             for st in self.sdfg.states:
                 for n in st.data_nodes():
@@ -130,10 +150,26 @@ class Program:
 
 
 def dc_program(fn):
-    """Decorator: fn(program, ...) -> None/handle; returns SDFG factory."""
+    """Decorator: fn(program, ...) builds; returns a traceable
+    ``pipeline.Wrapped`` stage. Calling the result traces the builder and
+    returns the raw SDFG; ``.lower(**symbol_bindings)`` returns a
+    ``Lowered`` stage for ``.optimize(...)`` / ``.compile(backend=...)``."""
+    from ..pipeline.stages import Wrapped
+
     def factory(*args, **kwargs) -> SDFG:
         p = Program(fn.__name__)
         fn(p, *args, **kwargs)
         return p.finalize()
     factory.__name__ = fn.__name__
-    return factory
+    # symbol-binding split inspects the builder's own signature, not the
+    # factory wrapper's (*args/**kwargs would swallow everything)
+    factory.__signature__ = _builder_signature(fn)
+    return Wrapped(factory, name=fn.__name__)
+
+
+def _builder_signature(fn):
+    """Signature of ``fn`` minus its leading Program parameter."""
+    import inspect
+    sig = inspect.signature(fn)
+    params = list(sig.parameters.values())[1:]
+    return sig.replace(parameters=params)

@@ -29,6 +29,17 @@ def _pick_tile(n: int, target: int) -> int:
     return t
 
 
+def _element_block_spec(shape, index_map) -> pl.BlockSpec:
+    """Element-indexed BlockSpec across jax versions: newer jax spells it
+    ``pl.Element`` per dimension; older releases use the ``Unblocked``
+    indexing mode. Both make ``index_map`` return element offsets, which
+    the overlapping halo'd slabs need (slab height is not a multiple of
+    the tile stride)."""
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(tuple(pl.Element(s) for s in shape), index_map)
+    return pl.BlockSpec(shape, index_map, indexing_mode=pl.Unblocked())
+
+
 # ---------------------------------------------------------------------------
 # Generic 2D stencil: static offsets, runtime coeffs (SMEM)
 # ---------------------------------------------------------------------------
@@ -57,8 +68,8 @@ def stencil2d(a, coeffs, offsets, bh: int = 256, interpret: bool = True):
         grid=(H // bh,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((pl.Element(bh + 2 * r), pl.Element(W + 2 * r)),
-                         lambda i: (i * bh, 0)),
+            _element_block_spec((bh + 2 * r, W + 2 * r),
+                                lambda i: (i * bh, 0)),
         ],
         out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W), a.dtype),
@@ -128,8 +139,8 @@ def stencil2d_chain(a, coeffs_per_stage, offsets_per_stage, bh: int = 256,
         grid=(H // bh,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((pl.Element(bh + 2 * R), pl.Element(W + 2 * R)),
-                         lambda i: (i * bh, 0)),
+            _element_block_spec((bh + 2 * R, W + 2 * R),
+                                lambda i: (i * bh, 0)),
         ],
         out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W), a.dtype),
@@ -160,8 +171,8 @@ def diffusion2d(a, coeffs, bh: int = 256, interpret: bool = True):
         grid=(H // bh,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((pl.Element(bh + 2), pl.Element(W + 2)),
-                         lambda i: (i * bh, 0)),
+            _element_block_spec((bh + 2, W + 2),
+                                lambda i: (i * bh, 0)),
         ],
         out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W), a.dtype),
@@ -190,8 +201,8 @@ def jacobi3d(a, bd: int = 16, interpret: bool = True):
     return pl.pallas_call(
         _jacobi3d_kernel,
         grid=(D // bd,),
-        in_specs=[pl.BlockSpec(
-            (pl.Element(bd + 2), pl.Element(H + 2), pl.Element(W + 2)),
+        in_specs=[_element_block_spec(
+            (bd + 2, H + 2, W + 2),
             lambda i: (i * bd, 0, 0))],
         out_specs=pl.BlockSpec((bd, H, W), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((D, H, W), a.dtype),
@@ -224,8 +235,8 @@ def diffusion3d(a, alpha: float = 0.1, bd: int = 16, interpret: bool = True):
         grid=(D // bd,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(
-                (pl.Element(bd + 2), pl.Element(H + 2), pl.Element(W + 2)),
+            _element_block_spec(
+                (bd + 2, H + 2, W + 2),
                 lambda i: (i * bd, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bd, H, W), lambda i: (i, 0, 0)),

@@ -15,9 +15,21 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeSpec
+from ..models import _flags
 from ..models.registry import build_model, input_specs
 from ..optim import clip_by_global_norm, get_optimizer
+from ..pipeline.cache import COMPILATION_CACHE
 from . import sharding as shd
+
+
+def mesh_signature(mesh) -> tuple:
+    """Structural mesh identity for compilation-cache keys: two meshes
+    over the same devices/axes produce interchangeable lowerings."""
+    # device ids restart at 0 per platform, so the platform is part of
+    # the identity (cpu:0 != tpu:0)
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple((getattr(d, "platform", ""), int(d.id))
+                  for d in mesh.devices.flat))
 
 
 def abstract_params(model, cfg: ModelConfig):
@@ -83,9 +95,19 @@ def _maybe_axis(n: int, axis: str, mesh):
 
 def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, remat: bool = True):
     """Lower (not compile) one (arch x shape) cell on a mesh. Returns the
-    jax ``Lowered`` plus metadata. Used by dryrun.py and the roofline."""
+    jax ``Lowered`` plus metadata. Used by dryrun.py and the roofline.
+
+    Served from the process-wide compilation cache when the same
+    (config x shape x mesh x flags) cell was lowered before — repeated
+    sweep cells (dry-run re-runs, probe variants) become free."""
+    key = ("lower_cell", repr(cfg), repr(shape), mesh_signature(mesh),
+           bool(remat), bool(_flags.UNROLL_SCANS))
+    cached = COMPILATION_CACHE.lookup(key)
+    if cached is not None:
+        return cached
     with jax.sharding.set_mesh(mesh):
-        return _lower_cell_inner(cfg, shape, mesh, remat)
+        lowered = _lower_cell_inner(cfg, shape, mesh, remat)
+    return COMPILATION_CACHE.store(key, lowered)
 
 
 def _lower_cell_inner(cfg: ModelConfig, shape: ShapeSpec, mesh,

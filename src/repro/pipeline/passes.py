@@ -1,0 +1,329 @@
+"""Composable pass infrastructure over SDFGs.
+
+The paper's multi-level flow (frontend SDFG -> domain passes -> platform
+passes -> codegen) is expressed as a ``PassManager``: an ordered, named,
+skippable list of ``Pass`` objects with per-pass timing and a structured
+report. FLOWER structures its HLS flow the same way; JaCe's
+``lower()/compile()`` stages drive an equivalent pipeline.
+
+Three kinds of passes exist:
+
+  * ``TransformationPass`` -- adapts any ``transforms.Transformation``
+    (the five mid-level rewrites ship pre-wrapped below);
+  * graph-lowering passes -- ``ExpandLibraryNodesPass`` (paper §3 multi-
+    level expansion) and ``PipelineFusionPass`` (stream-chain fusion for
+    the Pallas backend);
+  * configuration passes -- ``SetExpansionPreferencePass`` records the
+    vendor-specific expansion order on the SDFG.
+
+Every pass has a stable ``signature()`` so a pipeline's configuration can
+key the compilation cache. Custom passes register with ``register_pass``
+and can then be named in pipelines by string.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from ..core.sdfg import SDFG, _stable_repr
+from ..transforms import (DeviceOffload, InputToConstant, MapTiling,
+                          StreamingComposition, StreamingMemory,
+                          Transformation, Vectorization)
+
+#: name -> Pass subclass, for string lookup in pipelines / custom passes.
+PASS_REGISTRY: Dict[str, type] = {}
+
+
+def register_pass(cls=None, *, name: str = None):
+    """Class decorator: make a Pass constructible by name in pipelines."""
+    def deco(c):
+        PASS_REGISTRY[name or c.__name__] = c
+        return c
+    return deco(cls) if cls is not None else deco
+
+
+# canonical, hashable string for pass-option values — the same
+# canonicalizer the SDFG content hash uses, so pipeline signatures and
+# graph hashes can never drift apart.
+_canon = _stable_repr
+
+
+class Pass:
+    """One named rewrite step. Subclasses override ``apply`` (mutates the
+    SDFG, returns a summary value recorded in the report) and optionally
+    ``should_skip``."""
+
+    #: display/skip name; defaults to the class name.
+    name: str = None
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        if cls.__dict__.get("name") is None:
+            cls.name = cls.__name__
+
+    def apply(self, sdfg: SDFG, report: dict) -> Any:
+        raise NotImplementedError
+
+    def should_skip(self, sdfg: SDFG) -> bool:
+        return False
+
+    def options(self) -> Dict[str, Any]:
+        """Configuration that affects the pass's behavior (cache key)."""
+        return {}
+
+    def signature(self) -> Tuple:
+        return (self.name,
+                tuple((k, _canon(v)) for k, v in sorted(
+                    self.options().items())))
+
+    def __repr__(self):
+        opts = ", ".join(f"{k}={v!r}" for k, v in self.options().items())
+        return f"{self.name}({opts})"
+
+
+class TransformationPass(Pass):
+    """Adapter: run a ``transforms.Transformation`` everywhere it matches.
+
+    Subclasses set ``transformation``; kwargs are forwarded to
+    ``SDFG.apply`` (i.e. to ``find_matches``). The summary is the number
+    of applications.
+    """
+
+    transformation: type = None
+
+    def __init__(self, transformation: type = None, **kwargs):
+        t = transformation or type(self).transformation
+        if t is None:
+            raise TypeError("TransformationPass needs a transformation")
+        if not (isinstance(t, type) and issubclass(t, Transformation)):
+            raise TypeError(f"{t!r} is not a Transformation subclass")
+        self._transformation = t
+        self.kwargs = kwargs
+        if type(self).transformation is None:
+            self.name = t.__name__
+
+    def apply(self, sdfg: SDFG, report: dict) -> int:
+        return sdfg.apply(self._transformation(), **self.kwargs)
+
+    def options(self) -> Dict[str, Any]:
+        return {"transformation": self._transformation.__name__,
+                **self.kwargs}
+
+
+# The five mid-level rewrites (paper §3.2), pre-wrapped as passes --------
+
+@register_pass
+class DeviceOffloadPass(TransformationPass):
+    transformation = DeviceOffload
+    name = "DeviceOffload"
+
+
+@register_pass
+class InputToConstantPass(TransformationPass):
+    transformation = InputToConstant
+    name = "InputToConstant"
+
+
+@register_pass
+class MapTilingPass(TransformationPass):
+    transformation = MapTiling
+    name = "MapTiling"
+
+
+@register_pass
+class StreamingCompositionPass(TransformationPass):
+    transformation = StreamingComposition
+    name = "StreamingComposition"
+
+
+@register_pass
+class StreamingMemoryPass(TransformationPass):
+    transformation = StreamingMemory
+    name = "StreamingMemory"
+
+
+@register_pass
+class VectorizationPass(TransformationPass):
+    transformation = Vectorization
+    name = "Vectorization"
+
+
+@register_pass
+class SetExpansionPreferencePass(Pass):
+    """Record the vendor expansion order consulted by
+    ``LibraryNode.pick_expansion`` (paper: Intel vs Xilinx codegen)."""
+
+    name = "SetExpansionPreference"
+
+    def __init__(self, preference: Sequence[str]):
+        self.preference = tuple(preference)
+
+    def apply(self, sdfg: SDFG, report: dict):
+        sdfg.expansion_preference = self.preference
+        return self.preference
+
+    def options(self):
+        return {"preference": self.preference}
+
+
+@register_pass
+class PipelineFusionPass(Pass):
+    """Fuse stream-connected Library-Node chains into single Pallas
+    kernels (codegen/pipeline_fusion.py); Pallas backend only."""
+
+    name = "PipelineFusion"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    def apply(self, sdfg: SDFG, report: dict) -> List[str]:
+        from ..codegen.pipeline_fusion import fuse_stream_pipelines
+        sdfg.metadata["pallas_interpret"] = self.interpret
+        fused = fuse_stream_pipelines(sdfg, interpret=self.interpret)
+        report.setdefault("fused_regions", []).extend(fused)
+        return fused
+
+    def options(self):
+        return {"interpret": self.interpret}
+
+
+@register_pass
+class ExpandLibraryNodesPass(Pass):
+    """Multi-level Library-Node expansion (paper §3): lower every abstract
+    node to its implementation subgraph, honoring the SDFG's expansion
+    preference (or a forced ``level``)."""
+
+    name = "ExpandLibraryNodes"
+
+    def __init__(self, level: Optional[str] = None):
+        self.level = level
+
+    def apply(self, sdfg: SDFG, report: dict) -> List[str]:
+        log = sdfg.expand_library_nodes(level=self.level)
+        report.setdefault("expansions", []).extend(log)
+        return log
+
+    def should_skip(self, sdfg: SDFG) -> bool:
+        return not sdfg.all_library_nodes()
+
+    def options(self):
+        return {"level": self.level}
+
+
+# ---------------------------------------------------------------------------
+# PassManager
+# ---------------------------------------------------------------------------
+
+PassLike = Union[Pass, Transformation, type, str]
+
+
+def _as_pass(p: PassLike) -> Pass:
+    if isinstance(p, Pass):
+        return p
+    if isinstance(p, str):
+        try:
+            return PASS_REGISTRY[p]()
+        except KeyError:
+            raise KeyError(
+                f"unknown pass {p!r}; registered: {sorted(PASS_REGISTRY)}")
+    if isinstance(p, type) and issubclass(p, Pass):
+        return p()
+    if isinstance(p, type) and issubclass(p, Transformation):
+        return TransformationPass(p)
+    if isinstance(p, Transformation):
+        wrapped = TransformationPass(type(p))
+        wrapped._transformation_instance = p
+        # instance may carry constructor state (e.g. tile_size); apply it
+        wrapped.apply = lambda sdfg, report, _t=p: sdfg.apply(_t)
+        wrapped.options = lambda _t=p: {
+            "transformation": type(_t).__name__,
+            **{k: v for k, v in vars(_t).items()}}
+        return wrapped
+    raise TypeError(f"cannot interpret {p!r} as a Pass")
+
+
+class PassManager:
+    """Ordered, named, skippable pass list with per-pass timing.
+
+    ``run`` executes the passes in order against one SDFG, appending one
+    entry per pass to ``report['passes']``:
+
+        {"name", "skipped", "seconds", "summary"}
+
+    Passes named in ``skip`` (constructor or ``run`` argument) are recorded
+    but not executed. ``signature()`` canonicalizes the full configuration
+    for the compilation-cache key.
+    """
+
+    def __init__(self, passes: Iterable[PassLike] = (), name: str = "custom",
+                 skip: Iterable[str] = ()):
+        self.name = name
+        self.passes: List[Pass] = [_as_pass(p) for p in passes]
+        self.skip = set(skip)
+
+    def append(self, p: PassLike) -> "PassManager":
+        self.passes.append(_as_pass(p))
+        return self
+
+    def extend(self, ps: Iterable[PassLike]) -> "PassManager":
+        for p in ps:
+            self.append(p)
+        return self
+
+    def run(self, sdfg: SDFG, report: Optional[dict] = None,
+            skip: Iterable[str] = ()) -> dict:
+        report = report if report is not None else {}
+        entries = report.setdefault("passes", [])
+        skip_names = self.skip | set(skip)
+        for p in self.passes:
+            entry = {"name": p.name, "skipped": False, "seconds": 0.0,
+                     "summary": None}
+            entries.append(entry)
+            if p.name in skip_names or p.should_skip(sdfg):
+                entry["skipped"] = True
+                continue
+            t0 = time.perf_counter()
+            entry["summary"] = _summarize(p.apply(sdfg, report))
+            entry["seconds"] = time.perf_counter() - t0
+        return report
+
+    def signature(self) -> Tuple:
+        return (tuple(p.signature() for p in self.passes),
+                tuple(sorted(self.skip)))
+
+    def __iter__(self):
+        return iter(self.passes)
+
+    def __len__(self):
+        return len(self.passes)
+
+    def __repr__(self):
+        return (f"PassManager({self.name}: "
+                f"{[p.name for p in self.passes]})")
+
+
+def _summarize(result) -> Any:
+    """Keep report entries small and printable."""
+    if isinstance(result, (list, tuple)) and len(result) > 16:
+        return f"{len(result)} items"
+    return result
+
+
+def default_pipeline(backend: str, interpret: bool = True,
+                     expansion_level: Optional[str] = None) -> PassManager:
+    """Backend-specific default lowering pipeline (paper §2.1 vendor split).
+
+    ``jnp``     -- XLA-auto: prefer (xla, generic) expansions; XLA fuses.
+    ``pallas``  -- explicit: fuse stream-connected chains into Pallas
+                   kernels first, then prefer (pallas, xla, generic).
+    """
+    if backend == "pallas":
+        return PassManager([
+            SetExpansionPreferencePass(("pallas", "xla", "generic")),
+            PipelineFusionPass(interpret=interpret),
+            ExpandLibraryNodesPass(level=expansion_level),
+        ], name="pallas_default")
+    return PassManager([
+        SetExpansionPreferencePass(("xla", "generic")),
+        ExpandLibraryNodesPass(level=expansion_level),
+    ], name="jnp_default")

@@ -30,8 +30,9 @@ from .. import checkpoint as ckpt_lib
 from ..configs.base import ModelConfig
 from ..data import DataConfig, make_global_batch
 from ..launch import sharding as shd
-from ..launch.steps import make_train_step
+from ..launch.steps import make_train_step, mesh_signature
 from ..models.registry import build_model
+from ..pipeline.cache import COMPILATION_CACHE
 
 
 @dataclasses.dataclass
@@ -80,7 +81,13 @@ class Trainer:
         b_specs = {"tokens": None}
         self.monitor = HeartbeatMonitor(self.tcfg.heartbeat_deadline_s,
                                         self.tcfg.straggler_factor)
-        self._jitted = jax.jit(self.step_fn, donate_argnums=(0,))
+        # staged-pipeline cache: trainers over the same (config x mesh)
+        # cell share one jitted train step (and its XLA trace) — a
+        # checkpoint/restart or elastic-reshard restart recompiles nothing
+        # that an identical predecessor already compiled.
+        key = ("trainer_step", repr(cfg), mesh_signature(mesh), False)
+        self._jitted = COMPILATION_CACHE.get_or_build(
+            key, lambda: jax.jit(self.step_fn, donate_argnums=(0,)))
 
     # -- state ------------------------------------------------------------
     def init_state(self, seed: int = 0) -> Dict:

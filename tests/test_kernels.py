@@ -2,10 +2,14 @@
 All kernels run in interpret mode (CPU) per the assignment."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
-from repro.kernels import axpydot, dot, gemm, stencil
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+    "package (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+from repro.kernels import axpydot, dot, gemm, stencil  # noqa: E402
 
 RNG = np.random.default_rng(42)
 

@@ -1,0 +1,266 @@
+"""Staged pipeline tests: Wrapped -> Lowered -> Compiled round-trip,
+compilation-cache hit/miss on the SDFG content hash, PassManager
+ordering/skip semantics, and jnp-vs-pallas cross-validation through the
+staged path."""
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (register fused kernels)
+from repro.codegen.compiler import compile_sdfg
+from repro.core.sdfg import SDFG
+from repro.frontends import blas
+from repro.frontends.api import Program, dc_program
+from repro.pipeline import (CompilationCache, Compiled,
+                            DeviceOffloadPass, Lowered, Pass, PassManager,
+                            StreamingCompositionPass, Wrapped,
+                            default_pipeline, lower)
+from repro.transforms import DeviceOffload, StreamingComposition
+
+
+@dc_program
+def axpydot(p, n):
+    a = p.scalar_input("a", "float32")
+    x, y, w = (p.input(nm, (n,)) for nm in ("x", "y", "w"))
+    p.output("result", blas.dot(blas.axpy(a, x, y), w))
+
+
+def build_axpydot(n):
+    p = Program("axpydot")
+    a = p.scalar_input("a", "float32")
+    x, y, w = (p.input(nm, (n,)) for nm in ("x", "y", "w"))
+    p.output("result", blas.dot(blas.axpy(a, x, y), w))
+    return p.finalize()
+
+
+@pytest.fixture
+def data():
+    rng = np.random.default_rng(3)
+    n = 512
+    return dict(
+        n=n, a=np.float32(0.9),
+        x=rng.standard_normal(n).astype(np.float32),
+        y=rng.standard_normal(n).astype(np.float32),
+        w=rng.standard_normal(n).astype(np.float32),
+    )
+
+
+def result_of(compiled, d):
+    out = compiled(a=d["a"], x=d["x"], y=d["y"], w=d["w"])
+    return float(np.asarray(out["result"]).ravel()[0])
+
+
+def expected(d):
+    return float(np.dot((d["a"] * d["x"] + d["y"]).astype(np.float32),
+                        d["w"]))
+
+
+# -- stages ------------------------------------------------------------------
+
+def test_dc_program_returns_wrapped_stage():
+    assert isinstance(axpydot, Wrapped)
+    sdfg = axpydot(64)          # calling traces to the raw SDFG
+    assert isinstance(sdfg, SDFG)
+    low = axpydot.lower(64)
+    assert isinstance(low, Lowered)
+    assert isinstance(low.compile("jnp", cache=None), Compiled)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_stage_roundtrip_matches_compile_sdfg(backend, data):
+    """Wrapped.lower().compile() ≡ the legacy one-shot compile_sdfg."""
+    staged = axpydot.lower(data["n"]).optimize(
+        [DeviceOffloadPass(), StreamingCompositionPass()])
+    c_new = staged.compile(backend, cache=None)
+
+    legacy_sdfg = build_axpydot(data["n"])
+    legacy_sdfg.apply(DeviceOffload)
+    legacy_sdfg.apply(StreamingComposition)
+    c_old = compile_sdfg(legacy_sdfg, backend=backend)
+
+    r_new, r_old = result_of(c_new, data), result_of(c_old, data)
+    np.testing.assert_allclose(r_new, r_old, rtol=1e-6)
+    np.testing.assert_allclose(r_new, expected(data), rtol=1e-4)
+    assert c_new.report["fused_regions"] == c_old.report["fused_regions"]
+
+
+def test_compile_does_not_mutate_lowered_sdfg(data):
+    staged = axpydot.lower(data["n"])
+    h = staged.sdfg.content_hash()
+    staged.compile("jnp", cache=None)
+    assert staged.sdfg.content_hash() == h
+    assert staged.sdfg.all_library_nodes()  # still unexpanded
+
+
+def test_legacy_compile_sdfg_expands_in_place(data):
+    sdfg = build_axpydot(data["n"])
+    compile_sdfg(sdfg, backend="jnp")
+    assert not sdfg.all_library_nodes()
+
+
+def test_jnp_pallas_cross_validation_staged(data):
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        staged = axpydot.lower(data["n"]).optimize(
+            [DeviceOffloadPass(), StreamingCompositionPass()])
+        c = staged.compile(backend, cache=None)
+        if backend == "pallas":
+            assert c.report["fused_regions"] == ["Axpy+Dot"]
+        outs[backend] = result_of(c, data)
+    np.testing.assert_allclose(outs["jnp"], outs["pallas"], rtol=1e-4)
+    np.testing.assert_allclose(outs["jnp"], expected(data), rtol=1e-4)
+
+
+def test_wrapped_symbol_binding():
+    @dc_program
+    def scaled(p):
+        x = p.input("x", ("n",), "float32")
+        y = p.input("y", ("n",), "float32")
+        a = p.scalar_input("a", "float32")
+        p.output("z", blas.axpy(a, x, y))
+
+    low = scaled.lower(n=48)     # 'n' is not a builder arg -> symbol binding
+    assert low.sdfg.symbol_values["n"] == 48
+    c = low.compile("jnp", cache=None)
+    rng = np.random.default_rng(0)
+    x, y = (rng.standard_normal(48).astype(np.float32) for _ in range(2))
+    out = c(a=np.float32(2.0), x=x, y=y)
+    np.testing.assert_allclose(np.asarray(out["z"]), 2.0 * x + y, rtol=1e-5)
+
+
+# -- compilation cache -------------------------------------------------------
+
+def test_cache_hit_on_identical_sdfg(data):
+    cache = CompilationCache()
+    staged = axpydot.lower(data["n"])
+    c1 = staged.compile("jnp", cache=cache)
+    assert cache.stats == {"entries": 1, "hits": 0, "misses": 1}
+    c2 = staged.compile("jnp", cache=cache)
+    assert c2 is c1                       # served from the cache
+    assert cache.stats["hits"] == 1
+
+    # a separately-built but identical program also hits
+    c3 = axpydot.lower(data["n"]).compile("jnp", cache=cache)
+    assert c3 is c1
+    assert cache.stats["hits"] == 2
+
+
+def test_cache_miss_on_different_backend_pipeline_or_content(data):
+    cache = CompilationCache()
+    staged = axpydot.lower(data["n"])
+    c1 = staged.compile("jnp", cache=cache)
+    # different backend -> miss
+    c2 = staged.compile("pallas", cache=cache)
+    assert c2 is not c1
+    # different pipeline config -> miss
+    c3 = staged.compile("jnp", expansion_level="generic", cache=cache)
+    assert c3 is not c1
+    # different content (other symbol size) -> miss
+    c4 = axpydot.lower(data["n"] // 2).compile("jnp", cache=cache)
+    assert c4 is not c1
+    assert cache.stats["entries"] == 4
+    # transformed variant hashes differently -> miss
+    c5 = axpydot.lower(data["n"]).optimize(
+        [DeviceOffloadPass()]).compile("jnp", cache=cache)
+    assert c5 is not c1
+
+
+def test_cache_lru_bound():
+    cache = CompilationCache(max_entries=2)
+    for i in range(4):
+        cache.store(("k", i), i)
+    assert len(cache) == 2
+    assert cache.lookup(("k", 3)) == 3
+    assert cache.lookup(("k", 0)) is None
+
+
+def test_content_hash_sensitivity(data):
+    s1, s2 = build_axpydot(data["n"]), build_axpydot(data["n"])
+    assert s1.content_hash() == s2.content_hash()
+    s2.metadata["pin_hbm"] = ("x",)
+    assert s1.content_hash() != s2.content_hash()
+    s3 = build_axpydot(data["n"])
+    s3.specialize(batch=4)
+    assert s1.content_hash() != s3.content_hash()
+    s4 = build_axpydot(data["n"])
+    s4.arrays["x"].vector_width = 128
+    assert s1.content_hash() != s4.content_hash()
+
+
+# -- PassManager -------------------------------------------------------------
+
+class _Recorder(Pass):
+    def __init__(self, tag, log):
+        self.tag = tag
+        self.log = log
+        self.name = tag
+
+    def apply(self, sdfg, report):
+        self.log.append(self.tag)
+        return self.tag
+
+    def options(self):
+        return {"tag": self.tag}
+
+
+def test_passmanager_runs_in_order_with_timing():
+    log = []
+    pm = PassManager([_Recorder(t, log) for t in ("a", "b", "c")],
+                     name="ordered")
+    report = pm.run(SDFG("empty"))
+    assert log == ["a", "b", "c"]
+    names = [e["name"] for e in report["passes"]]
+    assert names == ["a", "b", "c"]
+    assert all(e["seconds"] >= 0.0 and not e["skipped"]
+               for e in report["passes"])
+    assert [e["summary"] for e in report["passes"]] == ["a", "b", "c"]
+
+
+def test_passmanager_skip_semantics():
+    log = []
+    pm = PassManager([_Recorder(t, log) for t in ("a", "b", "c")],
+                     skip=("b",))
+    report = pm.run(SDFG("empty"), skip=("c",))
+    assert log == ["a"]  # b skipped by manager config, c by run() argument
+    by_name = {e["name"]: e for e in report["passes"]}
+    assert not by_name["a"]["skipped"]
+    assert by_name["b"]["skipped"] and by_name["c"]["skipped"]
+    # skip set is part of the cache signature
+    assert PassManager([], skip=("b",)).signature() != \
+        PassManager([]).signature()
+
+
+def test_passmanager_accepts_transformation_classes(data):
+    staged = axpydot.lower(data["n"])
+    staged.optimize([DeviceOffload, StreamingComposition])
+    entries = staged.reports[-1]["passes"]
+    assert [e["name"] for e in entries] == ["DeviceOffload",
+                                            "StreamingComposition"]
+    assert entries[0]["summary"] == 1  # applied once
+
+
+def test_default_pipeline_shapes():
+    jnp_pm = default_pipeline("jnp")
+    pal_pm = default_pipeline("pallas", interpret=True)
+    assert [p.name for p in jnp_pm] == ["SetExpansionPreference",
+                                        "ExpandLibraryNodes"]
+    assert [p.name for p in pal_pm] == ["SetExpansionPreference",
+                                        "PipelineFusion",
+                                        "ExpandLibraryNodes"]
+    assert jnp_pm.signature() != pal_pm.signature()
+
+
+# -- frontend satellite ------------------------------------------------------
+
+def test_output_rename_collision_raises():
+    n = 16
+    p = Program("collide")
+    a = p.scalar_input("a", "float32")
+    x, y = p.input("x", (n,)), p.input("y", (n,))
+    z = blas.axpy(a, x, y)
+    with pytest.raises(ValueError, match="already exists"):
+        p.output("x", z)  # would silently overwrite input descriptor 'x'
+
+
+def test_lower_helper_validates():
+    s = build_axpydot(64)
+    assert isinstance(lower(s), Lowered)

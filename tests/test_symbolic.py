@@ -1,8 +1,12 @@
 """Symbolic engine unit + property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.symbolic import Expr, evaluate, prod, sym
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+    "package (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.symbolic import Expr, evaluate, prod, sym  # noqa: E402
 
 
 def test_basic_algebra():

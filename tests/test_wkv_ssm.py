@@ -1,11 +1,15 @@
 """Chunked WKV6 / chunked selective-scan vs sequential references."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-import jax
-import jax.numpy as jnp
-from repro.models import blocks
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+    "package (pip install repro[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from repro.models import blocks  # noqa: E402
 
 RNG = np.random.default_rng(7)
 
