@@ -41,10 +41,11 @@ def _time(fn, *args, reps=5, **kw):
     return (time.perf_counter() - t0) / reps
 
 
-def run(report):
+def run(report, small: bool = False):
+    bench_n = 65_536 if small else BENCH_N
     rng = np.random.default_rng(0)
     a = np.float32(0.7)
-    x, y, w = (rng.standard_normal(BENCH_N).astype(np.float32)
+    x, y, w = (rng.standard_normal(bench_n).astype(np.float32)
                for _ in range(3))
     exp = np.dot((a * x + y).astype(np.float32), w)
 
@@ -61,18 +62,18 @@ def run(report):
               .processing_elements())
 
     # runtimes at reduced N, through the staged pipeline
-    c1 = lower(build(BENCH_N)).optimize([DeviceOffloadPass()]).compile("jnp")
+    c1 = lower(build(bench_n)).optimize([DeviceOffloadPass()]).compile("jnp")
     t_naive = _time(c1, a=a, x=x, y=y, w=w)
     out = c1(a=a, x=x, y=y, w=w)
     assert abs(float(np.asarray(out["result"]).ravel()[0]) - exp) < \
         1e-3 * abs(exp)
 
-    c2 = lower(build(BENCH_N)).optimize(
+    c2 = lower(build(bench_n)).optimize(
         [DeviceOffloadPass(), StreamingCompositionPass(),
          StreamingMemoryPass()]).compile("jnp")
     t_stream = _time(c2, a=a, x=x, y=y, w=w)
 
-    c3 = lower(build(BENCH_N)).optimize(
+    c3 = lower(build(bench_n)).optimize(
         [DeviceOffloadPass(), StreamingCompositionPass()]).compile("pallas")
     t_fused = _time(c3, a=a, x=x, y=y, w=w)
 
@@ -81,8 +82,8 @@ def run(report):
     report("axpydot_stream_volume_GiB", v_stream / 2**30,
            f"volume ratio {v_naive/v_stream:.3f} (z round-trip removed)")
     report("axpydot_stream_PEs", pes, "paper: 5 modules (we count writer+dot)")
-    report("axpydot_naive_ms", t_naive * 1e3, f"n={BENCH_N}, CPU jnp")
+    report("axpydot_naive_ms", t_naive * 1e3, f"n={bench_n}, CPU jnp")
     report("axpydot_stream_ms", t_stream * 1e3,
            f"speedup {t_naive/t_stream:.2f}x (paper: 2.6x on U250)")
     report("axpydot_fused_pallas_ms", t_fused * 1e3,
-           f"fused regions {c3.report['fused_regions']}")
+           f"fused regions {c3.report['fused_regions']}", backend="pallas")

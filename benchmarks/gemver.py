@@ -94,9 +94,9 @@ def _kernel_volume(sdfg):
     return main.off_chip_volume()
 
 
-def run(report):
+def run(report, small: bool = False):
     rng = np.random.default_rng(0)
-    n = BENCH_N
+    n = 256 if small else BENCH_N
     d = {k: rng.standard_normal((n, n) if k == "A" else n
                                 ).astype(np.float32)
          for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}

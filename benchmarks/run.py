@@ -1,11 +1,19 @@
 """Benchmark harness: one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only axpydot,...]
+                                               [--small] [--json OUT]
 Prints ``name,value,derived`` CSV lines; exits non-zero on any failure.
+``--small`` shrinks problem sizes for CI smoke runs; ``--json OUT``
+additionally writes one machine-readable ``BENCH_<name>.json`` per module
+(entries: name, value, derived, backend) so the perf trajectory can be
+tracked across commits.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import traceback
 
@@ -13,6 +21,10 @@ import traceback
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--small", action="store_true",
+                    help="reduced problem sizes (CI smoke)")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
+                    help="directory to write BENCH_<name>.json records")
     args = ap.parse_args()
 
     from . import axpydot, gemver, lenet, stencil_bench
@@ -24,20 +36,36 @@ def main() -> int:
     }
     only = set(args.only.split(",")) if args.only else set(modules)
 
-    def report(name, value, derived=""):
-        print(f"{name},{value:.6g},{derived}", flush=True)
+    if args.json_out:
+        os.makedirs(args.json_out, exist_ok=True)
 
     failed = []
     print("name,value,derived")
     for name, mod in modules.items():
         if name not in only:
             continue
+        entries = []
+
+        def report(bname, value, derived="", backend="jnp"):
+            print(f"{bname},{value:.6g},{derived}", flush=True)
+            entries.append({"name": bname, "value": float(value),
+                            "derived": derived, "backend": backend})
+
         try:
-            mod.run(report)
+            if "small" in inspect.signature(mod.run).parameters:
+                mod.run(report, small=args.small)
+            else:
+                mod.run(report)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+        if args.json_out and name not in failed:
+            # never write partial records for a failed module: a truncated
+            # file would read as a complete (fast!) run to perf tracking
+            path = os.path.join(args.json_out, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(entries, f, indent=1)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         return 1

@@ -1,3 +1,15 @@
 from .compiler import BACKENDS, CompiledSDFG, compile_sdfg
 
-__all__ = ["BACKENDS", "CompiledSDFG", "compile_sdfg"]
+
+def get_backend(name: str):
+    """Backend codegen module (must expose ``build_callable``)."""
+    from . import jnp_backend, pallas_backend
+    modules = {"jnp": jnp_backend, "pallas": pallas_backend}
+    try:
+        return modules[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; choose from {sorted(modules)}")
+
+
+__all__ = ["BACKENDS", "CompiledSDFG", "compile_sdfg", "get_backend"]

@@ -52,35 +52,50 @@ def _static_int(v) -> bool:
 
 
 def subset_static_sizes(subset: Subset, env: Dict[str, object]) -> Tuple[int, ...]:
-    """Range sizes must be static (trace-time constants)."""
+    """Range sizes must be static (trace-time constants). Sizes are the
+    *element counts*: ceil((stop-start)/step), so strided half-open ranges
+    whose span is not a step multiple (x[0:15:2]) size like numpy."""
+    static = {k: v for k, v in env.items() if _static_int(v)}
     sizes = []
     for r in subset:
-        size = eval_expr(r.size, {k: v for k, v in env.items() if _static_int(v)})
-        if not _static_int(size):
-            raise ValueError(f"memlet range size must be static, got {size}")
-        sizes.append(size)
+        span = eval_expr(r.stop - r.start, static)
+        step = eval_expr(r.step, static)
+        if not _static_int(span) or not _static_int(step):
+            raise ValueError(
+                f"memlet range size must be static, got {r.size}")
+        sizes.append(-(-span // step))
     return tuple(sizes)
 
 
 def read_memlet(value, memlet: Memlet, env: Dict[str, object]):
     """Read the memlet's subset out of a container value. Index (size-1)
-    dimensions are squeezed, DaCe-style."""
+    dimensions are squeezed, DaCe-style. Strides must be static: static
+    starts lower to strided slices, traced starts to per-dimension gathers
+    (needed e.g. for interleaved partial-sum subsets like ``x[l::K]``)."""
     if memlet.subset is None:
         return value
     subset = memlet.subset
     sizes = subset_static_sizes(subset, env)
     starts = [eval_expr(r.start, env) for r in subset]
     steps = [eval_expr(r.step, env) for r in subset]
-    if any(not _static_int(s) or s != 1 for s in steps):
-        raise NotImplementedError("strided memlet reads not supported")
+    if any(not _static_int(s) for s in steps):
+        raise NotImplementedError("dynamic memlet strides not supported")
     squeeze = tuple(i for i, r in enumerate(subset) if r.is_index())
     if len(squeeze) == len(subset):
         return value[tuple(starts)]  # all-index: scalar (gather if traced)
     if all(_static_int(s) for s in starts):
-        slc = tuple(slice(st, st + sz) for st, sz in zip(starts, sizes))
+        slc = tuple(slice(st, st + sz * sp, sp)
+                    for st, sz, sp in zip(starts, sizes, steps))
         out = value[slc]
-    else:
+    elif all(sp == 1 for sp in steps):
         out = jax.lax.dynamic_slice(value, starts, sizes)
+    else:
+        # traced start with a static stride: gather along each dimension
+        out = value
+        for d, (st, sz, sp) in enumerate(zip(starts, sizes, steps)):
+            if sz == out.shape[d] and _static_int(st) and st == 0 and sp == 1:
+                continue
+            out = jnp.take(out, st + sp * jnp.arange(sz), axis=d)
     if squeeze:
         out = jnp.squeeze(out, axis=squeeze)
     return out
@@ -101,6 +116,11 @@ def write_memlet(container_value, memlet: Memlet, new_value,
     subset = memlet.subset
     sizes = subset_static_sizes(subset, env)
     starts = [eval_expr(r.start, env) for r in subset]
+    steps = [eval_expr(r.step, env) for r in subset]
+    if any(not _static_int(s) or s != 1 for s in steps):
+        # reads support static strides; writes would silently land on the
+        # wrong (contiguous) positions — fail loudly (see ROADMAP).
+        raise NotImplementedError("strided memlet writes not supported")
     all_index = all(r.is_index() for r in subset)
     if all_index:
         ref = container_value.at[tuple(starts)]

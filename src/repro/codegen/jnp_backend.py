@@ -44,6 +44,14 @@ def container_shape(desc, env: Dict[str, int]):
 
 
 class StateLowering:
+    """Structural interpreter over one state's dataflow graph.
+
+    Node dispatch, memlet reads/writes, and the generic map lowerings
+    (sequential / vmap) are shared backend infrastructure; subclasses plug
+    in platform map-lowering strategies by overriding
+    :meth:`_lower_map_custom` (e.g. the Pallas backend's grid codegen).
+    """
+
     def __init__(self, sdfg: SDFG, state: State, env: Dict[str, object],
                  symenv: Dict[str, object]):
         self.sdfg = sdfg
@@ -189,7 +197,7 @@ class StateLowering:
         inner_syms = dict(inner.symbol_values)
         for k, v in node.symbol_mapping.items():
             inner_syms[k] = eval_expr(v, self.symenv)
-        lower_sdfg_body(inner, inner_env, inner_syms)
+        lower_sdfg_body(inner, inner_env, inner_syms, lowering=type(self))
         for e in self.state.out_edges(node):
             if e.src_conn is None:
                 continue
@@ -211,6 +219,8 @@ class StateLowering:
         exit_ = self._map_scope_edges(entry)
         children = self.scopes.get(entry, [])
         inner = [n for n in children if not isinstance(n, MapExit)]
+        if self._lower_map_custom(entry, exit_, inner):
+            return
         m = entry.map
         static = self._static_syms()
         sizes = [int(eval_expr(r.size, static)) for r in m.ranges]
@@ -220,15 +230,37 @@ class StateLowering:
         if m.schedule in (ScheduleType.UNROLLED, ScheduleType.MESH,
                           ScheduleType.MXU):
             self._run_map_sequential(entry, exit_, inner, sizes, starts)
-        elif single_tasklet:
+        elif single_tasklet and not self._has_param_slice_writes(inner[0], m):
             self._run_map_vmap(entry, exit_, inner[0], sizes, starts)
         else:
             total = int(np.prod(sizes)) if sizes else 1
             if total > SEQUENTIAL_TRIP_LIMIT:
                 raise NotImplementedError(
                     f"map {m.label!r}: {total} sequential iterations exceeds "
-                    f"trace-time limit; restructure as mapped tasklet")
+                    f"trace-time limit; restructure as mapped tasklet or "
+                    f"compile with the pallas backend's grid codegen")
             self._run_map_sequential(entry, exit_, inner, sizes, starts)
+
+    def _lower_map_custom(self, entry: MapEntry, exit_: MapExit,
+                          inner: List) -> bool:
+        """Platform map-lowering hook; return True when the map was handled.
+        The base (XLA-auto) backend has no platform strategy."""
+        return False
+
+    def _has_param_slice_writes(self, tasklet: Tasklet, m) -> bool:
+        """Vectorized lowering cannot scatter a per-iteration *slice*; such
+        maps fall back to the sequential schedule instead of hard-failing."""
+        params = set(m.params)
+        for e in self.state.out_edges(tasklet):
+            subset = e.memlet.subset
+            if subset is None:
+                continue
+            used = set()
+            for r in subset:
+                used |= (r.start.free_symbols & params)
+            if used and any(not r.is_index() for r in subset):
+                return True
+        return False
 
     def _run_map_sequential(self, entry, exit_, inner, sizes, starts):
         """Trace-time loop (paper: unrolled map = replicated hardware)."""
@@ -382,15 +414,17 @@ class StateLowering:
 
 # ---------------------------------------------------------------------------
 def lower_sdfg_body(sdfg: SDFG, env: Dict[str, object],
-                    symenv: Dict[str, object]):
-    """Execute states in control-flow order against ``env`` in place."""
+                    symenv: Dict[str, object], lowering=None):
+    """Execute states in control-flow order against ``env`` in place.
+    ``lowering`` selects the per-backend :class:`StateLowering` strategy."""
+    lowering = lowering or StateLowering
     order = sdfg.state_order()
     visited_guard = 0
     current = sdfg.start_state if sdfg.start_state is not None else (
         order[0] if order else None)
     done = set()
     while current is not None:
-        StateLowering(sdfg, current, env, symenv).run()
+        lowering(sdfg, current, env, symenv).run()
         done.add(current)
         succs = list(sdfg.cfg.successors(current))
         nxt = None
@@ -430,8 +464,9 @@ def classify_arguments(sdfg: SDFG):
     return inputs, outputs
 
 
-def build_callable(sdfg: SDFG):
-    """Build fn(**arrays) -> dict of written non-transient containers."""
+def build_callable(sdfg: SDFG, lowering=None):
+    """Build fn(**arrays) -> dict of written non-transient containers.
+    ``lowering`` selects the per-backend :class:`StateLowering` strategy."""
     inputs, written = classify_arguments(sdfg)
 
     def fn(**kwargs):
@@ -444,7 +479,7 @@ def build_callable(sdfg: SDFG):
         for name, v in sdfg.constants.items():
             env[name] = jnp.asarray(v)
         symenv = dict(sdfg.symbol_values)
-        lower_sdfg_body(sdfg, env, symenv)
+        lower_sdfg_body(sdfg, env, symenv, lowering=lowering)
         return {k: env[k] for k in sorted(written)}
 
     fn.__name__ = f"sdfg_{sdfg.name}"

@@ -1,0 +1,414 @@
+"""The explicit Pallas backend: native grid codegen for SDFG map scopes.
+
+Where the XLA-auto backend (jnp_backend) structurally *interprets* map
+scopes — vmap for mapped tasklets, trace-time Python loops otherwise,
+capped at ``SEQUENTIAL_TRIP_LIMIT`` — this backend lowers eligible
+DEVICE/PIPELINED map scopes directly to a single ``pl.pallas_call`` grid
+kernel, the way the paper's code generator emits complete platform
+kernels from the dataflow IR:
+
+  * the ``grid`` comes from the map ranges (tile-counter parameters after
+    MapTiling; every parameter of an untiled map);
+  * each memlet's affine subset is factored by
+    :func:`core.memlet.factor_subset` into ``block_shape`` + an
+    ``index_map`` over grid coordinates — exactly a Pallas ``BlockSpec``.
+    Intra-tile parameters (MapTiling annotations) widen index dimensions
+    into VMEM-resident blocks;
+  * write-conflict-resolution ``add`` memlets whose index map ignores some
+    grid dimensions become VMEM scratch accumulators with
+    ``@pl.when(k == 0)`` init and a flush on the last reduction step —
+    the pattern hand-written in ``kernels/gemm/kernel.py``. Reduction
+    dimensions are ordered innermost so the output block stays resident
+    across the accumulation;
+  * tasklet bodies are applied per-element via nested ``vmap`` over the
+    intra-tile parameters, so scalar tasklets stay scalar semantics-wise
+    while executing on whole blocks.
+
+Maps whose memlets are non-affine, dynamic, strided, or misaligned are
+left un-annotated by ``GridConversionPass`` and fall back to the shared
+structural-interpreter lowering — mirroring the paper's fallback to
+generic expansions.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.dtypes import ScheduleType
+from ..core.memlet import (BlockFactorError, SubsetFactorization,
+                           factor_subset)
+from ..core.sdfg import (MapEntry, MapExit, Scalar, SDFG, State, Stream,
+                         Tasklet)
+from .jnp_backend import StateLowering, build_callable as _build_callable
+
+#: annotation key GridConversionPass writes and this backend consumes.
+GRID_ANNOTATION = "pallas_grid"
+
+
+@dataclass(frozen=True)
+class EdgeSpec:
+    """One tasklet edge lowered to a Pallas operand."""
+    conn: str
+    data: str
+    fact: SubsetFactorization
+    scalar: bool = False                       # 0-d container, carried as (1,)
+    wcr: Optional[str] = None                  # outputs only
+    reduction: Tuple[str, ...] = ()            # grid params absent from index
+    box: Tuple[Tuple[int, int], ...] = ()      # written element range per dim
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    """Complete derived grid-kernel description for one map scope."""
+    kernel_name: str
+    grid: Tuple[Tuple[str, int], ...]          # (param, size) in grid order
+    block_params: Tuple[Tuple[str, int], ...]  # intra-tile params + extents
+    inputs: Tuple[EdgeSpec, ...]
+    outputs: Tuple[EdgeSpec, ...]
+
+
+def _scalar_fact() -> SubsetFactorization:
+    from ..core.symbolic import Expr
+    return SubsetFactorization((1,), (Expr.const(0),), (0,))
+
+
+def _tasklet_of(state: State, entry: MapEntry, scopes) -> Tasklet:
+    inner = [n for n in scopes.get(entry, []) if not isinstance(n, MapExit)]
+    if len(inner) != 1 or not isinstance(inner[0], Tasklet):
+        raise BlockFactorError(
+            f"map {entry.map.label!r}: grid codegen requires a single-"
+            f"tasklet scope, got {[type(n).__name__ for n in inner]}")
+    return inner[0]
+
+
+def _in_edges(state: State, t: Tasklet):
+    return [e for e in state.in_edges(t)
+            if e.dst_conn is not None and e.memlet.data is not None]
+
+
+def _out_edges(state: State, t: Tasklet):
+    return [e for e in state.out_edges(t) if e.memlet.data is not None]
+
+
+def _output_box(fact: SubsetFactorization, grid: Dict[str, Tuple[int, int]],
+                label: str) -> Tuple[Tuple[int, int], ...]:
+    """Element-range box written by an output across the whole grid; also
+    verifies full coverage inside the box (each dim's block index must be a
+    constant or ``param + const`` with a param used by no other dim)."""
+    box = []
+    seen_params = set()
+    for d, (e, bs) in enumerate(zip(fact.index_exprs, fact.block_shape)):
+        c0 = 0
+        syms = {}
+        for mono, c in e.terms.items():
+            if mono == ():
+                c0 = int(c)
+            else:
+                syms[mono[0][0]] = c
+        if not syms:
+            box.append((c0 * bs, c0 * bs + bs))
+            continue
+        if len(syms) > 1 or set(syms) & seen_params:
+            raise BlockFactorError(
+                f"output of {label!r}: dim {d} index {e} not contiguously "
+                f"covered across the grid")
+        (g, cg), = syms.items()
+        if cg != 1:
+            raise BlockFactorError(
+                f"output of {label!r}: dim {d} strides blocks by {cg}")
+        seen_params.add(g)
+        n = grid[g][1]
+        box.append((c0 * bs, (c0 + n - 1) * bs + bs))
+    return tuple(box)
+
+
+def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
+                      scopes=None, env: Optional[Dict[str, int]] = None
+                      ) -> GridSpec:
+    """Derive a :class:`GridSpec` for a map scope, or raise
+    :class:`BlockFactorError` when the scope must fall back to the
+    structural interpreter."""
+    m = entry.map
+    if m.schedule not in (ScheduleType.PIPELINED, ScheduleType.DEVICE):
+        raise BlockFactorError(
+            f"map {m.label!r}: schedule {m.schedule.value} is not a grid")
+    scopes = scopes if scopes is not None else state.scope_children()
+    t = _tasklet_of(state, entry, scopes)
+    env = dict(sdfg.symbol_values) if env is None else dict(env)
+
+    tiling = dict(m.annotations.get("tiling", {}))
+    grid_params: Dict[str, Tuple[int, int]] = {}
+    block_params: Dict[str, int] = {}
+    for p, r in zip(m.params, m.ranges):
+        try:
+            start, size = r.start.subs(env).as_int(), r.size.subs(env).as_int()
+        except Exception as exc:
+            raise BlockFactorError(
+                f"map {m.label!r}: dynamic range for {p}") from exc
+        if size < 1:
+            raise BlockFactorError(f"map {m.label!r}: empty range for {p}")
+        if p in tiling and size > 1:
+            if start != 0 or size != int(tiling[p]):
+                raise BlockFactorError(
+                    f"map {m.label!r}: tile param {p} range [{start}, "
+                    f"+{size}) disagrees with tiling annotation {tiling[p]}")
+            block_params[p] = size
+        else:
+            grid_params[p] = (start, size)
+    if not grid_params:
+        raise BlockFactorError(f"map {m.label!r}: no grid parameters")
+
+    def _factor(memlet):
+        if memlet.dynamic:
+            raise BlockFactorError(f"dynamic memlet {memlet}")
+        if memlet.data not in sdfg.arrays:
+            raise BlockFactorError(f"no descriptor for {memlet.data!r}")
+        desc = sdfg.arrays[memlet.data]
+        if isinstance(desc, Stream):
+            raise BlockFactorError(f"stream operand {memlet.data!r}")
+        if isinstance(desc, Scalar) or not getattr(desc, "shape", ()):
+            return _scalar_fact(), True
+        return factor_subset(memlet.subset, desc.shape, grid_params,
+                             block_params, env), False
+
+    inputs = []
+    for e in _in_edges(state, t):
+        fact, scalar = _factor(e.memlet)
+        inputs.append(EdgeSpec(e.dst_conn, e.memlet.data, fact, scalar))
+
+    out_edge_list = _out_edges(state, t)
+    if not out_edge_list:
+        raise BlockFactorError(f"map {m.label!r}: tasklet has no outputs")
+    used_any: List[str] = []
+    outs_raw = []
+    for e in out_edge_list:
+        if e.memlet.wcr not in (None, "add"):
+            raise BlockFactorError(
+                f"map {m.label!r}: wcr {e.memlet.wcr!r} unsupported")
+        fact, scalar = _factor(e.memlet)
+        box = _output_box(fact, grid_params, m.label)
+        used = set()
+        for ex in fact.index_exprs:
+            used |= ex.free_symbols
+        for p in m.params:
+            if p in used and p in grid_params and p not in used_any:
+                used_any.append(p)
+        outs_raw.append((e, fact, scalar, box, used))
+
+    # grid order: output-indexing params first (original order), reduction
+    # params innermost so scratch accumulators stay block-resident.
+    order = [p for p in m.params if p in grid_params and p in used_any]
+    order += [p for p in m.params if p in grid_params and p not in used_any]
+    outputs = []
+    for e, fact, scalar, box, used in outs_raw:
+        reduction = tuple(p for p in order if p not in used)
+        # every reduction dim must iterate inside every used dim
+        max_used = max((order.index(p) for p in order if p in used),
+                       default=-1)
+        if any(order.index(p) < max_used for p in reduction):
+            raise BlockFactorError(
+                f"map {m.label!r}: reduction params {reduction} cannot be "
+                f"ordered innermost for output {e.memlet.data!r}")
+        if e.memlet.wcr is None and reduction and not getattr(
+                t, "side_effect_free", True):
+            raise BlockFactorError(f"map {m.label!r}: side-effecting tasklet")
+        outputs.append(EdgeSpec(e.src_conn, e.memlet.data, fact, scalar,
+                                e.memlet.wcr, reduction, box))
+
+    return GridSpec(
+        kernel_name=m.label,
+        grid=tuple((p, grid_params[p][1]) for p in order),
+        block_params=tuple(sorted(block_params.items())),
+        inputs=tuple(inputs), outputs=tuple(outputs))
+
+
+# ---------------------------------------------------------------------------
+# Kernel emission
+# ---------------------------------------------------------------------------
+
+
+def _squeeze_adjusted_axis(fact: SubsetFactorization, dim: int) -> int:
+    """Axis of ``dim`` in the loaded value after squeezing."""
+    return dim - sum(1 for s in fact.squeeze_dims if s < dim)
+
+
+def _conds(ids, positions, sizes, at_end: bool):
+    conds = [ids[k] == (sizes[k] - 1 if at_end else 0) for k in positions]
+    return functools.reduce(jnp.logical_and, conds)
+
+
+class PallasStateLowering(StateLowering):
+    """State lowering that emits ``pl.pallas_call`` grid kernels for map
+    scopes annotated by ``GridConversionPass`` and shares the structural
+    interpreter for everything else."""
+
+    def _lower_map_custom(self, entry: MapEntry, exit_: MapExit,
+                          inner: List) -> bool:
+        spec: Optional[GridSpec] = entry.map.annotations.get(GRID_ANNOTATION)
+        if spec is None:
+            return False
+        if len(inner) != 1 or not isinstance(inner[0], Tasklet):
+            return False
+        self._emit_grid_kernel(entry, inner[0], spec)
+        return True
+
+    # ------------------------------------------------------------------
+    def _emit_grid_kernel(self, entry: MapEntry, tasklet: Tasklet,
+                          spec: GridSpec):
+        interpret = self.sdfg.metadata.get("pallas_interpret", True)
+        grid_names = [p for p, _ in spec.grid]
+        grid_sizes = tuple(n for _, n in spec.grid)
+        block_order = [q for q, _ in spec.block_params]
+
+        in_vals = []
+        for es in spec.inputs:
+            v = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                v = jnp.reshape(v, (1,))
+            in_vals.append(v)
+        in_specs = [pl.BlockSpec(es.fact.block_shape,
+                                 es.fact.index_map(grid_names))
+                    for es in spec.inputs]
+
+        prev_vals, out_specs, out_shapes = [], [], []
+        scratch_shapes, scratch_index = [], {}
+        for oi, es in enumerate(spec.outputs):
+            pv = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                pv = jnp.reshape(pv, (1,))
+            prev_vals.append(pv)
+            out_specs.append(pl.BlockSpec(es.fact.block_shape,
+                                          es.fact.index_map(grid_names)))
+            out_shapes.append(jax.ShapeDtypeStruct(pv.shape, pv.dtype))
+            if es.wcr == "add" and es.reduction:
+                scratch_index[oi] = len(scratch_shapes)
+                scratch_shapes.append(
+                    pltpu.VMEM(es.fact.block_shape, pv.dtype))
+
+        out_conns = [es.conn for es in spec.outputs]
+        tasklet_outputs = list(getattr(tasklet, "outputs", out_conns))
+        fn = tasklet.fn
+
+        def call_fn(kwargs):
+            r = fn(**kwargs)
+            if not isinstance(r, dict):
+                if isinstance(r, tuple):
+                    r = dict(zip(tasklet_outputs, r))
+                else:
+                    r = {out_conns[0]: r}
+            return tuple(r[c] for c in out_conns)
+
+        n_in, n_out = len(spec.inputs), len(spec.outputs)
+
+        def kernel(*refs):
+            ins = refs[:n_in]
+            outs = refs[n_in:n_in + n_out]
+            scratch = refs[n_in + n_out:]
+            ids = [pl.program_id(k) for k in range(len(grid_names))]
+
+            kwargs = {}
+            for es, ref in zip(spec.inputs, ins):
+                v = ref[...]
+                if es.fact.squeeze_dims:
+                    v = jnp.squeeze(v, axis=es.fact.squeeze_dims)
+                pd = dict(es.fact.param_dims)
+                present = [q for q in block_order if q in pd]
+                if present:  # tile axes to the front, in block-param order
+                    src = [_squeeze_adjusted_axis(es.fact, pd[q])
+                           for q in present]
+                    v = jnp.moveaxis(v, src, list(range(len(src))))
+                kwargs[es.conn] = v
+
+            if block_order:
+                f = call_fn
+                for q in reversed(block_order):
+                    axes = {es.conn: (0 if q in dict(es.fact.param_dims)
+                                      else None) for es in spec.inputs}
+                    f = jax.vmap(f, in_axes=(axes,), out_axes=0)
+                results = f(kwargs)
+            else:
+                results = call_fn(kwargs)
+
+            for oi, (es, oref) in enumerate(zip(spec.outputs, outs)):
+                val = jnp.asarray(results[oi])
+                val = self._assemble_block(val, es, block_order)
+                if es.wcr == "add" and es.reduction:
+                    acc = scratch[scratch_index[oi]]
+                    red_pos = [grid_names.index(p) for p in es.reduction]
+                    first = _conds(ids, red_pos, grid_sizes, at_end=False)
+                    last = _conds(ids, red_pos, grid_sizes, at_end=True)
+
+                    @pl.when(first)
+                    def _init(acc=acc):
+                        acc[...] = jnp.zeros(acc.shape, acc.dtype)
+
+                    acc[...] = acc[...] + val.astype(acc.dtype)
+
+                    @pl.when(last)
+                    def _flush(acc=acc, oref=oref):
+                        oref[...] = acc[...].astype(oref.dtype)
+                else:
+                    oref[...] = val.astype(oref.dtype)
+
+        results = pl.pallas_call(
+            kernel, grid=grid_sizes, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shapes, scratch_shapes=scratch_shapes,
+            interpret=interpret)(*in_vals)
+        if not isinstance(results, (list, tuple)):
+            results = (results,)
+
+        for es, new in zip(spec.outputs, results):
+            # Stitch the written box into the prior container contents:
+            # grid kernels only define the blocks their index maps touch.
+            # Re-fetch per output: two edges may target the same container.
+            prev = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                prev = jnp.reshape(prev, (1,))
+            sl = tuple(slice(lo, hi) for lo, hi in es.box)
+            if es.wcr == "add":
+                cur = prev.at[sl].add(new[sl])
+            elif all((lo, hi) == (0, s) for (lo, hi), s
+                     in zip(es.box, prev.shape)):
+                cur = new
+            else:
+                cur = prev.at[sl].set(new[sl])
+            if es.scalar:
+                cur = jnp.reshape(cur, ())
+            self.env[es.data] = cur
+
+    @staticmethod
+    def _assemble_block(val, es: EdgeSpec, block_order: List[str]):
+        """Rearrange a (vmapped) tasklet result — leading axes one per
+        intra-tile param, trailing axes the tasklet's own result dims —
+        into the output's block shape."""
+        pd = dict(es.fact.param_dims)
+        absent = tuple(i for i, q in enumerate(block_order) if q not in pd)
+        if absent:
+            if es.wcr == "add":  # intra-block reduction
+                val = jnp.sum(val, axis=absent)
+            else:  # revisited location: last write wins, as sequentially
+                idx = tuple(-1 if i in absent else slice(None)
+                            for i in range(len(block_order)))
+                val = val[idx]
+        present = [q for q in block_order if q in pd]
+        nlead = len(present)
+        trailing = list(range(nlead, jnp.ndim(val)))
+        slice_dims = [d for d in range(len(es.fact.block_shape))
+                      if d not in pd.values() and es.fact.block_shape[d] > 1]
+        if len(trailing) == len(slice_dims) and (present or trailing):
+            src_of = {pd[q]: i for i, q in enumerate(present)}
+            src_of.update({d: t for d, t in zip(slice_dims, trailing)})
+            perm = [src_of[d] for d in sorted(src_of)]
+            val = jnp.transpose(val, perm)
+        return jnp.reshape(val, es.fact.block_shape)
+
+
+def build_callable(sdfg: SDFG):
+    """Build fn(**arrays) using the Pallas grid lowering strategy."""
+    return _build_callable(sdfg, lowering=PallasStateLowering)

@@ -38,6 +38,7 @@ class StorageType(enum.Enum):
 class ScheduleType(enum.Enum):
     """Map schedules (paper §2.2)."""
     PIPELINED = "pipelined"   # sequential grid, pipeline parallelism (default)
+    DEVICE = "device"         # explicit device grid (Pallas pallas_call grid)
     UNROLLED = "unrolled"     # parametric hardware replication (systolic / SIMD)
     MXU = "mxu"               # unrolled onto the 128x128 systolic MXU
     MESH = "mesh"             # unrolled across chips (shard_map axis)

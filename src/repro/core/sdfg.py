@@ -139,6 +139,9 @@ class Map:
     label: str = "map"
     # Unroll/vector hints set by Vectorization / expansions:
     vector_width: int = 1
+    #: pass-to-codegen metadata (MapTiling tile structure, derived Pallas
+    #: grid specs, storage hints). Content-hash relevant.
+    annotations: Dict[str, Any] = field(default_factory=dict)
 
 
 class MapEntry(Node):
@@ -715,7 +718,7 @@ def _descriptor_signature(desc: Data) -> tuple:
 
 def _map_signature(m: Map) -> tuple:
     return (m.label, tuple(m.params), tuple(m.ranges), m.schedule.value,
-            m.vector_width)
+            m.vector_width, _stable_repr(m.annotations))
 
 
 def _node_signature(node: Node) -> tuple:

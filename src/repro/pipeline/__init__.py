@@ -13,7 +13,8 @@ passes.
 """
 from .cache import COMPILATION_CACHE, CompilationCache
 from .passes import (PASS_REGISTRY, DeviceOffloadPass, ExpandLibraryNodesPass,
-                     InputToConstantPass, MapTilingPass, Pass, PassManager,
+                     GridConversionPass, InputToConstantPass, MapTilingPass,
+                     Pass, PassManager,
                      PipelineFusionPass, SetExpansionPreferencePass,
                      StreamingCompositionPass, StreamingMemoryPass,
                      TransformationPass, VectorizationPass, default_pipeline,
@@ -22,7 +23,8 @@ from .stages import BACKENDS, Compiled, Lowered, Stage, Wrapped, lower
 
 __all__ = [
     "BACKENDS", "COMPILATION_CACHE", "CompilationCache", "Compiled",
-    "DeviceOffloadPass", "ExpandLibraryNodesPass", "InputToConstantPass",
+    "DeviceOffloadPass", "ExpandLibraryNodesPass", "GridConversionPass",
+    "InputToConstantPass",
     "Lowered", "MapTilingPass", "PASS_REGISTRY", "Pass", "PassManager",
     "PipelineFusionPass", "SetExpansionPreferencePass", "Stage",
     "StreamingCompositionPass", "StreamingMemoryPass", "TransformationPass",

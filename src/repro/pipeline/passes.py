@@ -188,6 +188,52 @@ class PipelineFusionPass(Pass):
 
 
 @register_pass
+class GridConversionPass(Pass):
+    """Annotate eligible DEVICE/PIPELINED map scopes with derived Pallas
+    grid specs (``codegen.pallas_backend.analyze_map_scope``): grid from
+    map ranges, BlockSpecs factored from affine memlet subsets, wcr-add
+    as VMEM scratch accumulation. Non-affine / dynamic / misaligned scopes
+    are left un-annotated and fall back to the structural interpreter —
+    the paper's generic-expansion fallback. Runs after MapTilingPass so
+    tile annotations shape the VMEM blocks; Pallas backend only."""
+
+    name = "GridConversion"
+
+    def apply(self, sdfg: SDFG, report: dict) -> List[str]:
+        from ..codegen.pallas_backend import (GRID_ANNOTATION,
+                                              analyze_map_scope)
+        from ..core.memlet import BlockFactorError
+        from ..core.sdfg import MapEntry
+
+        # symbols mutated by interstate assignments are not compile-time
+        # constants; subsets referencing them must fall back.
+        mutated = set()
+        for _, _, d in sdfg.cfg.edges(data=True):
+            e = d.get("edge")
+            if e is not None and e.assignments:
+                mutated |= set(e.assignments)
+        env = {k: v for k, v in sdfg.symbol_values.items()
+               if k not in mutated}
+
+        converted, fallbacks = [], []
+        for st in sdfg.states:
+            scopes = st.scope_children()
+            for node in st.nodes:
+                if not isinstance(node, MapEntry):
+                    continue
+                try:
+                    spec = analyze_map_scope(sdfg, st, node, scopes, env)
+                except BlockFactorError as exc:
+                    fallbacks.append((node.map.label, str(exc)))
+                    continue
+                node.map.annotations[GRID_ANNOTATION] = spec
+                converted.append(spec.kernel_name)
+        report.setdefault("grid_kernels", []).extend(converted)
+        report.setdefault("grid_fallbacks", []).extend(fallbacks)
+        return converted
+
+
+@register_pass
 class ExpandLibraryNodesPass(Pass):
     """Multi-level Library-Node expansion (paper §3): lower every abstract
     node to its implementation subgraph, honoring the SDFG's expansion
@@ -322,6 +368,8 @@ def default_pipeline(backend: str, interpret: bool = True,
             SetExpansionPreferencePass(("pallas", "xla", "generic")),
             PipelineFusionPass(interpret=interpret),
             ExpandLibraryNodesPass(level=expansion_level),
+            MapTilingPass(tile_size=128),
+            GridConversionPass(),
         ], name="pallas_default")
     return PassManager([
         SetExpansionPreferencePass(("xla", "generic")),

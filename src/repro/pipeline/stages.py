@@ -29,6 +29,9 @@ from ..core.sdfg import SDFG
 from .cache import COMPILATION_CACHE, CompilationCache
 from .passes import PassManager, PassLike, default_pipeline
 
+#: backend names, for introspection; the authoritative name->module
+#: registry (and the single "unknown backend" error path) is
+#: ``codegen.get_backend``, which ``Lowered.compile`` consults.
 BACKENDS = ("jnp", "pallas")
 
 
@@ -143,9 +146,8 @@ class Lowered(Stage):
         caller's live (mutable) graph, and a hit would skip the in-place
         expansion legacy callers rely on.
         """
-        if backend not in BACKENDS:
-            raise ValueError(
-                f"unknown backend {backend!r}; choose from {BACKENDS}")
+        from ..codegen import get_backend
+        backend_mod = get_backend(backend)  # validates the name early
         pm = pipeline if pipeline is not None else default_pipeline(
             backend, interpret=interpret, expansion_level=expansion_level)
         if in_place:
@@ -160,13 +162,17 @@ class Lowered(Stage):
 
         work = self._sdfg if in_place else copy.deepcopy(self._sdfg)
         work.validate()
+        if backend == "pallas":
+            # honored by pipeline-fused and generated grid kernels alike;
+            # an explicit PipelineFusionPass(interpret=...) overrides.
+            work.metadata["pallas_interpret"] = bool(interpret)
         report = {"backend": backend, "fused_regions": [], "expansions": [],
-                  "passes": [], "pipeline": pm.name}
+                  "passes": [], "grid_kernels": [], "grid_fallbacks": [],
+                  "pipeline": pm.name}
         pm.run(work, report=report)
         work.validate()
 
-        from ..codegen import jnp_backend
-        fn = jnp_backend.build_callable(work)
+        fn = backend_mod.build_callable(work)
         jitted = jax.jit(fn) if jit else None
         compiled = Compiled(work, fn, jitted, backend, report, cache_key=key)
         if cache is not None:

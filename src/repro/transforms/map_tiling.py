@@ -1,6 +1,13 @@
 """MapTiling: split a map dimension into (tile, intra-tile) — the
 platform-agnostic transformation the paper lists among the DaCe toolbox
 (§3.2), used on TPU to align block shapes with VMEM capacity.
+
+Tiled maps are annotated with the tile structure (``annotations['tiling']``
+maps each intra-tile parameter to its extent); the Pallas grid code
+generator (``GridConversionPass`` + ``pallas_backend``) consumes it to
+derive BlockSpec block shapes: tile parameters widen memlet index
+dimensions into VMEM-resident blocks while tile-counter parameters become
+grid dimensions.
 """
 from __future__ import annotations
 
@@ -48,6 +55,9 @@ class MapTiling(Transformation):
         m.params = [pt, pi]
         m.ranges = [Range.make(0, n / ts), Range.make(0, ts)]
         m.label += "_tiled"
+        # metadata for the grid code generator: intra-tile params span
+        # VMEM-resident blocks, tile counters become the grid.
+        m.annotations.setdefault("tiling", {})[pi] = ts
         # rewrite memlets in the scope: p -> lo + p_tile*ts + p_in
         repl = {p: lo + sym(pt) * ts + sym(pi)}
         scopes = st.scope_children()

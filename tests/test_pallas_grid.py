@@ -1,0 +1,395 @@
+"""Native Pallas grid codegen: memlet->BlockSpec factorization property
+tests, jnp-vs-pallas cross-validation through the grid path, the
+trip-limit acceptance case, strided memlet reads, and the vmap
+slice-write fallback."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels  # noqa: F401  (registers fusions)
+from repro.codegen import pallas_backend
+from repro.codegen.common import read_memlet
+from repro.core.memlet import (BlockFactorError, Memlet, Range, Subset,
+                               factor_subset)
+from repro.core.sdfg import SDFG
+from repro.core.symbolic import Expr, sym
+from repro.frontends import blas
+from repro.frontends.api import Program
+from repro.pipeline import lower
+
+
+# ---------------------------------------------------------------------------
+# factor_subset: blocks reassemble to the plain memlet reads
+# ---------------------------------------------------------------------------
+
+def _reassemble(value, memlet, fact, grid_params, block_params):
+    """Gather every block per (block_shape, index_map) and check it equals
+    the elements read_memlet returns for the corresponding parameter
+    bindings; also rebuild the union of blocks."""
+    names = list(grid_params)
+    imap = fact.index_map(names)
+    got = np.full(value.shape, np.nan, np.float32)
+    for ids in np.ndindex(*[grid_params[p][1] for p in names]):
+        coords = imap(*[int(i) for i in ids])
+        sl = tuple(slice(c * b, c * b + b)
+                   for c, b in zip(coords, fact.block_shape))
+        block = np.asarray(value[sl])
+        got[sl] = block
+        # element-wise parity with the interpreter's read_memlet
+        env = {p: grid_params[p][0] + int(i) for p, i in zip(names, ids)}
+        if not block_params:
+            ref = np.asarray(read_memlet(jnp.asarray(value), memlet, env))
+            assert np.array_equal(block.squeeze(), np.asarray(ref).squeeze())
+        else:
+            for bids in np.ndindex(*[block_params[q] for q in block_params]):
+                benv = dict(env)
+                benv.update({q: int(b) for q, b
+                             in zip(block_params, bids)})
+                ref = np.asarray(read_memlet(jnp.asarray(value), memlet,
+                                             benv))
+                pd = dict(fact.param_dims)
+                idx = [0] * len(fact.block_shape)
+                for q, b in zip(block_params, bids):
+                    idx[pd[q]] = int(b)
+                assert np.allclose(block[tuple(idx)].squeeze(),
+                                   ref.squeeze())
+    return got
+
+
+@pytest.mark.parametrize("case", ["index", "tiled", "row_slice", "affine2d"])
+def test_factor_subset_blocks_reassemble(case):
+    rng = np.random.default_rng(7)
+    if case == "index":          # x[i] over i in [0, 12)
+        value = rng.standard_normal(12).astype(np.float32)
+        memlet = Memlet.simple("x", Subset.indices([sym("i")]))
+        grid, block = {"i": (0, 12)}, {}
+        shape = (12,)
+    elif case == "tiled":        # x[4*it + q], tile extent 4
+        value = rng.standard_normal(16).astype(np.float32)
+        memlet = Memlet.simple(
+            "x", Subset.indices([sym("it") * 4 + sym("q")]))
+        grid, block = {"it": (0, 4)}, {"q": 4}
+        shape = (16,)
+    elif case == "row_slice":    # A[i, 0:6] over rows
+        value = rng.standard_normal((5, 6)).astype(np.float32)
+        memlet = Memlet.simple(
+            "A", Subset([Range.index(sym("i")), Range.make(0, 6)]))
+        grid, block = {"i": (0, 5)}, {}
+        shape = (5, 6)
+    else:                        # A[2*i, j] with rebased j in [1, 4)
+        value = rng.standard_normal((8, 4)).astype(np.float32)
+        memlet = Memlet.simple(
+            "A", Subset.indices([sym("i") * 2, sym("j")]))
+        grid, block = {"i": (0, 4), "j": (1, 3)}, {}
+        shape = (8, 4)
+    fact = factor_subset(memlet.subset, [Expr.const(s) for s in shape],
+                         grid, block, {})
+    got = _reassemble(value, memlet, fact, grid, block)
+    covered = ~np.isnan(got)
+    assert covered.any()
+    assert np.array_equal(got[covered], np.asarray(value)[covered])
+
+
+def test_factor_subset_rejects_non_affine_and_misaligned():
+    shape = [Expr.const(16)]
+    with pytest.raises(BlockFactorError):  # quadratic index
+        factor_subset(Subset.indices([sym("i") * sym("i")]), shape,
+                      {"i": (0, 4)}, {}, {})
+    with pytest.raises(BlockFactorError):  # unbound (dynamic) symbol
+        factor_subset(Subset.indices([sym("i") + sym("t")]), shape,
+                      {"i": (0, 16)}, {}, {})
+    with pytest.raises(BlockFactorError):  # tile offset not block-aligned
+        factor_subset(Subset.indices([sym("it") * 3 + sym("q")]), shape,
+                      {"it": (0, 4)}, {"q": 4}, {})
+    with pytest.raises(BlockFactorError):  # strided range
+        factor_subset(Subset([Range.make(0, 16, 2)]), shape,
+                      {"i": (0, 8)}, {}, {})
+
+
+# ---------------------------------------------------------------------------
+# grid-path acceptance: tiled map beyond the trip limit -> one pallas_call
+# ---------------------------------------------------------------------------
+
+def _big_rows_sdfg(n=8192, m=4):
+    s = SDFG("bigrows")
+    s.add_array("x", (n, m), "float32")
+    s.add_array("out", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    st.add_mapped_tasklet(
+        "rows", {"i": (0, n)},
+        inputs={"xr": Memlet.simple("x", Subset([Range.index(sym("i")),
+                                                 Range.make(0, m)]))},
+        outputs={"o": Memlet.simple("out", Subset([Range.index(sym("i")),
+                                                   Range.make(0, m)]))},
+        fn=lambda xr: xr * 2.0 + 1.0)
+    return s
+
+
+def test_tiled_map_beyond_trip_limit_single_grid_kernel(monkeypatch):
+    """A tiled map with total trip count > SEQUENTIAL_TRIP_LIMIT compiles
+    through default_pipeline('pallas') as ONE pl.pallas_call grid kernel;
+    the jnp interpreter still refuses (trace-time loop guard)."""
+    x = np.random.default_rng(0).standard_normal((8192, 4)).astype(np.float32)
+
+    calls = []
+    orig = pallas_backend.pl.pallas_call
+
+    def counting(*a, **kw):
+        calls.append(kw.get("grid"))
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(pallas_backend.pl, "pallas_call", counting)
+    c = lower(_big_rows_sdfg()).compile("pallas", jit=False, cache=None)
+    assert c.report["grid_kernels"] == ["rows_tiled"]
+    out = np.asarray(c(x=x)["out"])
+    np.testing.assert_allclose(out, x * 2 + 1, rtol=1e-6)
+    assert len(calls) == 1 and calls[0] == (64,)  # 8192 rows / 128 tile
+
+    with pytest.raises(NotImplementedError, match="sequential iterations"):
+        lower(_big_rows_sdfg()).compile("jnp", cache=None)(x=x)
+
+
+# ---------------------------------------------------------------------------
+# jnp-vs-pallas cross-validation through the grid path
+# ---------------------------------------------------------------------------
+
+def test_gemm_wcr_grid_cross_validation():
+    """The hand-written kernels/gemm pattern — K innermost, scratch
+    accumulator with @pl.when init/flush — generated from a wcr-add map."""
+    M, N, K = 32, 24, 16
+    s = SDFG("gemm3")
+    s.add_array("A", (M, K), "float32")
+    s.add_array("B", (K, N), "float32")
+    s.add_array("C", (M, N), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j, k = sym("i"), sym("j"), sym("k")
+    st.add_mapped_tasklet(
+        "gemm", {"i": (0, M), "j": (0, N), "k": (0, K)},
+        inputs={"a": Memlet.simple("A", Subset.indices([i, k])),
+                "b": Memlet.simple("B", Subset.indices([k, j]))},
+        outputs={"c": Memlet.simple("C", Subset.indices([i, j]), wcr="add")},
+        fn=lambda a, b: a * b)
+    rng = np.random.default_rng(1)
+    A = rng.standard_normal((M, K)).astype(np.float32)
+    B = rng.standard_normal((K, N)).astype(np.float32)
+    c = lower(s).compile("pallas")
+    assert c.report["grid_kernels"] == ["gemm"]
+    np.testing.assert_allclose(np.asarray(c(A=A, B=B)["C"]), A @ B,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_stencil_grid_cross_validation():
+    """5-point star over interior points via per-offset index memlets; the
+    untouched boundary verifies box stitching of partial grid writes."""
+    n, m = 20, 24
+    s = SDFG("star5")
+    s.add_array("a", (n, m), "float32")
+    s.add_array("b", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    offs = {"c": (0, 0), "nn": (-1, 0), "ss": (1, 0),
+            "ww": (0, -1), "ee": (0, 1)}
+    st.add_mapped_tasklet(
+        "star", {"i": (1, n - 1), "j": (1, m - 1)},
+        inputs={kk: Memlet.simple("a", Subset.indices([i + di, j + dj]))
+                for kk, (di, dj) in offs.items()},
+        outputs={"o": Memlet.simple("b", Subset.indices([i, j]))},
+        fn=lambda c, nn, ss, ww, ee: 0.5 * c + 0.125 * (nn + ss + ww + ee))
+    a = np.random.default_rng(3).standard_normal((n, m)).astype(np.float32)
+    cp = lower(s).compile("pallas")
+    assert cp.report["grid_kernels"] == ["star"]
+    out_p = np.asarray(cp(a=a)["b"])
+    out_j = np.asarray(lower(s).compile("jnp")(a=a)["b"])
+    assert np.isfinite(out_p).all()
+    np.testing.assert_allclose(out_p, out_j, rtol=1e-5, atol=1e-6)
+    assert np.all(out_p[0] == 0) and np.all(out_p[:, -1] == 0)
+
+
+def test_axpy_tiled_grid_cross_validation():
+    n = 2048
+    rng = np.random.default_rng(2)
+    a = np.float32(0.7)
+    x, y = (rng.standard_normal(n).astype(np.float32) for _ in range(2))
+    p = Program("axpy")
+    ah = p.scalar_input("a", "float32")
+    xh, yh = p.input("x", (n,)), p.input("y", (n,))
+    p.output("z", blas.axpy(ah, xh, yh))
+    s = p.finalize()
+    c = lower(s).compile("pallas", expansion_level="generic")
+    assert c.report["grid_kernels"] == ["axpy0_map_tiled"]
+    out = np.asarray(c(a=a, x=x, y=y)["z"])
+    np.testing.assert_allclose(out, a * x + y, rtol=1e-5, atol=1e-6)
+
+
+def _build_axpydot(n):
+    p = Program("axpydot")
+    a = p.scalar_input("a", "float32")
+    x, y, w = (p.input(nm, (n,)) for nm in ("x", "y", "w"))
+    p.output("result", blas.dot(blas.axpy(a, x, y), w))
+    return p.finalize()
+
+
+def test_axpydot_grid_cross_validation():
+    """Acceptance: axpydot jnp-vs-pallas within 1e-4 through the grid path
+    (generic expansions -> tiled axpy grid + partial-sum reduction grid)."""
+    n = 2048
+    rng = np.random.default_rng(5)
+    a = np.float32(-0.3)
+    x, y, w = (rng.standard_normal(n).astype(np.float32) for _ in range(3))
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        c = lower(_build_axpydot(n)).compile(backend,
+                                             expansion_level="generic")
+        if backend == "pallas":
+            assert "axpy0_map_tiled" in c.report["grid_kernels"]
+            assert "dot0_stream" in c.report["grid_kernels"]
+        outs[backend] = np.asarray(c(a=a, x=x, y=y, w=w)["result"]).ravel()[0]
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"], rtol=1e-4)
+
+
+def _build_gemver(n):
+    p = Program("gemver")
+    A = p.input("A", (n, n))
+    u1, v1 = p.input("u1", (n,)), p.input("v1", (n,))
+    u2, v2 = p.input("u2", (n,)), p.input("v2", (n,))
+    yv, zv = p.input("y", (n,)), p.input("z", (n,))
+    B1 = blas.ger(A, u1, v1)
+    B2 = blas.ger(B1, u2, v2)
+    x = blas.gemv(B2, yv, y0=zv, trans=True, alpha=0.9, beta=1.0)
+    w = blas.gemv(B2, x, alpha=1.1)
+    p.output("x_out", x)
+    p.output("w_out", w)
+    return p.finalize()
+
+
+def test_gemver_grid_cross_validation():
+    """Acceptance: gemver jnp-vs-pallas within 1e-4; all four generic maps
+    (2x ger, 2x gemv) lower to grid kernels."""
+    n = 64
+    rng = np.random.default_rng(6)
+    d = {k: rng.standard_normal((n, n) if k == "A" else n).astype(np.float32)
+         for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
+    cj = lower(_build_gemver(n)).compile("jnp")
+    cp = lower(_build_gemver(n)).compile("pallas", expansion_level="generic")
+    assert cp.report["grid_kernels"] == ["ger0_map", "ger1_map",
+                                         "gemv0_rows", "gemv1_rows"]
+    assert cp.report["grid_fallbacks"] == []
+    oj, op = cj(**d), cp(**d)
+    for kk in ("x_out", "w_out"):
+        np.testing.assert_allclose(np.asarray(op[kk]), np.asarray(oj[kk]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_grid_fallback_on_unrolled_schedule():
+    """Non-eligible scopes (e.g. UNROLLED reduce phases) stay on the
+    interpreter path and the program still runs correctly."""
+    n = 256
+    rng = np.random.default_rng(8)
+    x, w = (rng.standard_normal(n).astype(np.float32) for _ in range(2))
+    p = Program("dot")
+    xh, wh = p.input("x", (n,)), p.input("w", (n,))
+    p.output("result", blas.dot(xh, wh))
+    c = lower(p.finalize()).compile("pallas", expansion_level="partial_sums")
+    assert any("dot0_reduce" in lbl for lbl, _ in c.report["grid_fallbacks"])
+    out = np.asarray(c(x=x, w=w)["result"]).ravel()[0]
+    np.testing.assert_allclose(out, np.dot(x, w), rtol=1e-4)
+
+
+def test_two_outputs_same_container_stitch():
+    """Two output edges targeting disjoint halves of one container must
+    both survive the grid-path stitch (regression: stale pre-kernel
+    values dropped all but the last)."""
+    n = 8
+    s = SDFG("twoout")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (2 * n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    st.add_mapped_tasklet(
+        "halves", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"lo": Memlet.simple("out", Subset.indices([i])),
+                 "hi": Memlet.simple("out", Subset.indices([i + n]))},
+        fn=lambda v: {"lo": v * 2.0, "hi": v * 3.0})
+    x = np.random.default_rng(10).standard_normal(n).astype(np.float32)
+    op = np.asarray(lower(s).compile("pallas")(x=x)["out"])
+    oj = np.asarray(lower(s).compile("jnp")(x=x)["out"])
+    np.testing.assert_allclose(op, oj, rtol=1e-6)
+    np.testing.assert_allclose(op, np.concatenate([x * 2, x * 3]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: strided memlet reads
+# ---------------------------------------------------------------------------
+
+def test_read_memlet_static_strides():
+    x = jnp.arange(16, dtype=jnp.float32)
+    m = Memlet.simple("x", Subset([Range.make(1, 13, 2)]))  # x[1:13:2]
+    out = np.asarray(read_memlet(x, m, {}))
+    np.testing.assert_array_equal(out, np.arange(16, dtype=np.float32)[1:13:2])
+
+    A = jnp.arange(24, dtype=jnp.float32).reshape(4, 6)
+    m2 = Memlet.simple("A", Subset([Range.index(2), Range.make(0, 6, 3)]))
+    out2 = np.asarray(read_memlet(A, m2, {}))
+    np.testing.assert_array_equal(out2, np.asarray(A)[2, 0:6:3])
+
+    # span not a multiple of step sizes like numpy (ceil)
+    m3 = Memlet.simple("x", Subset([Range.make(0, 15, 2)]))
+    out3 = np.asarray(read_memlet(x, m3, {}))
+    np.testing.assert_array_equal(out3, np.arange(16, dtype=np.float32)[0:15:2])
+
+
+def test_read_memlet_interleaved_partial_sums():
+    """x[l::K] — the interleaved partial-sum subset — with both a static
+    and a traced lane index."""
+    K, n = 4, 32
+    x = jnp.arange(n, dtype=jnp.float32)
+    lanes = Subset([Range(sym("l"), sym("l") + K * (n // K), Expr.const(K))])
+    m = Memlet.simple("x", lanes)
+    for l in range(K):
+        out = np.asarray(read_memlet(x, m, {"l": l}))
+        np.testing.assert_array_equal(out, np.asarray(x)[l::K])
+
+    @jax.jit
+    def traced(l):
+        return read_memlet(x, m, {"l": l})
+
+    np.testing.assert_array_equal(np.asarray(traced(jnp.int32(2))),
+                                  np.asarray(x)[2::K])
+
+
+def test_write_memlet_strided_still_raises():
+    """Strided *writes* stay unimplemented and must fail loudly, not land
+    on contiguous (wrong) positions."""
+    from repro.codegen.common import write_memlet
+    x = jnp.zeros(16, jnp.float32)
+    m = Memlet.simple("x", Subset([Range.make(1, 13, 2)]))
+    with pytest.raises(NotImplementedError, match="strided memlet writes"):
+        write_memlet(x, m, jnp.ones(6, jnp.float32), {})
+
+
+# ---------------------------------------------------------------------------
+# satellite: vmap slice-write fallback
+# ---------------------------------------------------------------------------
+
+def test_vmap_slice_write_falls_back_to_sequential():
+    """A mapped tasklet writing a per-iteration slice used to raise
+    NotImplementedError in the vectorized lowering; it now falls back to
+    the sequential schedule."""
+    n, m = 8, 5
+    s = SDFG("sliced")
+    s.add_array("x", (n, m), "float32")
+    s.add_array("out", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    st.add_mapped_tasklet(
+        "rows", {"i": (0, n)},
+        inputs={"xr": Memlet.simple("x", Subset([Range.index(sym("i")),
+                                                 Range.make(0, m)]))},
+        outputs={"o": Memlet.simple("out", Subset([Range.index(sym("i")),
+                                                   Range.make(0, m)]))},
+        fn=lambda xr: jnp.cumsum(xr))
+    x = np.random.default_rng(9).standard_normal((n, m)).astype(np.float32)
+    out = np.asarray(lower(s).compile("jnp")(x=x)["out"])
+    np.testing.assert_allclose(out, np.cumsum(x, axis=1), rtol=1e-5)

@@ -245,7 +245,9 @@ def test_default_pipeline_shapes():
                                         "ExpandLibraryNodes"]
     assert [p.name for p in pal_pm] == ["SetExpansionPreference",
                                         "PipelineFusion",
-                                        "ExpandLibraryNodes"]
+                                        "ExpandLibraryNodes",
+                                        "MapTiling",
+                                        "GridConversion"]
     assert jnp_pm.signature() != pal_pm.signature()
 
 
