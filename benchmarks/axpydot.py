@@ -3,7 +3,9 @@
 Reports (a) off-chip volume, analytic from memlets at the paper's size
 (209,715,200 elements = 800 MiB), (b) wall-clock on CPU at a reduced size
 for naive / streamed(jnp) / fused Pallas-interpret variants, (c) PE/module
-counts (paper: 1 module naive -> 5 modules streamed).
+counts (paper: 1 module naive -> 5 modules streamed), (d) the native grid
+path, unfused (axpy kernel + dot kernel, z round-trips through HBM) vs
+MapFusion (ONE grid kernel, z held in-kernel).
 """
 from __future__ import annotations
 
@@ -14,13 +16,17 @@ import numpy as np
 import repro.kernels  # noqa: F401
 from repro.frontends import blas
 from repro.frontends.api import Program
-from repro.pipeline import (DeviceOffloadPass, StreamingCompositionPass,
-                            StreamingMemoryPass, lower)
+from repro.pipeline import (DeviceOffloadPass, ExpandLibraryNodesPass,
+                            GridConversionPass, MapFusionPass, MapTilingPass,
+                            PassManager, SetExpansionPreferencePass,
+                            StreamingCompositionPass, StreamingMemoryPass,
+                            lower)
 from repro.transforms import (DeviceOffload, StreamingComposition,
                               StreamingMemory)
 
 PAPER_N = 209_715_200
 BENCH_N = 2_000_000
+GRID_N = 262_144          # grid-path comparison (interpret-mode kernels)
 
 
 def build(n):
@@ -87,3 +93,35 @@ def run(report, small: bool = False):
            f"speedup {t_naive/t_stream:.2f}x (paper: 2.6x on U250)")
     report("axpydot_fused_pallas_ms", t_fused * 1e3,
            f"fused regions {c3.report['fused_regions']}", backend="pallas")
+
+    # (d) native grid path: unfused kernel pair vs MapFusion single kernel
+    gn = 65_536 if small else GRID_N
+    gx, gy, gw = (rng.standard_normal(gn).astype(np.float32)
+                  for _ in range(3))
+    g_exp = np.dot((a * gx + gy).astype(np.float32), gw)
+
+    def grid_pipeline(fused: bool) -> PassManager:
+        passes = [SetExpansionPreferencePass(("accumulate", "generic")),
+                  ExpandLibraryNodesPass()]
+        if fused:
+            passes.append(MapFusionPass())
+        passes += [MapTilingPass(tile_size=128), GridConversionPass()]
+        return PassManager(passes,
+                           name="grid_fused" if fused else "grid_unfused")
+
+    cu = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(False))
+    t_grid_unfused = _time(cu, a=a, x=gx, y=gy, w=gw, reps=3)
+    assert len(cu.report["grid_kernels"]) == 2
+    cf = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(True))
+    t_grid_fused = _time(cf, a=a, x=gx, y=gy, w=gw, reps=3)
+    assert len(cf.report["grid_kernels"]) == 1
+    for c in (cu, cf):
+        got = float(np.asarray(c(a=a, x=gx, y=gy, w=gw)["result"]).ravel()[0])
+        assert abs(got - g_exp) < 1e-3 * abs(g_exp)
+
+    report("axpydot_grid_unfused_ms", t_grid_unfused * 1e3,
+           f"n={gn}; kernels={cu.report['grid_kernels']}", backend="pallas")
+    report("axpydot_grid_fused_ms", t_grid_fused * 1e3,
+           f"n={gn}; 1 kernel, z in-kernel; speedup "
+           f"{t_grid_unfused/t_grid_fused:.2f}x vs unfused grid",
+           backend="pallas")

@@ -5,7 +5,10 @@
 Variants: naive / streaming composition / manual composition (the paper's
 §4.2 replication of the rank-1-update result so pipeline fusion applies
 once more). Volumes analytic at the paper's N=16,384 (GiB); runtime at a
-reduced N on CPU.
+reduced N on CPU. The native grid path additionally compares the unfused
+kernel ladder (2x ger + 2x gemv grid kernels, B1 round-tripping through
+HBM) against MapFusion (the two rank-1 updates as ONE grid kernel with
+B1 held in-kernel).
 """
 from __future__ import annotations
 
@@ -16,11 +19,14 @@ import numpy as np
 from repro.core import Memlet
 from repro.frontends import blas
 from repro.frontends.api import Program
-from repro.pipeline import lower
+from repro.pipeline import (ExpandLibraryNodesPass, GridConversionPass,
+                            MapFusionPass, MapTilingPass, PassManager,
+                            SetExpansionPreferencePass, lower)
 from repro.transforms import DeviceOffload, StreamingComposition
 
 PAPER_N = 16_384
 BENCH_N = 1024
+GRID_N = 128              # grid-path comparison (interpret-mode kernels)
 
 
 def build(n, manual_replication=False, replica_in_hbm=True):
@@ -123,3 +129,41 @@ def run(report, small: bool = False):
                f"paper table2 {paper[name]} GiB; "
                f"ratio {vols['naive']/vols[name]:.2f}x")
         report(f"gemver_{name}_ms", times[name] * 1e3, f"n={n} CPU")
+
+    # native grid path: unfused kernel ladder vs MapFusion'd rank-1 pair
+    gn = 64 if small else GRID_N
+    gd = {k: rng.standard_normal((gn, gn) if k == "A" else gn
+                                 ).astype(np.float32)
+          for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
+    gx_ref, gw_ref = reference(gn, gd)
+
+    def grid_pipeline(fused: bool) -> PassManager:
+        passes = [SetExpansionPreferencePass(("generic",)),
+                  ExpandLibraryNodesPass()]
+        if fused:
+            passes.append(MapFusionPass())
+        passes += [MapTilingPass(tile_size=128), GridConversionPass()]
+        return PassManager(passes,
+                           name="grid_fused" if fused else "grid_unfused")
+
+    grid_times, kernels = {}, {}
+    for name, fused in (("unfused", False), ("fused", True)):
+        c = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(fused))
+        c(**gd)  # compile
+        t0 = time.perf_counter()
+        out = c(**gd)
+        np.asarray(out["w_out"])
+        grid_times[name] = time.perf_counter() - t0
+        kernels[name] = c.report["grid_kernels"]
+        np.testing.assert_allclose(np.asarray(out["x_out"]), gx_ref,
+                                   rtol=5e-2, atol=5e-1)
+        np.testing.assert_allclose(np.asarray(out["w_out"]), gw_ref,
+                                   rtol=5e-2, atol=5e-1)
+    assert len(kernels["unfused"]) == 4 and len(kernels["fused"]) == 3
+
+    report("gemver_grid_unfused_ms", grid_times["unfused"] * 1e3,
+           f"n={gn}; kernels={kernels['unfused']}", backend="pallas")
+    report("gemver_grid_fused_ms", grid_times["fused"] * 1e3,
+           f"n={gn}; ger pair fused, B1 in-kernel; speedup "
+           f"{grid_times['unfused']/grid_times['fused']:.2f}x vs unfused",
+           backend="pallas")

@@ -1,7 +1,10 @@
 """Paper Fig. 19: StencilFlow programs (jacobi3d, diffusion2d/3d) and the
 two-iteration diffusion chain (Fig. 17) with fused multi-stage kernel.
 CPU interpret-mode wall-clock is reported for relative comparison plus the
-analytic GOp count; absolute GOp/s belongs to real TPU hardware."""
+analytic GOp count; absolute GOp/s belongs to real TPU hardware. The
+5-point star additionally runs through the *generated* grid path
+(GridConversion of a mapped-tasklet stencil) against its jnp/vmap
+lowering."""
 from __future__ import annotations
 
 import time
@@ -9,6 +12,9 @@ import time
 import numpy as np
 
 import repro.kernels  # noqa: F401
+from repro.core.memlet import Memlet, Subset
+from repro.core.sdfg import SDFG
+from repro.core.symbolic import sym
 from repro.frontends.stencil import build_stencil_program
 from repro.kernels import stencil
 from repro.pipeline import lower
@@ -17,42 +23,93 @@ from repro.transforms import DeviceOffload, StreamingComposition
 # reduced domains (paper: 2^17 x 4096 and 2^15 x 128 x 128)
 DOM2D = (2048, 512)
 DOM3D = (128, 64, 64)
+STAR_DOM = (130, 130)     # generated-grid star stencil (interpret mode)
 
 
 def _gops(n_points, flops_per_point, seconds):
     return n_points * flops_per_point / seconds / 1e9
 
 
-def run(report):
+def _star_sdfg(n, m):
+    """5-point star over interior points as a mapped tasklet — the shape
+    GridConversion lowers to one partial-coverage grid kernel."""
+    s = SDFG("star5")
+    s.add_array("a", (n, m), "float32")
+    s.add_array("b", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    offs = {"c": (0, 0), "nn": (-1, 0), "ss": (1, 0),
+            "ww": (0, -1), "ee": (0, 1)}
+    st.add_mapped_tasklet(
+        "star", {"i": (1, n - 1), "j": (1, m - 1)},
+        inputs={kk: Memlet.simple("a", Subset.indices([i + di, j + dj]))
+                for kk, (di, dj) in offs.items()},
+        outputs={"o": Memlet.simple("b", Subset.indices([i, j]))},
+        fn=lambda c, nn, ss, ww, ee: 0.5 * c + 0.125 * (nn + ss + ww + ee))
+    return s
+
+
+def run(report, small: bool = False):
+    dom2d = (512, 128) if small else DOM2D
+    dom3d = (32, 16, 16) if small else DOM3D
+    star_dom = (34, 34) if small else STAR_DOM
     rng = np.random.default_rng(0)
-    a2 = rng.standard_normal(DOM2D).astype(np.float32)
+    a2 = rng.standard_normal(dom2d).astype(np.float32)
     co = np.array([0.2, 0.1, 0.15, 0.25, 0.3], np.float32)
-    out = stencil.diffusion2d(a2, co, bh=256)          # warm
+    bh = 128 if small else 256
+    out = stencil.diffusion2d(a2, co, bh=bh)           # warm
     t0 = time.perf_counter()
-    out = stencil.diffusion2d(a2, co, bh=256)
+    out = stencil.diffusion2d(a2, co, bh=bh)
     np.asarray(out)
     t2 = time.perf_counter() - t0
     report("stencil_diffusion2d_ms", t2 * 1e3,
-           f"{_gops(a2.size, 9, t2):.2f} GOp/s CPU-interp; dom={DOM2D}")
+           f"{_gops(a2.size, 9, t2):.2f} GOp/s CPU-interp; dom={dom2d}")
 
-    a3 = rng.standard_normal(DOM3D).astype(np.float32)
+    a3 = rng.standard_normal(dom3d).astype(np.float32)
+    bd = 8 if small else 16
     t0 = time.perf_counter()
-    out = stencil.jacobi3d(a3, bd=16)
+    out = stencil.jacobi3d(a3, bd=bd)
     np.asarray(out)
     t3 = time.perf_counter() - t0
     report("stencil_jacobi3d_ms", t3 * 1e3,
-           f"{_gops(a3.size, 8, t3):.2f} GOp/s CPU-interp; dom={DOM3D}")
+           f"{_gops(a3.size, 8, t3):.2f} GOp/s CPU-interp; dom={dom3d}")
 
     t0 = time.perf_counter()
-    out = stencil.diffusion3d(a3, 0.1, bd=16)
+    out = stencil.diffusion3d(a3, 0.1, bd=bd)
     np.asarray(out)
     td3 = time.perf_counter() - t0
     report("stencil_diffusion3d_ms", td3 * 1e3,
            f"{_gops(a3.size, 13, td3):.2f} GOp/s CPU-interp")
 
+    # generated grid path: the star stencil map as ONE partial-coverage
+    # grid kernel, against the structural jnp/vmap lowering
+    sn, sm = star_dom
+    sa = rng.standard_normal((sn, sm)).astype(np.float32)
+    cg = lower(_star_sdfg(sn, sm)).compile("pallas")
+    assert cg.report["grid_kernels"] == ["star"]
+    cj = lower(_star_sdfg(sn, sm)).compile("jnp")
+    cg(a=sa)  # compile
+    t0 = time.perf_counter()
+    og = cg(a=sa)
+    np.asarray(og["b"])
+    tg = time.perf_counter() - t0
+    cj(a=sa)
+    t0 = time.perf_counter()
+    oj = cj(a=sa)
+    np.asarray(oj["b"])
+    tj = time.perf_counter() - t0
+    np.testing.assert_allclose(np.asarray(og["b"]), np.asarray(oj["b"]),
+                               rtol=1e-5, atol=1e-6)
+    report("stencil_star_grid_ms", tg * 1e3,
+           f"dom={star_dom}; generated pallas_call grid kernel",
+           backend="pallas")
+    report("stencil_star_jnp_ms", tj * 1e3,
+           f"dom={star_dom}; structural vmap lowering")
+
     # Fig.-17 two-iteration diffusion program through the full stack
+    chain_dom = [128, 64] if small else [512, 256]
     spec = {
-        "name": "diff2x", "dimensions": [512, 256], "outputs": ["d"],
+        "name": "diff2x", "dimensions": chain_dom, "outputs": ["d"],
         "inputs": {"a": {"data_type": "float32", "input_dims": ["j", "k"]}},
         "program": {
             "b": {"computation": "b = c0*a[j,k] + c1*a[j-1,k] + c2*a[j+1,k]"
@@ -66,7 +123,7 @@ def run(report):
     sdfg.apply(StreamingComposition)
     v1 = sdfg.off_chip_volume()
     c = lower(sdfg).compile("pallas")
-    a = rng.standard_normal((512, 256)).astype(np.float32)
+    a = rng.standard_normal(tuple(chain_dom)).astype(np.float32)
     c(a=a, b_coeffs=co, d_coeffs=co)
     t0 = time.perf_counter()
     out = c(a=a, b_coeffs=co, d_coeffs=co)

@@ -104,43 +104,42 @@ def read_memlet(value, memlet: Memlet, env: Dict[str, object]):
 def write_memlet(container_value, memlet: Memlet, new_value,
                  env: Dict[str, object]):
     """Functionally write ``new_value`` into the container per the memlet.
-    Returns the updated container value."""
+    Returns the updated container value. Static starts support static
+    strides (mirroring ``read_memlet``); traced starts require unit steps
+    — a strided dynamic write would need a scatter and fails loudly."""
     wcr = memlet.wcr
     if memlet.subset is None:
         if wcr == "add":
             return container_value + new_value
         if wcr == "max":
             return jnp.maximum(container_value, new_value)
+        if wcr == "min":
+            return jnp.minimum(container_value, new_value)
         return jnp.broadcast_to(new_value, jnp.shape(container_value)) \
             if jnp.shape(new_value) != jnp.shape(container_value) else new_value
     subset = memlet.subset
     sizes = subset_static_sizes(subset, env)
     starts = [eval_expr(r.start, env) for r in subset]
     steps = [eval_expr(r.step, env) for r in subset]
-    if any(not _static_int(s) or s != 1 for s in steps):
-        # reads support static strides; writes would silently land on the
-        # wrong (contiguous) positions — fail loudly (see ROADMAP).
-        raise NotImplementedError("strided memlet writes not supported")
+    if any(not _static_int(s) for s in steps):
+        raise NotImplementedError("dynamic memlet strides not supported")
     all_index = all(r.is_index() for r in subset)
     if all_index:
         ref = container_value.at[tuple(starts)]
         scalar = new_value
         if hasattr(scalar, "shape") and scalar.shape != ():
             scalar = jnp.reshape(scalar, ())
-        if wcr == "add":
-            return ref.add(scalar)
-        if wcr == "max":
-            return ref.max(scalar)
-        return ref.set(scalar)
+        return _apply_wcr(ref, wcr, scalar)
     new_value = jnp.reshape(new_value, sizes)
     if all(_static_int(s) for s in starts):
-        slc = tuple(slice(st, st + sz) for st, sz in zip(starts, sizes))
-        ref = container_value.at[slc]
-        if wcr == "add":
-            return ref.add(new_value)
-        if wcr == "max":
-            return ref.max(new_value)
-        return ref.set(new_value)
+        slc = tuple(slice(st, st + sz * sp, sp)
+                    for st, sz, sp in zip(starts, sizes, steps))
+        return _apply_wcr(container_value.at[slc], wcr, new_value)
+    if any(sp != 1 for sp in steps):
+        # a traced start with a stride would need a scatter; landing the
+        # values on contiguous positions would be silently wrong
+        raise NotImplementedError(
+            "strided memlet writes with traced starts not supported")
     if wcr == "add":
         cur = jax.lax.dynamic_slice(container_value, starts, sizes)
         return jax.lax.dynamic_update_slice(container_value, cur + new_value, starts)
@@ -148,4 +147,53 @@ def write_memlet(container_value, memlet: Memlet, new_value,
         cur = jax.lax.dynamic_slice(container_value, starts, sizes)
         return jax.lax.dynamic_update_slice(container_value,
                                             jnp.maximum(cur, new_value), starts)
+    if wcr == "min":
+        cur = jax.lax.dynamic_slice(container_value, starts, sizes)
+        return jax.lax.dynamic_update_slice(container_value,
+                                            jnp.minimum(cur, new_value), starts)
     return jax.lax.dynamic_update_slice(container_value, new_value, starts)
+
+
+def _apply_wcr(ref, wcr, value):
+    if wcr == "add":
+        return ref.add(value)
+    if wcr == "max":
+        return ref.max(value)
+    if wcr == "min":
+        return ref.min(value)
+    return ref.set(value)
+
+
+# ---------------------------------------------------------------------------
+# The single wcr dispatch table shared by both backends: elementwise
+# combine, axis reduce, and identity element per mode. Adding a mode here
+# (plus _apply_wcr above) is the complete recipe — WCR_MODES derives from
+# these keys, so a mode can never be half-supported.
+# ---------------------------------------------------------------------------
+
+_WCR_TABLE = {
+    "add": (lambda a, b: a + b, jnp.sum),
+    "max": (jnp.maximum, jnp.max),
+    "min": (jnp.minimum, jnp.min),
+}
+
+#: wcr modes with accumulate semantics (scratch reduction / combining
+#: stitches); anything else is a plain overwrite.
+WCR_MODES = tuple(_WCR_TABLE)
+
+
+def wcr_combine(wcr: str, a, b):
+    return _WCR_TABLE[wcr][0](a, b)
+
+
+def wcr_reduce(wcr: str, value, axis):
+    return _WCR_TABLE[wcr][1](value, axis=axis)
+
+
+def wcr_identity(wcr: str, dtype):
+    """The mode's identity element: accumulator init value."""
+    if wcr == "add":
+        return jnp.zeros((), dtype)
+    info = jnp.finfo(dtype) if jnp.issubdtype(dtype, jnp.inexact) \
+        else jnp.iinfo(dtype)
+    return jnp.asarray(info.min if wcr == "max" else info.max, dtype)

@@ -3,10 +3,12 @@
 Lowers a fully-expanded SDFG into a jittable JAX callable by structural
 interpretation: states execute in control-flow order; within a state, the
 dataflow graph is traversed topologically; tasklets call their jax-traceable
-bodies; map scopes lower to vectorized (vmap) code when the scope is a
-single mapped tasklet, to unrolled trace-time loops for UNROLLED/MESH
-schedules, and to sequential trace-time loops otherwise. XLA then fuses and
-pipelines — the 'compiler does the scheduling' vendor.
+bodies; map scopes lower to vectorized (vmap) code when the scope holds only
+tasklets (single mapped tasklets, and MapFusion chains whose per-iteration
+intermediates thread through the vmapped body as local values), to unrolled
+trace-time loops for UNROLLED/MESH schedules, and to sequential trace-time
+loops otherwise. XLA then fuses and pipelines — the 'compiler does the
+scheduling' vendor.
 
 Write-conflict-resolution memlets lower to scatter-add; streams materialize
 as arrays shaped by their logical element volume (SPSC + matching access
@@ -24,7 +26,8 @@ from ..core.memlet import Memlet
 from ..core.sdfg import (AccessNode, Array, LibraryNode, MapEntry, MapExit,
                          NestedSDFG, Scalar, SDFG, State, Stream, Tasklet)
 from ..core.symbolic import Expr
-from .common import eval_expr, read_memlet, write_memlet
+from .common import (WCR_MODES, _apply_wcr, eval_expr, read_memlet,
+                     wcr_combine, wcr_reduce, write_memlet)
 
 # Maps whose scope is not a single tasklet fall back to a trace-time python
 # loop; cap the unrolled trip count so mistakes fail loudly instead of
@@ -226,12 +229,16 @@ class StateLowering:
         sizes = [int(eval_expr(r.size, static)) for r in m.ranges]
         starts = [eval_expr(r.start, static) for r in m.ranges]
 
-        single_tasklet = (len(inner) == 1 and isinstance(inner[0], Tasklet))
+        # tasklet-only scopes (single mapped tasklets and MapFusion chains
+        # threading per-iteration transients) vectorize with one vmap
+        tasklet_chain = (all(isinstance(n, Tasklet) for n in inner)
+                         and len(inner) >= 1)
         if m.schedule in (ScheduleType.UNROLLED, ScheduleType.MESH,
                           ScheduleType.MXU):
             self._run_map_sequential(entry, exit_, inner, sizes, starts)
-        elif single_tasklet and not self._has_param_slice_writes(inner[0], m):
-            self._run_map_vmap(entry, exit_, inner[0], sizes, starts)
+        elif tasklet_chain and not any(
+                self._has_param_slice_writes(t, m) for t in inner):
+            self._run_map_vmap(entry, exit_, inner, sizes, starts)
         else:
             total = int(np.prod(sizes)) if sizes else 1
             if total > SEQUENTIAL_TRIP_LIMIT:
@@ -249,9 +256,13 @@ class StateLowering:
 
     def _has_param_slice_writes(self, tasklet: Tasklet, m) -> bool:
         """Vectorized lowering cannot scatter a per-iteration *slice*; such
-        maps fall back to the sequential schedule instead of hard-failing."""
+        maps fall back to the sequential schedule instead of hard-failing.
+        Only exit-bound writes count: tasklet->tasklet edges inside a fused
+        scope carry per-iteration values, not container writes."""
         params = set(m.params)
         for e in self.state.out_edges(tasklet):
+            if isinstance(e.dst, Tasklet):
+                continue
             subset = e.memlet.subset
             if subset is None:
                 continue
@@ -313,33 +324,61 @@ class StateLowering:
             else:
                 raise NotImplementedError(type(node).__name__)
 
-    def _run_map_vmap(self, entry, exit_, tasklet: Tasklet, sizes, starts):
-        """Vectorized lowering of the canonical mapped-tasklet pattern."""
+    def _run_map_vmap(self, entry, exit_, inner, sizes, starts):
+        """Vectorized lowering of tasklet-only scopes: the canonical mapped
+        tasklet, and MapFusion chains whose tasklet->tasklet edges thread
+        per-iteration transients as local values through one vmapped body."""
         m = entry.map
-        in_edges = [e for e in self.state.in_edges(tasklet)
-                    if e.memlet.data is not None]
-        out_edges = [e for e in self.state.out_edges(tasklet)
-                     if e.memlet.data is not None]
-        for e in in_edges:
-            self.ensure_value(e.memlet.data)
+        chain_set = set(inner)
+        chain = [n for n in self.state.topological_nodes() if n in chain_set]
+        ext_in = {}    # tasklet -> container-reading in-edges
+        int_in = {}    # tasklet -> in-kernel intermediate in-edges
+        out_edges = []  # exit-bound writes, in chain order
+        for t in chain:
+            ext_in[t] = [e for e in self.state.in_edges(t)
+                         if e.memlet.data is not None
+                         and e.src not in chain_set]
+            int_in[t] = [e for e in self.state.in_edges(t)
+                         if e.src in chain_set]
+            out_edges.extend(e for e in self.state.out_edges(t)
+                             if e.memlet.data is not None
+                             and e.dst not in chain_set)
+        for t in chain:
+            for e in ext_in[t]:
+                self.ensure_value(e.memlet.data)
 
-        captured = {e.dst_conn: self.env[e.memlet.data] for e in in_edges}
+        captured = {id(e): self.env[e.memlet.data]
+                    for t in chain for e in ext_in[t]}
         base_env = dict(self.symenv)
 
         def body(*param_vals):
             local = dict(base_env)
             local.update(dict(zip(m.params, param_vals)))
-            kwargs = {}
-            for e in in_edges:
-                kwargs[e.dst_conn] = read_memlet(captured[e.dst_conn],
-                                                 e.memlet, local)
-            result = tasklet.fn(**kwargs)
-            if not isinstance(result, dict):
-                if len(out_edges) == 1:
-                    result = {out_edges[0].src_conn: result}
-                else:
-                    result = dict(zip(tasklet.outputs, result))
-            return tuple(result[e.src_conn] for e in out_edges)
+            vals = {}   # (producer tasklet, connector) -> iteration value
+            outs = {}   # id(exit edge) -> value
+            for t in chain:
+                kwargs = {}
+                for e in ext_in[t]:
+                    kwargs[e.dst_conn] = read_memlet(captured[id(e)],
+                                                     e.memlet, local)
+                for e in int_in[t]:
+                    kwargs[e.dst_conn] = vals[(e.src, e.src_conn)]
+                result = t.fn(**kwargs)
+                t_out = [e for e in self.state.out_edges(t)
+                         if e.dst in chain_set or e.memlet.data is not None]
+                if not isinstance(result, dict):
+                    conns = [e.src_conn for e in t_out]
+                    if isinstance(result, tuple):
+                        result = dict(zip(t.outputs or conns, result))
+                    else:
+                        result = {conns[0]: result}
+                for e in t_out:
+                    v = result[e.src_conn]
+                    if e.dst in chain_set:
+                        vals[(t, e.src_conn)] = v
+                    elif e.memlet.data is not None:
+                        outs[id(e)] = v
+            return tuple(outs[id(e)] for e in out_edges)
 
         if sizes:
             grids = jnp.meshgrid(*[jnp.arange(s) + st for s, st in
@@ -358,9 +397,11 @@ class StateLowering:
             subset = e.memlet.subset
             if subset is None:
                 # whole-container write from a mapped tasklet => reduction
-                if e.memlet.wcr == "add":
-                    self.env[name] = self.env[name] + jnp.sum(
-                        val, axis=tuple(range(len(sizes))))
+                axes = tuple(range(len(sizes)))
+                if e.memlet.wcr in WCR_MODES:
+                    self.env[name] = wcr_combine(
+                        e.memlet.wcr, self.env[name],
+                        wcr_reduce(e.memlet.wcr, val, axes))
                 else:
                     self.env[name] = val
                 continue
@@ -370,8 +411,8 @@ class StateLowering:
                 used_params |= (r.start.free_symbols & set(m.params))
             unused_axes = tuple(i for i, p in enumerate(m.params)
                                 if p not in used_params)
-            if e.memlet.wcr == "add" and unused_axes:
-                val = jnp.sum(val, axis=unused_axes)
+            if e.memlet.wcr in WCR_MODES and unused_axes:
+                val = wcr_reduce(e.memlet.wcr, val, unused_axes)
                 kept = [i for i in range(len(m.params)) if i not in unused_axes]
             else:
                 kept = list(range(len(m.params)))
@@ -403,13 +444,8 @@ class StateLowering:
                           else ia for ia in idx_arrays]
             idx_arrays = jnp.broadcast_arrays(*idx_arrays) \
                 if len(idx_arrays) > 1 else idx_arrays
-            ref = self.env[name].at[tuple(idx_arrays)]
-            if e.memlet.wcr == "add":
-                self.env[name] = ref.add(val)
-            elif e.memlet.wcr == "max":
-                self.env[name] = ref.max(val)
-            else:
-                self.env[name] = ref.set(val)
+            self.env[name] = _apply_wcr(self.env[name].at[tuple(idx_arrays)],
+                                        e.memlet.wcr, val)
 
 
 # ---------------------------------------------------------------------------

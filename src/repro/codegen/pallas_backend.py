@@ -14,12 +14,17 @@ kernels from the dataflow IR:
     ``index_map`` over grid coordinates — exactly a Pallas ``BlockSpec``.
     Intra-tile parameters (MapTiling annotations) widen index dimensions
     into VMEM-resident blocks;
-  * write-conflict-resolution ``add`` memlets whose index map ignores some
-    grid dimensions become VMEM scratch accumulators with
-    ``@pl.when(k == 0)`` init and a flush on the last reduction step —
-    the pattern hand-written in ``kernels/gemm/kernel.py``. Reduction
-    dimensions are ordered innermost so the output block stays resident
-    across the accumulation;
+  * write-conflict-resolution ``add``/``max``/``min`` memlets whose index
+    map ignores some grid dimensions become VMEM scratch accumulators
+    (zeros / running extrema) with ``@pl.when(k == 0)`` init and a flush
+    on the last reduction step — the pattern hand-written in
+    ``kernels/gemm/kernel.py``. Reduction dimensions are ordered
+    innermost so the output block stays resident across the accumulation;
+  * scopes may hold a *chain* of tasklets (the result of MapFusion):
+    tasklet->tasklet edges carry per-iteration transients that never
+    materialize — they thread through the kernel body as local values,
+    so a fused producer->consumer map pair is one launch with zero HBM
+    intermediates;
   * tasklet bodies are applied per-element via nested ``vmap`` over the
     intra-tile parameters, so scalar tasklets stay scalar semantics-wise
     while executing on whole blocks.
@@ -45,6 +50,8 @@ from ..core.memlet import (BlockFactorError, SubsetFactorization,
                            factor_subset)
 from ..core.sdfg import (MapEntry, MapExit, Scalar, SDFG, State, Stream,
                          Tasklet)
+from .common import (WCR_MODES, _apply_wcr, wcr_combine, wcr_identity,
+                     wcr_reduce)
 from .jnp_backend import StateLowering, build_callable as _build_callable
 
 #: annotation key GridConversionPass writes and this backend consumes.
@@ -61,6 +68,7 @@ class EdgeSpec:
     wcr: Optional[str] = None                  # outputs only
     reduction: Tuple[str, ...] = ()            # grid params absent from index
     box: Tuple[Tuple[int, int], ...] = ()      # written element range per dim
+    node: int = 0                              # owning tasklet (chain index)
 
 
 @dataclass(frozen=True)
@@ -71,6 +79,7 @@ class GridSpec:
     block_params: Tuple[Tuple[str, int], ...]  # intra-tile params + extents
     inputs: Tuple[EdgeSpec, ...]
     outputs: Tuple[EdgeSpec, ...]
+    tasklet_labels: Tuple[str, ...] = ()       # topo-ordered chain labels
 
 
 def _scalar_fact() -> SubsetFactorization:
@@ -78,22 +87,16 @@ def _scalar_fact() -> SubsetFactorization:
     return SubsetFactorization((1,), (Expr.const(0),), (0,))
 
 
-def _tasklet_of(state: State, entry: MapEntry, scopes) -> Tasklet:
+def _tasklet_chain(state: State, entry: MapEntry, scopes) -> List[Tasklet]:
+    """Topologically-ordered tasklets of the scope; raises when the scope
+    holds anything else (nested maps, access nodes, ...)."""
     inner = [n for n in scopes.get(entry, []) if not isinstance(n, MapExit)]
-    if len(inner) != 1 or not isinstance(inner[0], Tasklet):
+    if not inner or not all(isinstance(n, Tasklet) for n in inner):
         raise BlockFactorError(
-            f"map {entry.map.label!r}: grid codegen requires a single-"
-            f"tasklet scope, got {[type(n).__name__ for n in inner]}")
-    return inner[0]
-
-
-def _in_edges(state: State, t: Tasklet):
-    return [e for e in state.in_edges(t)
-            if e.dst_conn is not None and e.memlet.data is not None]
-
-
-def _out_edges(state: State, t: Tasklet):
-    return [e for e in state.out_edges(t) if e.memlet.data is not None]
+            f"map {entry.map.label!r}: grid codegen requires a tasklet-only "
+            f"scope, got {[type(n).__name__ for n in inner]}")
+    inner_set = set(inner)
+    return [n for n in state.topological_nodes() if n in inner_set]
 
 
 def _output_box(fact: SubsetFactorization, grid: Dict[str, Tuple[int, int]],
@@ -139,7 +142,8 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         raise BlockFactorError(
             f"map {m.label!r}: schedule {m.schedule.value} is not a grid")
     scopes = scopes if scopes is not None else state.scope_children()
-    t = _tasklet_of(state, entry, scopes)
+    chain = _tasklet_chain(state, entry, scopes)
+    chain_index = {t: i for i, t in enumerate(chain)}
     env = dict(sdfg.symbol_values) if env is None else dict(env)
 
     tiling = dict(m.annotations.get("tiling", {}))
@@ -178,17 +182,38 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                              block_params, env), False
 
     inputs = []
-    for e in _in_edges(state, t):
-        fact, scalar = _factor(e.memlet)
-        inputs.append(EdgeSpec(e.dst_conn, e.memlet.data, fact, scalar))
+    out_edge_list = []  # (chain index, edge)
+    for ti, t in enumerate(chain):
+        for e in state.in_edges(t):
+            if e.dst_conn is None or e.memlet.data is None:
+                continue
+            if e.src in chain_index:
+                # per-iteration intermediate, threaded as a local value
+                if e.memlet.wcr is not None:
+                    raise BlockFactorError(
+                        f"map {m.label!r}: wcr on in-kernel intermediate "
+                        f"{e.memlet.data!r}")
+                continue
+            fact, scalar = _factor(e.memlet)
+            inputs.append(EdgeSpec(e.dst_conn, e.memlet.data, fact, scalar,
+                                   node=ti))
+        for e in state.out_edges(t):
+            if e.dst in chain_index:
+                if e.memlet.wcr is not None:
+                    raise BlockFactorError(
+                        f"map {m.label!r}: wcr on in-kernel intermediate "
+                        f"{e.memlet.data!r}")
+                continue
+            if e.memlet.data is None:
+                continue
+            out_edge_list.append((ti, e))
 
-    out_edge_list = _out_edges(state, t)
     if not out_edge_list:
-        raise BlockFactorError(f"map {m.label!r}: tasklet has no outputs")
+        raise BlockFactorError(f"map {m.label!r}: no kernel outputs")
     used_any: List[str] = []
     outs_raw = []
-    for e in out_edge_list:
-        if e.memlet.wcr not in (None, "add"):
+    for ti, e in out_edge_list:
+        if e.memlet.wcr is not None and e.memlet.wcr not in WCR_MODES:
             raise BlockFactorError(
                 f"map {m.label!r}: wcr {e.memlet.wcr!r} unsupported")
         fact, scalar = _factor(e.memlet)
@@ -199,14 +224,14 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         for p in m.params:
             if p in used and p in grid_params and p not in used_any:
                 used_any.append(p)
-        outs_raw.append((e, fact, scalar, box, used))
+        outs_raw.append((ti, e, fact, scalar, box, used))
 
     # grid order: output-indexing params first (original order), reduction
     # params innermost so scratch accumulators stay block-resident.
     order = [p for p in m.params if p in grid_params and p in used_any]
     order += [p for p in m.params if p in grid_params and p not in used_any]
     outputs = []
-    for e, fact, scalar, box, used in outs_raw:
+    for ti, e, fact, scalar, box, used in outs_raw:
         reduction = tuple(p for p in order if p not in used)
         # every reduction dim must iterate inside every used dim
         max_used = max((order.index(p) for p in order if p in used),
@@ -216,16 +241,17 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                 f"map {m.label!r}: reduction params {reduction} cannot be "
                 f"ordered innermost for output {e.memlet.data!r}")
         if e.memlet.wcr is None and reduction and not getattr(
-                t, "side_effect_free", True):
+                chain[ti], "side_effect_free", True):
             raise BlockFactorError(f"map {m.label!r}: side-effecting tasklet")
         outputs.append(EdgeSpec(e.src_conn, e.memlet.data, fact, scalar,
-                                e.memlet.wcr, reduction, box))
+                                e.memlet.wcr, reduction, box, node=ti))
 
     return GridSpec(
         kernel_name=m.label,
         grid=tuple((p, grid_params[p][1]) for p in order),
         block_params=tuple(sorted(block_params.items())),
-        inputs=tuple(inputs), outputs=tuple(outputs))
+        inputs=tuple(inputs), outputs=tuple(outputs),
+        tasklet_labels=tuple(t.label for t in chain))
 
 
 # ---------------------------------------------------------------------------
@@ -253,18 +279,24 @@ class PallasStateLowering(StateLowering):
         spec: Optional[GridSpec] = entry.map.annotations.get(GRID_ANNOTATION)
         if spec is None:
             return False
-        if len(inner) != 1 or not isinstance(inner[0], Tasklet):
+        if not inner or not all(isinstance(n, Tasklet) for n in inner):
             return False
-        self._emit_grid_kernel(entry, inner[0], spec)
+        inner_set = set(inner)
+        chain = [n for n in self.state.topological_nodes() if n in inner_set]
+        labels = tuple(t.label for t in chain)
+        if spec.tasklet_labels and labels != spec.tasklet_labels:
+            return False  # stale annotation: graph changed under the spec
+        self._emit_grid_kernel(entry, chain, spec)
         return True
 
     # ------------------------------------------------------------------
-    def _emit_grid_kernel(self, entry: MapEntry, tasklet: Tasklet,
+    def _emit_grid_kernel(self, entry: MapEntry, chain: List[Tasklet],
                           spec: GridSpec):
         interpret = self.sdfg.metadata.get("pallas_interpret", True)
         grid_names = [p for p, _ in spec.grid]
         grid_sizes = tuple(n for _, n in spec.grid)
         block_order = [q for q, _ in spec.block_params]
+        chain_index = {t: i for i, t in enumerate(chain)}
 
         in_vals = []
         for es in spec.inputs:
@@ -286,25 +318,58 @@ class PallasStateLowering(StateLowering):
             out_specs.append(pl.BlockSpec(es.fact.block_shape,
                                           es.fact.index_map(grid_names)))
             out_shapes.append(jax.ShapeDtypeStruct(pv.shape, pv.dtype))
-            if es.wcr == "add" and es.reduction:
+            if es.wcr in WCR_MODES and es.reduction:
                 scratch_index[oi] = len(scratch_shapes)
                 scratch_shapes.append(
                     pltpu.VMEM(es.fact.block_shape, pv.dtype))
 
-        out_conns = [es.conn for es in spec.outputs]
-        tasklet_outputs = list(getattr(tasklet, "outputs", out_conns))
-        fn = tasklet.fn
+        # per-tasklet wiring: container operands (spec), in-kernel locals
+        # (tasklet->tasklet edges), and result slots (spec outputs)
+        int_in: List[List[Tuple[str, Tuple[int, str]]]] = []
+        out_binds: List[List[Tuple[str, str, object]]] = []
+        for ti, t in enumerate(chain):
+            ints = []
+            for e in self.state.in_edges(t):
+                if e.src in chain_index:
+                    ints.append((e.dst_conn,
+                                 (chain_index[e.src], e.src_conn)))
+            int_in.append(ints)
+            out_binds.append([])
+        for oi, es in enumerate(spec.outputs):
+            out_binds[es.node].append((es.conn, "result", oi))
+        for ti, t in enumerate(chain):
+            for e in self.state.out_edges(t):
+                if e.dst in chain_index:
+                    out_binds[ti].append((e.src_conn, "local",
+                                          (ti, e.src_conn)))
 
-        def call_fn(kwargs):
-            r = fn(**kwargs)
-            if not isinstance(r, dict):
-                if isinstance(r, tuple):
-                    r = dict(zip(tasklet_outputs, r))
-                else:
-                    r = {out_conns[0]: r}
-            return tuple(r[c] for c in out_conns)
-
+        fns = [t.fn for t in chain]
+        decl_outputs = [list(getattr(t, "outputs", ())) for t in chain]
         n_in, n_out = len(spec.inputs), len(spec.outputs)
+
+        def chain_call(opvals):
+            local = {}
+            results = [None] * n_out
+            for ti in range(len(chain)):
+                kwargs = {}
+                for i, es in enumerate(spec.inputs):
+                    if es.node == ti:
+                        kwargs[es.conn] = opvals[i]
+                for conn, key in int_in[ti]:
+                    kwargs[conn] = local[key]
+                r = fns[ti](**kwargs)
+                conns = [c for c, _, _ in out_binds[ti]]
+                if not isinstance(r, dict):
+                    if isinstance(r, tuple):
+                        r = dict(zip(decl_outputs[ti] or conns, r))
+                    else:
+                        r = {conns[0]: r}
+                for conn, kind, ref in out_binds[ti]:
+                    if kind == "local":
+                        local[ref] = r[conn]
+                    else:
+                        results[ref] = r[conn]
+            return tuple(results)
 
         def kernel(*refs):
             ins = refs[:n_in]
@@ -312,8 +377,8 @@ class PallasStateLowering(StateLowering):
             scratch = refs[n_in + n_out:]
             ids = [pl.program_id(k) for k in range(len(grid_names))]
 
-            kwargs = {}
-            for es, ref in zip(spec.inputs, ins):
+            opvals = {}
+            for i, (es, ref) in enumerate(zip(spec.inputs, ins)):
                 v = ref[...]
                 if es.fact.squeeze_dims:
                     v = jnp.squeeze(v, axis=es.fact.squeeze_dims)
@@ -323,32 +388,34 @@ class PallasStateLowering(StateLowering):
                     src = [_squeeze_adjusted_axis(es.fact, pd[q])
                            for q in present]
                     v = jnp.moveaxis(v, src, list(range(len(src))))
-                kwargs[es.conn] = v
+                opvals[i] = v
 
             if block_order:
-                f = call_fn
+                f = chain_call
                 for q in reversed(block_order):
-                    axes = {es.conn: (0 if q in dict(es.fact.param_dims)
-                                      else None) for es in spec.inputs}
+                    axes = {i: (0 if q in dict(es.fact.param_dims) else None)
+                            for i, es in enumerate(spec.inputs)}
                     f = jax.vmap(f, in_axes=(axes,), out_axes=0)
-                results = f(kwargs)
+                results = f(opvals)
             else:
-                results = call_fn(kwargs)
+                results = chain_call(opvals)
 
             for oi, (es, oref) in enumerate(zip(spec.outputs, outs)):
                 val = jnp.asarray(results[oi])
                 val = self._assemble_block(val, es, block_order)
-                if es.wcr == "add" and es.reduction:
+                if es.wcr in WCR_MODES and es.reduction:
                     acc = scratch[scratch_index[oi]]
                     red_pos = [grid_names.index(p) for p in es.reduction]
                     first = _conds(ids, red_pos, grid_sizes, at_end=False)
                     last = _conds(ids, red_pos, grid_sizes, at_end=True)
 
                     @pl.when(first)
-                    def _init(acc=acc):
-                        acc[...] = jnp.zeros(acc.shape, acc.dtype)
+                    def _init(acc=acc, es=es):
+                        acc[...] = jnp.full(
+                            acc.shape, wcr_identity(es.wcr, acc.dtype))
 
-                    acc[...] = acc[...] + val.astype(acc.dtype)
+                    acc[...] = wcr_combine(es.wcr, acc[...],
+                                           val.astype(acc.dtype))
 
                     @pl.when(last)
                     def _flush(acc=acc, oref=oref):
@@ -371,8 +438,8 @@ class PallasStateLowering(StateLowering):
             if es.scalar:
                 prev = jnp.reshape(prev, (1,))
             sl = tuple(slice(lo, hi) for lo, hi in es.box)
-            if es.wcr == "add":
-                cur = prev.at[sl].add(new[sl])
+            if es.wcr in WCR_MODES:
+                cur = _apply_wcr(prev.at[sl], es.wcr, new[sl])
             elif all((lo, hi) == (0, s) for (lo, hi), s
                      in zip(es.box, prev.shape)):
                 cur = new
@@ -390,8 +457,8 @@ class PallasStateLowering(StateLowering):
         pd = dict(es.fact.param_dims)
         absent = tuple(i for i, q in enumerate(block_order) if q not in pd)
         if absent:
-            if es.wcr == "add":  # intra-block reduction
-                val = jnp.sum(val, axis=absent)
+            if es.wcr in WCR_MODES:  # intra-block reduction
+                val = wcr_reduce(es.wcr, val, absent)
             else:  # revisited location: last write wins, as sequentially
                 idx = tuple(-1 if i in absent else slice(None)
                             for i in range(len(block_order)))

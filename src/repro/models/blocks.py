@@ -479,7 +479,11 @@ def ffn_init(cfg: ModelConfig, key, is_moe: bool) -> Dict:
     return p
 
 
-def ffn_apply(cfg: ModelConfig, p: Dict, x, is_moe: bool):
+def ffn_apply(cfg: ModelConfig, p: Dict, x, is_moe: bool,
+              training: bool = False):
+    # default matches forward()'s eval mode: an MoE call site that omits
+    # the flag must not silently reintroduce capacity dropping (and the
+    # decode-vs-forward divergence that comes with it)
     adt = jnp.dtype(cfg.activation_dtype)
     h = _norm(cfg, x, p, "ln").astype(adt)
     aux = jnp.zeros((), jnp.float32)
@@ -494,7 +498,7 @@ def ffn_apply(cfg: ModelConfig, p: Dict, x, is_moe: bool):
             h, p["router"], p["moe_gate"].astype(adt),
             p["moe_up"].astype(adt), p["moe_down"].astype(adt),
             top_k=m.top_k, capacity_factor=m.capacity_factor, shared=shared,
-            dispatch=cfg.moe_dispatch)
+            dispatch=cfg.moe_dispatch, drop_tokens=training)
     elif cfg.act == "swiglu":
         out = swiglu(h, p["w_gate"].astype(adt), p["w_up"].astype(adt),
                      p["w_down"].astype(adt))

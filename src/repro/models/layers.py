@@ -253,14 +253,26 @@ def gelu_mlp(x, w_in, b_in, w_out, b_out):
 # ---------------------------------------------------------------------------
 def moe_block(x, router_w, w_gate, w_up, w_down, *, top_k: int,
               capacity_factor: float = 1.25,
-              shared: Optional[dict] = None, dispatch: str = "onehot"):
+              shared: Optional[dict] = None, dispatch: str = "onehot",
+              drop_tokens: bool = True):
     """x: (B, S, D); router_w: (D, E); expert weights stacked (E, D, F) /
     (E, F, D). Returns (out, aux_loss).
 
     dispatch='onehot' is the paper-era GShard formulation (one-hot
     einsums: O(T^2) dispatch FLOPs — the dry-run exposes this);
     dispatch='sort' is the beyond-paper scatter/gather dispatch
-    (EXPERIMENTS §Perf): O(T*k*D) data movement, no dispatch matmuls."""
+    (EXPERIMENTS §Perf): O(T*k*D) data movement, no dispatch matmuls.
+
+    drop_tokens=False is eval mode: capacity = n_tokens, so no (token,
+    expert) pair can overflow its buffer (top-k experts are distinct, so
+    an expert receives at most n_tokens assignments). Dropping depends on
+    whole-batch whole-sequence token counts, which token-by-token decode
+    cannot see — disabling it makes decode match forward bit-for-bit.
+    Cost caveat: capacity grows from ~top_k*cf/E * n_tokens to n_tokens,
+    an E/(top_k*cf) constant inflation of the (E, C, D) expert buffers
+    (and of the already-O(T*C) one-hot dispatch tensors) — for long-
+    sequence eval at scale prefer dispatch='sort' or pass
+    drop_tokens=True explicitly and accept train-style dropping."""
     b, s, d = x.shape
     e = router_w.shape[1]
     n_tokens = b * s
@@ -272,8 +284,11 @@ def moe_block(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     gate_vals = gate_vals / jnp.clip(
         jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
 
-    capacity = int(np.ceil(top_k * n_tokens * capacity_factor / e))
-    capacity = max(capacity, 4)
+    if drop_tokens:
+        capacity = int(np.ceil(top_k * n_tokens * capacity_factor / e))
+        capacity = max(capacity, 4)
+    else:
+        capacity = n_tokens
 
     # position of each (token, k) pair within its expert's buffer
     onehot = jax.nn.one_hot(experts_idx, e, dtype=jnp.int32)   # (T, k, E)

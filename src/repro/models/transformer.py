@@ -81,8 +81,11 @@ def _block_init(cfg: ModelConfig, spec: BlockSpec, key) -> Dict:
 
 
 def _block_apply(cfg: ModelConfig, spec: BlockSpec, p: Dict, x, *,
-                 cache: Optional[Dict] = None, pos=None):
-    """Returns (x, aux, new_cache)."""
+                 cache: Optional[Dict] = None, pos=None,
+                 training: bool = False):
+    """Returns (x, aux, new_cache). ``training`` enables MoE capacity
+    dropping; eval-mode forward and decode both run without dropping so
+    they agree token-for-token."""
     new_cache = {}
     aux = jnp.zeros((), jnp.float32)
     if spec.kind == "attn":
@@ -93,12 +96,14 @@ def _block_apply(cfg: ModelConfig, spec: BlockSpec, p: Dict, x, *,
                                   cache=c)
         if nc is not None:
             new_cache = {"k": nc["k"], "v": nc["v"]}
-        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe)
+        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe,
+                                  training=training)
     elif spec.kind == "mamba":
         x, nc = blocks.mamba_apply(cfg, p["mamba"], x, cache=cache)
         if nc is not None:
             new_cache = nc
-        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe)
+        x, aux = blocks.ffn_apply(cfg, p["ffn"], x, spec.is_moe,
+                                  training=training)
     elif spec.kind == "rwkv":
         x, nc = blocks.rwkv_apply(cfg, p["rwkv"], x, cache=cache)
         if nc is not None:
@@ -136,8 +141,10 @@ class TransformerLM:
 
     def _apply_block(self, spec, p, x, **kw):
         if self.remat and not kw.get("cache"):
+            training = kw.get("training", False)
             fn = jax.checkpoint(
-                lambda p_, x_: _block_apply(self.cfg, spec, p_, x_)[:2])
+                lambda p_, x_: _block_apply(self.cfg, spec, p_, x_,
+                                            training=training)[:2])
             x, aux = fn(p, x)
             return x, aux, {}
         return _block_apply(self.cfg, spec, p, x, **kw)
@@ -200,9 +207,13 @@ class TransformerLM:
         return jnp.take(params["embed"], tokens, axis=0).astype(
             jnp.dtype(self.cfg.activation_dtype))
 
-    def forward(self, params, batch: Dict):
+    def forward(self, params, batch: Dict, training: bool = False):
         """batch: {'tokens': (B,S) int32, optional 'stub_embeds':
-        (B, n_stub, D)} -> (logits, aux_loss)."""
+        (B, n_stub, D)} -> (logits, aux_loss). The default is eval mode:
+        MoE capacity dropping stays off (capacity = n_tokens), so a full-
+        sequence forward matches token-by-token decode bit-for-bit;
+        ``loss`` passes training=True to restore the static training
+        capacity."""
         cfg = self.cfg
         x = self.embed_tokens(params, batch["tokens"])
         if cfg.n_stub_tokens and "stub_embeds" in batch:
@@ -217,7 +228,8 @@ class TransformerLM:
         def period_body(carry, xs):
             x, aux = carry
             for pi, spec in enumerate(self.period_specs):
-                x, a, _ = self._apply_block(spec, xs[pi], x)
+                x, a, _ = self._apply_block(spec, xs[pi], x,
+                                            training=training)
                 # sequence parallelism: layer-boundary activations shard
                 # their sequence dim over 'model'; GSPMD all-gathers for
                 # attention and reduce-scatters after (Megatron-SP).
@@ -231,7 +243,7 @@ class TransformerLM:
                 length=self.n_periods,
                 unroll=self.n_periods if _flags.UNROLL_SCANS else 1)
         for spec, p in zip(self.tail_specs, params["tail"]):
-            x, a, _ = self._apply_block(spec, p, x)
+            x, a, _ = self._apply_block(spec, p, x, training=training)
             aux_total = aux_total + a
         x = self._final_norm(params, x)
         logits = self._logits(params, x)
@@ -240,7 +252,7 @@ class TransformerLM:
         return logits, aux_total
 
     def loss(self, params, batch: Dict):
-        logits, aux = self.forward(params, batch)
+        logits, aux = self.forward(params, batch, training=True)
         tokens = batch["tokens"]
         targets = tokens[:, 1:]
         lg = logits[:, :-1].astype(jnp.float32)

@@ -13,8 +13,8 @@ passes.
 """
 from .cache import COMPILATION_CACHE, CompilationCache
 from .passes import (PASS_REGISTRY, DeviceOffloadPass, ExpandLibraryNodesPass,
-                     GridConversionPass, InputToConstantPass, MapTilingPass,
-                     Pass, PassManager,
+                     GridConversionPass, InputToConstantPass, MapFusionPass,
+                     MapTilingPass, Pass, PassManager,
                      PipelineFusionPass, SetExpansionPreferencePass,
                      StreamingCompositionPass, StreamingMemoryPass,
                      TransformationPass, VectorizationPass, default_pipeline,
@@ -25,7 +25,8 @@ __all__ = [
     "BACKENDS", "COMPILATION_CACHE", "CompilationCache", "Compiled",
     "DeviceOffloadPass", "ExpandLibraryNodesPass", "GridConversionPass",
     "InputToConstantPass",
-    "Lowered", "MapTilingPass", "PASS_REGISTRY", "Pass", "PassManager",
+    "Lowered", "MapFusionPass", "MapTilingPass",
+    "PASS_REGISTRY", "Pass", "PassManager",
     "PipelineFusionPass", "SetExpansionPreferencePass", "Stage",
     "StreamingCompositionPass", "StreamingMemoryPass", "TransformationPass",
     "VectorizationPass", "Wrapped", "default_pipeline", "lower",

@@ -26,8 +26,8 @@ import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 from ..core.sdfg import SDFG, _stable_repr
-from ..transforms import (DeviceOffload, InputToConstant, MapTiling,
-                          StreamingComposition, StreamingMemory,
+from ..transforms import (DeviceOffload, InputToConstant, MapFusion,
+                          MapTiling, StreamingComposition, StreamingMemory,
                           Transformation, Vectorization)
 
 #: name -> Pass subclass, for string lookup in pipelines / custom passes.
@@ -125,6 +125,17 @@ class InputToConstantPass(TransformationPass):
 
 
 @register_pass
+class MapFusionPass(TransformationPass):
+    """Fuse producer->consumer map scopes over matching iteration spaces
+    (transforms/map_fusion.py): the intermediate becomes a per-iteration
+    tasklet->tasklet value instead of an HBM round-trip. Runs after
+    expansion (generic subgraphs expose the map pairs) and before
+    MapTiling (fused single-parameter maps then tile as one)."""
+    transformation = MapFusion
+    name = "MapFusion"
+
+
+@register_pass
 class MapTilingPass(TransformationPass):
     transformation = MapTiling
     name = "MapTiling"
@@ -191,13 +202,75 @@ class PipelineFusionPass(Pass):
 class GridConversionPass(Pass):
     """Annotate eligible DEVICE/PIPELINED map scopes with derived Pallas
     grid specs (``codegen.pallas_backend.analyze_map_scope``): grid from
-    map ranges, BlockSpecs factored from affine memlet subsets, wcr-add
-    as VMEM scratch accumulation. Non-affine / dynamic / misaligned scopes
-    are left un-annotated and fall back to the structural interpreter —
-    the paper's generic-expansion fallback. Runs after MapTilingPass so
-    tile annotations shape the VMEM blocks; Pallas backend only."""
+    map ranges, BlockSpecs factored from affine memlet subsets, wcr
+    add/max/min as VMEM scratch accumulation. Non-affine / dynamic /
+    misaligned scopes are left un-annotated and fall back to the
+    structural interpreter — the paper's generic-expansion fallback.
+
+    Conversion is gated by a VMEM-aware cost model: a scope only becomes
+    a grid kernel when its per-step blocks (double-buffered, plus
+    reduction scratch) fit ``vmem_budget_bytes``, its grid has at least
+    ``min_grid_steps`` steps (a one-step grid is a whole-array copy the
+    vmap path does without launch overhead), and its fused chain stays
+    under ``max_fused_tasklets``. Scopes the model rejects are recorded
+    as ``grid_skipped(reason)`` and stay on the vmap path; converted
+    scopes are recorded in ``grid_converted`` with their cost estimates.
+    Runs after MapTilingPass so tile annotations shape the VMEM blocks;
+    Pallas backend only."""
 
     name = "GridConversion"
+
+    #: VMEM is ~16 MiB/core on current TPUs; the budget bounds the
+    #: double-buffered working set a generated kernel may pin there.
+    DEFAULT_VMEM_BUDGET = 16 * 2 ** 20
+
+    def __init__(self, vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                 min_grid_steps: int = 2, max_fused_tasklets: int = 16):
+        self.vmem_budget_bytes = int(vmem_budget_bytes)
+        self.min_grid_steps = int(min_grid_steps)
+        self.max_fused_tasklets = int(max_fused_tasklets)
+
+    def options(self) -> Dict[str, Any]:
+        return {"vmem_budget_bytes": self.vmem_budget_bytes,
+                "min_grid_steps": self.min_grid_steps,
+                "max_fused_tasklets": self.max_fused_tasklets}
+
+    # -- cost model -----------------------------------------------------
+    def estimate(self, spec, sdfg: SDFG) -> Dict[str, int]:
+        """Static cost estimate for a derived grid spec: total grid steps,
+        VMEM bytes pinned per step (in/out blocks double-buffered by the
+        Pallas pipeline + scratch accumulators), and chain length."""
+        steps = 1
+        for _, n in spec.grid:
+            steps *= n
+        def block_bytes(es):
+            desc = sdfg.arrays.get(es.data)
+            block = desc.dtype.bytes if desc is not None else 4
+            for b in es.fact.block_shape:
+                block *= b
+            return block
+
+        vmem = 0
+        for es in spec.inputs:
+            vmem += 2 * block_bytes(es)   # HBM->VMEM double buffering
+        for es in spec.outputs:
+            vmem += 2 * block_bytes(es)
+            if es.wcr and es.reduction:
+                vmem += block_bytes(es)   # scratch accumulator
+        return {"grid_steps": steps, "vmem_bytes": vmem,
+                "tasklets": max(1, len(spec.tasklet_labels))}
+
+    def skip_reason(self, est: Dict[str, int]) -> Optional[str]:
+        if est["vmem_bytes"] > self.vmem_budget_bytes:
+            return (f"blocks pin {est['vmem_bytes']} B of VMEM > budget "
+                    f"{self.vmem_budget_bytes} B")
+        if est["grid_steps"] < self.min_grid_steps:
+            return (f"grid of {est['grid_steps']} step(s) below "
+                    f"min_grid_steps={self.min_grid_steps}; vmap path wins")
+        if est["tasklets"] > self.max_fused_tasklets:
+            return (f"{est['tasklets']} fused tasklets exceed "
+                    f"max_fused_tasklets={self.max_fused_tasklets}")
+        return None
 
     def apply(self, sdfg: SDFG, report: dict) -> List[str]:
         from ..codegen.pallas_backend import (GRID_ANNOTATION,
@@ -215,7 +288,7 @@ class GridConversionPass(Pass):
         env = {k: v for k, v in sdfg.symbol_values.items()
                if k not in mutated}
 
-        converted, fallbacks = [], []
+        converted, skipped, fallbacks = [], [], []
         for st in sdfg.states:
             scopes = st.scope_children()
             for node in st.nodes:
@@ -224,13 +297,25 @@ class GridConversionPass(Pass):
                 try:
                     spec = analyze_map_scope(sdfg, st, node, scopes, env)
                 except BlockFactorError as exc:
+                    # drop any annotation from an earlier run: a stale
+                    # spec would emit a kernel with outdated BlockSpecs
+                    node.map.annotations.pop(GRID_ANNOTATION, None)
                     fallbacks.append((node.map.label, str(exc)))
                     continue
+                est = self.estimate(spec, sdfg)
+                reason = self.skip_reason(est)
+                if reason is not None:
+                    node.map.annotations.pop(GRID_ANNOTATION, None)
+                    skipped.append((node.map.label, reason))
+                    continue
                 node.map.annotations[GRID_ANNOTATION] = spec
-                converted.append(spec.kernel_name)
-        report.setdefault("grid_kernels", []).extend(converted)
+                converted.append({"map": spec.kernel_name, **est})
+        report.setdefault("grid_kernels", []).extend(
+            c["map"] for c in converted)
+        report.setdefault("grid_converted", []).extend(converted)
+        report.setdefault("grid_skipped", []).extend(skipped)
         report.setdefault("grid_fallbacks", []).extend(fallbacks)
-        return converted
+        return [c["map"] for c in converted]
 
 
 @register_pass
@@ -361,13 +446,16 @@ def default_pipeline(backend: str, interpret: bool = True,
 
     ``jnp``     -- XLA-auto: prefer (xla, generic) expansions; XLA fuses.
     ``pallas``  -- explicit: fuse stream-connected chains into Pallas
-                   kernels first, then prefer (pallas, xla, generic).
+                   kernels first, then prefer (pallas, xla, generic);
+                   expanded map pairs fuse (MapFusion) before tiling so
+                   producer->consumer chains become single grid kernels.
     """
     if backend == "pallas":
         return PassManager([
             SetExpansionPreferencePass(("pallas", "xla", "generic")),
             PipelineFusionPass(interpret=interpret),
             ExpandLibraryNodesPass(level=expansion_level),
+            MapFusionPass(),
             MapTilingPass(tile_size=128),
             GridConversionPass(),
         ], name="pallas_default")

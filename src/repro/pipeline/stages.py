@@ -167,7 +167,8 @@ class Lowered(Stage):
             # an explicit PipelineFusionPass(interpret=...) overrides.
             work.metadata["pallas_interpret"] = bool(interpret)
         report = {"backend": backend, "fused_regions": [], "expansions": [],
-                  "passes": [], "grid_kernels": [], "grid_fallbacks": [],
+                  "passes": [], "grid_kernels": [], "grid_converted": [],
+                  "grid_skipped": [], "grid_fallbacks": [],
                   "pipeline": pm.name}
         pm.run(work, report=report)
         work.validate()

@@ -2,11 +2,12 @@
 from .base import Transformation
 from .device_offload import DeviceOffload
 from .input_to_constant import InputToConstant
+from .map_fusion import MapFusion
 from .map_tiling import MapTiling
 from .streaming import StreamingComposition, StreamingMemory
 from .vectorization import Vectorization
 
 __all__ = [
-    "Transformation", "DeviceOffload", "InputToConstant", "MapTiling",
-    "StreamingComposition", "StreamingMemory", "Vectorization",
+    "Transformation", "DeviceOffload", "InputToConstant", "MapFusion",
+    "MapTiling", "StreamingComposition", "StreamingMemory", "Vectorization",
 ]

@@ -1,0 +1,287 @@
+"""MapFusion: fuse producer->consumer map scopes over matching ranges.
+
+The paper's streaming composition removes an off-chip round-trip by
+turning the intermediate container into a FIFO between two processing
+elements. MapFusion is the tighter, whole-dataflow variant (cf. FLOWER's
+fusion of adjacent processing stages): when a map writes a transient that
+a second map over the *same* iteration space reads back element-for-
+element, the two scopes merge into one and the intermediate stops being a
+container access altogether — it becomes a per-iteration value carried on
+a direct tasklet->tasklet edge inside the fused scope. On TPU the fused
+scope lowers to a single Pallas grid kernel whose intermediate lives in
+registers/VMEM, where the unfused pair was two kernel launches with an
+HBM array between them.
+
+Legality (checked per match, mirrored by tests/test_map_fusion.py):
+
+  * the intermediate is a transient ``Array`` accessed at exactly one
+    node in the whole SDFG, written once by the producer's exit and read
+    only by the consumer's entry (no other readers/writers);
+  * producer and consumer ranges match positionally (after renaming the
+    consumer's parameters onto the producer's);
+  * every consumer read subset equals the producer write subset under
+    that renaming — offset reads (stencil halos) refuse to fuse;
+  * no write-conflict resolution on the intermediate's edges (a wcr
+    write is not a per-iteration value);
+  * both scopes contain only tasklets, and fusing must not reorder
+    accesses to any *other* container shared between the two scopes.
+
+After fusion the intermediate's descriptor is retargeted to registers
+(``StorageType.REG``): it no longer appears at any access node, so it
+contributes nothing to the off-chip volume metric.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..core.dtypes import ScheduleType, StorageType
+from ..core.memlet import Memlet
+from ..core.sdfg import (AccessNode, Array, MapEntry, MapExit, Scalar, SDFG,
+                         State, Stream, Tasklet)
+from ..core.symbolic import Expr
+from .base import Transformation
+
+#: schedules whose scopes may fuse (grid-eligible schedules; UNROLLED /
+#: MESH scopes are replicated hardware and keep their own identity).
+_FUSIBLE = (ScheduleType.PIPELINED, ScheduleType.DEVICE)
+
+
+def _consumer_entry(state: State, node: AccessNode) -> Optional[MapEntry]:
+    """The single MapEntry consuming ``node``, or None."""
+    dsts = {e.dst for e in state.out_edges(node)}
+    if len(dsts) != 1:
+        return None
+    (dst,) = dsts
+    return dst if isinstance(dst, MapEntry) else None
+
+
+def _scope_tasklets(state: State, scopes, entry: MapEntry):
+    """Directly-contained nodes minus the exit; None if any is not a
+    Tasklet (nested maps / access nodes keep their scopes separate)."""
+    inner = [n for n in scopes.get(entry, []) if not isinstance(n, MapExit)]
+    if not inner or not all(isinstance(n, Tasklet) for n in inner):
+        return None
+    return inner
+
+
+def _param_renaming(prod, cons) -> Optional[Dict[str, Expr]]:
+    """Positional consumer->producer parameter renaming, or None when the
+    iteration spaces differ."""
+    if len(prod.params) != len(cons.params):
+        return None
+    ren = {cp: Expr.sym(pp) for cp, pp in zip(cons.params, prod.params)
+           if cp != pp}
+    for rp, rc in zip(prod.ranges, cons.ranges):
+        if rc.subs(ren) != rp:
+            return None
+    return ren
+
+
+class MapFusion(Transformation):
+    """transient array node between a map exit and a map entry over the
+    same iteration space -> merge the scopes; the intermediate becomes a
+    direct per-iteration tasklet->tasklet edge."""
+
+    def find_matches(self, sdfg: SDFG, **kwargs):
+        for st in sdfg.states:
+            for node in st.data_nodes():
+                desc = sdfg.arrays.get(node.data)
+                if not isinstance(desc, Array) or isinstance(desc, (Stream,)):
+                    continue
+                if not desc.transient:
+                    continue
+                if st.in_degree(node) != 1:
+                    continue
+                if not isinstance(st.in_edges(node)[0].src, MapExit):
+                    continue
+                if _consumer_entry(st, node) is None:
+                    continue
+                yield {"state": st, "node": node}
+
+    # ------------------------------------------------------------------
+    def can_apply(self, sdfg: SDFG, match: Dict) -> bool:
+        st: State = match["state"]
+        node: AccessNode = match["node"]
+        if node not in st.graph:
+            return False
+        t = node.data
+        desc = sdfg.arrays.get(t)
+        if not isinstance(desc, Array) or isinstance(desc, (Stream, Scalar)):
+            return False
+        if not desc.transient or t in sdfg.metadata.get("pin_hbm", ()):
+            return False
+        # the one access node in the whole SDFG (no cross-PE aliasing)
+        count = sum(1 for s in sdfg.states for n in s.data_nodes()
+                    if n.data == t)
+        if count != 1 or st.in_degree(node) != 1:
+            return False
+        in_e = st.in_edges(node)[0]
+        if not isinstance(in_e.src, MapExit):
+            return False
+        px: MapExit = in_e.src
+        ce = _consumer_entry(st, node)
+        if ce is None or ce is px.entry:
+            return False
+        prod, cons = px.map, ce.map
+        if prod.schedule not in _FUSIBLE or cons.schedule not in _FUSIBLE:
+            return False
+        ren = _param_renaming(prod, cons)
+        if ren is None:
+            return False
+        scopes = st.scope_children()
+        if _scope_tasklets(st, scopes, px.entry) is None:
+            return False
+        if _scope_tasklets(st, scopes, ce) is None:
+            return False
+        cx = next((n for n in st.nodes
+                   if isinstance(n, MapExit) and n.entry is ce), None)
+        if cx is None:
+            return False
+        # exactly one in-scope writer of t, plain (no wcr), static subset
+        w_edges = [e for e in st.in_edges(px) if e.memlet.data == t]
+        if len(w_edges) != 1:
+            return False
+        w = w_edges[0]
+        if w.memlet.wcr is not None or w.memlet.dynamic \
+                or w.memlet.subset is None:
+            return False
+        if in_e.memlet.wcr is not None:
+            return False
+        # the writes must be disjoint across iterations — otherwise the
+        # fused consumer reads its iteration's private value where the
+        # sequential schedule delivered the LAST write. Sufficient
+        # condition for an injective index map: every parameter indexes
+        # exactly one size-1 dimension, and no dimension mixes two
+        # parameters (t[i+j] collides; t[i:i+2] overlaps neighbors; a
+        # subset ignoring a param revisits locations).
+        pset = set(prod.params)
+        used_params = set()
+        for r in w.memlet.subset:
+            rsyms = (r.start.free_symbols | r.stop.free_symbols
+                     | r.step.free_symbols)
+            if (rsyms & pset) and not r.is_index():
+                return False
+            dim_params = r.start.free_symbols & pset
+            if len(dim_params) > 1 or dim_params & used_params:
+                return False
+            used_params |= dim_params
+        if used_params != pset:
+            return False
+        # every consumer read must be the element the producer just wrote
+        r_edges = [e for e in st.out_edges(ce) if e.memlet.data == t]
+        if not r_edges:
+            return False
+        for e in r_edges:
+            if e.memlet.wcr is not None or e.memlet.dynamic \
+                    or e.memlet.subset is None:
+                return False
+            if e.memlet.subset.subs(ren) != w.memlet.subset:
+                return False
+        # renaming must not capture a consumer-scope symbol that already
+        # means something else (a free symbol equal to a producer param)
+        cons_free = set()
+        for e in st.out_edges(ce) + st.in_edges(cx):
+            if e.memlet.subset is not None:
+                for r in e.memlet.subset:
+                    cons_free |= (r.start.free_symbols | r.stop.free_symbols
+                                  | r.step.free_symbols)
+        cons_free -= set(cons.params)
+        if cons_free & set(prod.params):
+            return False
+        # fusing must not reorder accesses to other shared containers
+        prod_writes = {e.memlet.data for e in st.in_edges(px)
+                       if e.memlet.data} - {t}
+        prod_reads = {e.memlet.data for e in st.out_edges(px.entry)
+                      if e.memlet.data}
+        cons_reads = {e.memlet.data for e in st.out_edges(ce)
+                      if e.memlet.data} - {t}
+        cons_writes = {e.memlet.data for e in st.in_edges(cx)
+                       if e.memlet.data}
+        if prod_writes & (cons_reads | cons_writes):
+            return False
+        if cons_writes & prod_reads:
+            return False
+        # no consumer input may depend on the producer through a path
+        # OTHER than the fused intermediate (a third scope in between):
+        # rerouting those inputs to the fused entry would create a cycle
+        import networkx as nx
+        for e in st.in_edges(ce):
+            if e.src is node:
+                continue
+            if nx.has_path(st.graph, px, e.src):
+                return False
+        return True
+
+    # ------------------------------------------------------------------
+    def apply_match(self, sdfg: SDFG, match: Dict):
+        st: State = match["state"]
+        node: AccessNode = match["node"]
+        t = node.data
+        in_e = st.in_edges(node)[0]
+        px: MapExit = in_e.src
+        pe: MapEntry = px.entry
+        prod = px.map
+        ce = _consumer_entry(st, node)
+        cons = ce.map
+        cx = next(n for n in st.nodes
+                  if isinstance(n, MapExit) and n.entry is ce)
+        ren = _param_renaming(prod, cons)
+
+        def rn(memlet: Memlet) -> Memlet:
+            if ren and memlet.subset is not None:
+                return Memlet(data=memlet.data,
+                              subset=memlet.subset.subs(ren),
+                              volume=memlet.volume, wcr=memlet.wcr,
+                              dynamic=memlet.dynamic)
+            return memlet
+
+        scopes = st.scope_children()
+        cons_inner = set(_scope_tasklets(st, scopes, ce))
+
+        # the producer tasklet that computes t, and its output connector
+        w_edge = next(e for e in st.in_edges(px) if e.memlet.data == t)
+        writer, writer_conn = w_edge.src, w_edge.src_conn
+
+        # outer sources feeding the consumer entry, and existing producer
+        # entry inputs (dedupe key: (source node, entry connector))
+        outer_src = {e.memlet.data: e.src for e in st.in_edges(ce)
+                     if e.memlet.data not in (None, t)}
+        pe_in = {(e.src, e.dst_conn) for e in st.in_edges(pe)}
+
+        # consumer-scope reads: through the fused entry, or — for the
+        # intermediate — straight off the producer tasklet
+        for e in list(st.out_edges(ce)):
+            if e.memlet.data == t:
+                st.add_edge(writer, writer_conn, e.dst, e.dst_conn,
+                            rn(e.memlet))
+                continue
+            st.add_edge(pe, e.src_conn, e.dst, e.dst_conn, rn(e.memlet))
+            d = e.memlet.data
+            if d is not None and d in outer_src:
+                key = (outer_src[d], f"IN_{d}")
+                if key not in pe_in:
+                    st.add_edge(outer_src[d], None, pe, f"IN_{d}",
+                                Memlet.simple(d))
+                    pe_in.add(key)
+
+        # consumer-internal tasklet->tasklet edges: rename in place
+        for e in st.edges:
+            if e.src in cons_inner and e.dst in cons_inner:
+                e.memlet = rn(e.memlet)
+
+        # consumer-scope writes: through the fused exit
+        for e in list(st.in_edges(cx)):
+            st.add_edge(e.src, e.src_conn, px, e.dst_conn, rn(e.memlet))
+        for e in list(st.out_edges(cx)):
+            st.add_edge(px, e.src_conn, e.dst, e.dst_conn, e.memlet)
+
+        # drop the intermediate round-trip and the consumed scope shell
+        st.remove_edge(w_edge)
+        st.remove_node(node)
+        st.remove_node(ce)
+        st.remove_node(cx)
+
+        prod.label = f"{prod.label}+{cons.label}"
+        # the intermediate now lives on a per-iteration edge only: pure
+        # on-chip storage, out of the off-chip volume metric
+        sdfg.arrays[t].storage = StorageType.REG

@@ -1,0 +1,110 @@
+"""Property tests (optional hypothesis dependency): random elementwise
+chains fuse completely and match plain composition; fusion legality is
+exactly range-match + element-read + no-wcr; strided memlet writes land
+on exactly the strided positions for every wcr mode."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+                         "dependency (pip install -e .[test])")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.codegen.common import write_memlet  # noqa: E402
+from repro.core.memlet import Memlet, Range, Subset  # noqa: E402
+from repro.core.sdfg import SDFG  # noqa: E402
+from repro.core.symbolic import sym  # noqa: E402, F401  (chain builder)
+from repro.pipeline import lower  # noqa: E402
+from repro.transforms import MapFusion  # noqa: E402
+
+from test_map_fusion import _pair_sdfg  # noqa: E402
+
+_OPS = [lambda v, c=c: v * c for c in (2.0, -0.5)] + \
+       [lambda v, c=c: v + c for c in (1.0, -3.0)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=hst.sampled_from([4, 16, 33]),
+       ops=hst.lists(hst.sampled_from(list(range(len(_OPS)))),
+                     min_size=2, max_size=4),
+       data=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_fused_chain_matches_composition(n, ops, data):
+    """Any elementwise producer->consumer chain fuses completely and both
+    backends agree with the plain composed function."""
+    s = SDFG("prop")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    prev_name, prev_node = "x", None
+    for k, op in enumerate(ops):
+        last = k == len(ops) - 1
+        dst = "out" if last else f"t{k}"
+        if not last:
+            s.add_transient(dst, (n,), "float32")
+        kw = {} if prev_node is None else {"input_nodes":
+                                           {prev_name: prev_node}}
+        _, _, ex = st.add_mapped_tasklet(
+            f"m{k}", {"i": (0, n)},
+            inputs={"v": Memlet.simple(prev_name, Subset.indices([i]))},
+            outputs={"w": Memlet.simple(dst, Subset.indices([i]))},
+            fn=_OPS[op], **kw)
+        prev_name = dst
+        prev_node = next(e.dst for e in st.out_edges(ex)
+                         if e.memlet.data == dst)
+    assert s.apply(MapFusion) == len(ops) - 1
+    x = np.random.default_rng(data).standard_normal(n).astype(np.float32)
+    ref = x
+    for op in ops:
+        ref = _OPS[op](ref)
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+    op_ = np.asarray(lower(s).compile("pallas", cache=None)(x=x)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-5)
+    np.testing.assert_allclose(op_, ref, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.sampled_from([8, 24]),
+       pn=hst.sampled_from([8, 12, 24]),
+       off=hst.sampled_from([0, 1]),
+       wcr=hst.sampled_from([None, "add"]))
+def test_fusion_legality_property(n, pn, off, wcr):
+    """Fusion applies exactly when ranges match, the read is the written
+    element, and no wcr touches the intermediate."""
+    legal = (pn == n) and (off == 0) and (wcr is None)
+    s = _pair_sdfg(n=n, cons_params={"j": (0, pn)}, offset=off, wcr=wcr)
+    assert (s.apply(MapFusion) == 1) is legal
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=hst.integers(min_value=4, max_value=40),
+       start=hst.integers(min_value=0, max_value=6),
+       step=hst.integers(min_value=1, max_value=4),
+       wcr=hst.sampled_from([None, "add", "max", "min"]),
+       seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_strided_write_matches_numpy(n, start, step, wcr, seed):
+    """write_memlet with a static strided subset behaves exactly like the
+    equivalent numpy strided assignment / combine."""
+    stop = min(n, start + 3 * step + 1)
+    count = -(-(stop - start) // step)
+    if count <= 0:
+        return
+    rng = np.random.default_rng(seed)
+    base = rng.standard_normal(n).astype(np.float32)
+    vals = rng.standard_normal(count).astype(np.float32)
+    m = Memlet.simple("x", Subset([Range.make(start, stop, step)]), wcr=wcr)
+    out = np.asarray(write_memlet(jnp.asarray(base), m,
+                                  jnp.asarray(vals), {}))
+    ref = base.copy()
+    sl = slice(start, stop, step)
+    if wcr == "add":
+        ref[sl] += vals
+    elif wcr == "max":
+        ref[sl] = np.maximum(ref[sl], vals)
+    elif wcr == "min":
+        ref[sl] = np.minimum(ref[sl], vals)
+    else:
+        ref[sl] = vals
+    np.testing.assert_allclose(out, ref, rtol=1e-6)

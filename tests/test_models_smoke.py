@@ -49,19 +49,14 @@ def test_smoke_decode_step(arch):
 
 
 @pytest.mark.parametrize("arch", [
-    "granite-3-2b", "rwkv6-7b",
-    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.xfail(
-        strict=True, reason=(
-            "MoE capacity_factor drops overflow tokens in the full-sequence "
-            "forward: capacity = ceil(top_k*B*S*cf/E) depends on the total "
-            "token count, and the drop decision on the cumulative batch-"
-            "major routing order over the whole sequence — neither exists "
-            "step-by-step. Token-by-token decode routes each token with "
-            "trivial per-step capacity and (correctly, for inference) never "
-            "drops, so logits diverge once the forward pass drops a token."))),
-    "gemma3-4b"])
+    "granite-3-2b", "rwkv6-7b", "jamba-1.5-large-398b", "gemma3-4b"])
 def test_decode_matches_forward(arch):
-    """Token-by-token decode with cache == full-sequence forward."""
+    """Token-by-token decode with cache == full-sequence forward.
+
+    MoE archs (jamba) only agree because the default eval-mode forward
+    disables capacity dropping (capacity = n_tokens): the training drop
+    decision depends on whole-batch whole-sequence token counts that
+    token-by-token decode cannot (and at inference should not) see."""
     cfg = dataclasses.replace(get_config(arch).reduced(),
                               activation_dtype="float32")
     model = build_model(cfg)

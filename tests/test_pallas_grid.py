@@ -265,17 +265,22 @@ def _build_gemver(n):
 
 
 def test_gemver_grid_cross_validation():
-    """Acceptance: gemver jnp-vs-pallas within 1e-4; all four generic maps
-    (2x ger, 2x gemv) lower to grid kernels."""
+    """Acceptance: gemver jnp-vs-pallas within 1e-4. The two rank-1
+    updates fuse into ONE grid kernel (B1 never leaves the kernel); the
+    two gemv row maps lower to grid kernels of their own."""
     n = 64
     rng = np.random.default_rng(6)
     d = {k: rng.standard_normal((n, n) if k == "A" else n).astype(np.float32)
          for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
     cj = lower(_build_gemver(n)).compile("jnp")
     cp = lower(_build_gemver(n)).compile("pallas", expansion_level="generic")
-    assert cp.report["grid_kernels"] == ["ger0_map", "ger1_map",
+    assert cp.report["grid_kernels"] == ["ger0_map+ger1_map",
                                          "gemv0_rows", "gemv1_rows"]
     assert cp.report["grid_fallbacks"] == []
+    assert cp.report["grid_skipped"] == []
+    fused = next(c for c in cp.report["grid_converted"]
+                 if c["map"] == "ger0_map+ger1_map")
+    assert fused["tasklets"] == 2
     oj, op = cj(**d), cp(**d)
     for kk in ("x_out", "w_out"):
         np.testing.assert_allclose(np.asarray(op[kk]), np.asarray(oj[kk]),
@@ -360,14 +365,239 @@ def test_read_memlet_interleaved_partial_sums():
                                   np.asarray(x)[2::K])
 
 
-def test_write_memlet_strided_still_raises():
-    """Strided *writes* stay unimplemented and must fail loudly, not land
-    on contiguous (wrong) positions."""
+def test_write_memlet_static_strides():
+    """Strided *writes* with static starts mirror the strided reads: the
+    values land on exactly the strided positions (set / wcr add/max/min);
+    only traced starts with strides keep the loud failure."""
     from repro.codegen.common import write_memlet
     x = jnp.zeros(16, jnp.float32)
     m = Memlet.simple("x", Subset([Range.make(1, 13, 2)]))
+    out = np.asarray(write_memlet(x, m, jnp.ones(6, jnp.float32), {}))
+    ref = np.zeros(16, np.float32)
+    ref[1:13:2] = 1.0
+    np.testing.assert_array_equal(out, ref)
+
+    # wcr add accumulates on the strided positions only
+    m_add = Memlet.simple("x", Subset([Range.make(0, 15, 2)]), wcr="add")
+    base = jnp.arange(16, dtype=jnp.float32)
+    out2 = np.asarray(write_memlet(base, m_add,
+                                   10 * jnp.ones(8, jnp.float32), {}))
+    ref2 = np.arange(16, dtype=np.float32)
+    ref2[0:15:2] += 10
+    np.testing.assert_array_equal(out2, ref2)
+
+    # wcr min on a strided 2-d subset
+    A = jnp.full((4, 6), 5.0, jnp.float32)
+    m2 = Memlet.simple("A", Subset([Range.index(2), Range.make(0, 6, 3)]),
+                       wcr="min")
+    out3 = np.asarray(write_memlet(A, m2, jnp.zeros(2, jnp.float32), {}))
+    ref3 = np.full((4, 6), 5.0, np.float32)
+    ref3[2, 0:6:3] = 0.0
+    np.testing.assert_array_equal(out3, ref3)
+
+    # traced start + stride would need a scatter: still loud
     with pytest.raises(NotImplementedError, match="strided memlet writes"):
-        write_memlet(x, m, jnp.ones(6, jnp.float32), {})
+        jax.jit(lambda s: write_memlet(
+            x, Memlet.simple("x", Subset([Range(sym("s"), sym("s") + 12,
+                                                Expr.const(2))])),
+            jnp.ones(6, jnp.float32), {"s": s}))(jnp.int32(1))
+
+
+# ---------------------------------------------------------------------------
+# multi-tasklet grid kernels (fused scopes)
+# ---------------------------------------------------------------------------
+
+def _chain_sdfg(n=256):
+    """Hand-built fused-style scope: two tasklets threaded by a
+    per-iteration transient on a direct tasklet->tasklet edge."""
+    from repro.core.dtypes import StorageType
+    s = SDFG("chain")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    s.add_transient("t", (n,), "float32", storage=StorageType.REG)
+    st = s.add_state("main", is_start=True)
+    entry, exit_ = st.add_map("chain", {"i": (0, n)})
+    t1 = st.add_tasklet("t1", ["v"], ["w"], lambda v: v * 2.0)
+    t2 = st.add_tasklet("t2", ["w"], ["o"], lambda w: w + 1.0)
+    i = sym("i")
+    st.add_edge(st.add_access("x"), None, entry, "IN_x", Memlet.simple("x"))
+    st.add_edge(entry, "OUT_x", t1, "v",
+                Memlet.simple("x", Subset.indices([i])))
+    st.add_edge(t1, "w", t2, "w", Memlet.simple("t", Subset.indices([i])))
+    st.add_edge(t2, "o", exit_, "IN_out",
+                Memlet.simple("out", Subset.indices([i])))
+    st.add_edge(exit_, "OUT_out", st.add_access("out"), None,
+                Memlet.simple("out"))
+    return s
+
+
+def test_multi_tasklet_scope_single_grid_kernel(monkeypatch):
+    """A two-tasklet chain compiles to ONE pallas_call; the intermediate
+    never materializes as an operand (only x in, out out)."""
+    calls = []
+    orig = pallas_backend.pl.pallas_call
+
+    def counting(*a, **kw):
+        calls.append((kw.get("grid"), len(kw.get("in_specs", []))))
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(pallas_backend.pl, "pallas_call", counting)
+    x = np.random.default_rng(11).standard_normal(256).astype(np.float32)
+    c = lower(_chain_sdfg()).compile("pallas", jit=False, cache=None)
+    assert c.report["grid_kernels"] == ["chain_tiled"]
+    out = np.asarray(c(x=x)["out"])
+    np.testing.assert_allclose(out, x * 2 + 1, rtol=1e-6)
+    assert calls == [((2,), 1)]  # one kernel, one input operand
+
+    oj = np.asarray(lower(_chain_sdfg()).compile("jnp", cache=None)(x=x)["out"])
+    np.testing.assert_allclose(out, oj, rtol=1e-6)
+
+
+def test_multi_tasklet_chain_with_reduction():
+    """Fused chain feeding a wcr-add scalar reduction: axpy -> mul chained
+    in-kernel, scratch-accumulated dot result."""
+    n = 512
+    s = SDFG("axpydot_fused")
+    for nm in ("x", "y", "w"):
+        s.add_array(nm, (n,), "float32")
+    s.add_scalar("r", "float32")
+    s.add_transient("z", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    entry, exit_ = st.add_map("fdot", {"i": (0, n)})
+    i = sym("i")
+    t1 = st.add_tasklet("axpy", ["x", "y"], ["z"], lambda x, y: 0.5 * x + y)
+    t2 = st.add_tasklet("mul", ["z", "w"], ["p"], lambda z, w: z * w)
+    for nm, conn, t in (("x", "x", t1), ("y", "y", t1), ("w", "w", t2)):
+        st.add_edge(st.add_access(nm), None, entry, f"IN_{nm}",
+                    Memlet.simple(nm))
+        st.add_edge(entry, f"OUT_{nm}", t, conn,
+                    Memlet.simple(nm, Subset.indices([i])))
+    st.add_edge(t1, "z", t2, "z", Memlet.simple("z", Subset.indices([i])))
+    st.add_edge(t2, "p", exit_, "IN_r", Memlet.simple("r", wcr="add"))
+    st.add_edge(exit_, "OUT_r", st.add_access("r"), None,
+                Memlet.simple("r", wcr="add"))
+    rng = np.random.default_rng(12)
+    x, y, w = (rng.standard_normal(n).astype(np.float32) for _ in range(3))
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == ["fdot_tiled"]
+    out = float(np.asarray(cp(x=x, y=y, w=w)["r"]))
+    np.testing.assert_allclose(out, np.dot(0.5 * x + y, w), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# satellite: wcr max / min through the grid path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wcr", ["max", "min"])
+def test_wcr_extrema_grid_cross_validation(wcr):
+    """Row-extrema via wcr max/min: the reduction dimension lowers to a
+    VMEM scratch running-extremum with @pl.when init/flush."""
+    M, N = 16, 24
+    s = SDFG(f"row{wcr}")
+    s.add_array("A", (M, N), "float32")
+    s.add_array("out", (M,), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    st.add_mapped_tasklet(
+        f"row{wcr}", {"i": (0, M), "j": (0, N)},
+        inputs={"a": Memlet.simple("A", Subset.indices([i, j]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]), wcr=wcr)},
+        fn=lambda a: a)
+    A = np.random.default_rng(13).standard_normal((M, N)).astype(np.float32)
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == [f"row{wcr}"]
+    op = np.asarray(cp(A=A)["out"])
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(A=A)["out"])
+    np.testing.assert_allclose(op, oj, rtol=1e-6)
+    # both backends combine with the container's prior (zero) contents
+    red = A.max(axis=1) if wcr == "max" else A.min(axis=1)
+    comb = np.maximum if wcr == "max" else np.minimum
+    np.testing.assert_allclose(op, comb(red, 0.0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("wcr", ["max", "min"])
+def test_wcr_extrema_scalar_tiled(wcr):
+    """Whole-array extremum into a scalar through a *tiled* map: the
+    intra-tile axis reduces in-block, the grid axis through scratch."""
+    n = 512
+    s = SDFG(f"all{wcr}")
+    s.add_array("x", (n,), "float32")
+    s.add_scalar("out", "float32")
+    st = s.add_state("main", is_start=True)
+    st.add_mapped_tasklet(
+        f"all{wcr}", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([sym("i")]))},
+        outputs={"o": Memlet.simple("out", wcr=wcr)},
+        fn=lambda v: v)
+    x = np.random.default_rng(14).standard_normal(n).astype(np.float32)
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == [f"all{wcr}_tiled"]
+    op = float(np.asarray(cp(x=x)["out"]))
+    oj = float(np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"]))
+    np.testing.assert_allclose(op, oj, rtol=1e-6)
+    red = x.max() if wcr == "max" else x.min()
+    comb = max if wcr == "max" else min
+    np.testing.assert_allclose(op, comb(float(red), 0.0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cost model: tiny maps stay on the vmap path
+# ---------------------------------------------------------------------------
+
+def _rows_sdfg(n, m, label="rows"):
+    s = SDFG(label)
+    s.add_array("x", (n, m), "float32")
+    s.add_array("out", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    st.add_mapped_tasklet(
+        label, {"i": (0, n)},
+        inputs={"xr": Memlet.simple("x", Subset([Range.index(sym("i")),
+                                                 Range.make(0, m)]))},
+        outputs={"o": Memlet.simple("out", Subset([Range.index(sym("i")),
+                                                   Range.make(0, m)]))},
+        fn=lambda xr: xr * 3.0)
+    return s
+
+
+def test_cost_model_skips_single_step_grid():
+    """A one-step grid is a whole-array copy: the default cost model keeps
+    it on the vmap path and records the decision."""
+    s = _rows_sdfg(1, 8, label="one")
+    x = np.random.default_rng(15).standard_normal((1, 8)).astype(np.float32)
+    c = lower(s).compile("pallas", cache=None)
+    assert c.report["grid_kernels"] == []
+    assert [lbl for lbl, _ in c.report["grid_skipped"]] == ["one"]
+    assert "min_grid_steps" in c.report["grid_skipped"][0][1]
+    np.testing.assert_allclose(np.asarray(c(x=x)["out"]), x * 3, rtol=1e-6)
+
+
+def test_cost_model_min_grid_steps_knob():
+    """The same map converts by default and skips under a raised
+    trip threshold — while still computing the right answer."""
+    from repro.pipeline import GridConversionPass, PassManager
+    x = np.random.default_rng(16).standard_normal((64, 4)).astype(np.float32)
+    c_on = lower(_rows_sdfg(64, 4)).compile("pallas", cache=None)
+    assert c_on.report["grid_kernels"] == ["rows"]
+    pm = PassManager([GridConversionPass(min_grid_steps=1000)], name="tiny")
+    c_off = lower(_rows_sdfg(64, 4)).compile("pallas", pipeline=pm,
+                                             cache=None)
+    assert c_off.report["grid_kernels"] == []
+    assert [lbl for lbl, _ in c_off.report["grid_skipped"]] == ["rows"]
+    np.testing.assert_allclose(np.asarray(c_on(x=x)["out"]),
+                               np.asarray(c_off(x=x)["out"]), rtol=1e-6)
+
+
+def test_cost_model_vmem_budget():
+    """Blocks that exceed the VMEM budget keep the scope on the vmap
+    path, with the overflow recorded in the skip reason."""
+    from repro.pipeline import GridConversionPass, PassManager
+    pm = PassManager([GridConversionPass(vmem_budget_bytes=64)], name="vmem")
+    c = lower(_rows_sdfg(64, 128)).compile("pallas", pipeline=pm, cache=None)
+    assert c.report["grid_kernels"] == []
+    (lbl, reason), = c.report["grid_skipped"]
+    assert lbl == "rows" and "VMEM" in reason
+    x = np.random.default_rng(17).standard_normal((64, 128)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(c(x=x)["out"]), x * 3, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

@@ -246,6 +246,7 @@ def test_default_pipeline_shapes():
     assert [p.name for p in pal_pm] == ["SetExpansionPreference",
                                         "PipelineFusion",
                                         "ExpandLibraryNodes",
+                                        "MapFusion",
                                         "MapTiling",
                                         "GridConversion"]
     assert jnp_pm.signature() != pal_pm.signature()
