@@ -100,14 +100,15 @@ def run(report, small: bool = False):
                   for _ in range(3))
     g_exp = np.dot((a * gx + gy).astype(np.float32), gw)
 
-    def grid_pipeline(fused: bool) -> PassManager:
+    def grid_pipeline(fused: bool, tiled: bool = True) -> PassManager:
         passes = [SetExpansionPreferencePass(("accumulate", "generic")),
                   ExpandLibraryNodesPass()]
         if fused:
             passes.append(MapFusionPass())
-        passes += [MapTilingPass(tile_size=128), GridConversionPass()]
-        return PassManager(passes,
-                           name="grid_fused" if fused else "grid_unfused")
+        if tiled:
+            passes.append(MapTilingPass(tile_size=128))
+        passes.append(GridConversionPass())
+        return PassManager(passes, name=f"grid_f{int(fused)}_t{int(tiled)}")
 
     cu = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(False))
     t_grid_unfused = _time(cu, a=a, x=gx, y=gy, w=gw, reps=3)
@@ -115,9 +116,22 @@ def run(report, small: bool = False):
     cf = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(True))
     t_grid_fused = _time(cf, a=a, x=gx, y=gy, w=gw, reps=3)
     assert len(cf.report["grid_kernels"]) == 1
+    # 1-element-block variant at a reduced size: an untiled interpret-mode
+    # grid steps once per ELEMENT, so the full gn would take minutes
+    un = max(1024, gn // 32)
+    ux, uy, uw = gx[:un], gy[:un], gw[:un]
+    cnt = lower(build(un)).compile("pallas",
+                                   pipeline=grid_pipeline(True, tiled=False))
+    t_grid_untiled = _time(cnt, a=a, x=ux, y=uy, w=uw, reps=1)
+    ct = lower(build(un)).compile("pallas", pipeline=grid_pipeline(True))
+    t_tiled_small = _time(ct, a=a, x=ux, y=uy, w=uw, reps=1)
     for c in (cu, cf):
         got = float(np.asarray(c(a=a, x=gx, y=gy, w=gw)["result"]).ravel()[0])
         assert abs(got - g_exp) < 1e-3 * abs(g_exp)
+    u_exp = np.dot((a * ux + uy).astype(np.float32), uw)
+    for c in (cnt, ct):
+        got = float(np.asarray(c(a=a, x=ux, y=uy, w=uw)["result"]).ravel()[0])
+        assert abs(got - u_exp) < 1e-3 * abs(u_exp)
 
     report("axpydot_grid_unfused_ms", t_grid_unfused * 1e3,
            f"n={gn}; kernels={cu.report['grid_kernels']}", backend="pallas")
@@ -125,3 +139,9 @@ def run(report, small: bool = False):
            f"n={gn}; 1 kernel, z in-kernel; speedup "
            f"{t_grid_unfused/t_grid_fused:.2f}x vs unfused grid",
            backend="pallas")
+    report("axpydot_grid_untiled_ms", t_grid_untiled * 1e3,
+           f"n={un}; fused but 1-element blocks; tiled speedup "
+           f"{t_grid_untiled/t_tiled_small:.2f}x at same n",
+           backend="pallas")
+    assert t_tiled_small < t_grid_untiled, \
+        "tiled grid variant must beat the 1-element-block grid variant"

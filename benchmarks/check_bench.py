@@ -1,0 +1,136 @@
+"""CI benchmark assertions over BENCH_<name>.json records.
+
+Two gates:
+
+1. **Grid conversion actually happened**: the tiled+fused grid variants
+   ran (their entries exist), their derived records carry multi-dim
+   blocks (``blocks=[s, l]`` with a lane dim >= 8), and within the same
+   run the tiled grid variant beats the 1-element-block grid variant.
+2. **No >FACTOR regression vs the committed baselines**: entries are
+   matched by name against ``--baseline`` records with the same ``small``
+   flag; overall machine-speed difference is normalized out with the
+   median current/baseline ratio (clamped to [0.5, 4]) so a uniformly
+   slower CI runner does not fail the gate while a single kernel
+   regressing does.
+
+Usage: python -m benchmarks.check_bench CUR_DIR --baseline BASE_DIR
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import statistics
+import sys
+
+MODULES = ("axpydot", "gemver", "stencil")
+REQUIRED = {
+    "gemver": ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
+    "stencil": ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
+    "axpydot": ("axpydot_grid_fused_ms", "axpydot_grid_untiled_ms"),
+}
+#: (tiled entry, 1-element-block entry) measured at the same size
+TILED_BEATS_UNTILED = (
+    ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
+    ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
+)
+#: entries whose derived record must show a multi-dim block shape
+MULTIDIM_BLOCKS = ("gemver_grid_fused_ms", "stencil_star_grid_ms")
+
+_BLOCKS_RE = re.compile(r"blocks=\[([\d, ]+)\]")
+
+
+def _load(path):
+    with open(path) as f:
+        return {e["name"]: e for e in json.load(f)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="directory with fresh BENCH_*.json")
+    ap.add_argument("--baseline", default=None,
+                    help="directory with committed BENCH_*.json baselines")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed normalized slowdown per entry")
+    ap.add_argument("--min-ms", type=float, default=5.0,
+                    help="ignore entries faster than this (noise)")
+    args = ap.parse_args()
+
+    errors = []
+    cur = {}
+    for mod in MODULES:
+        path = os.path.join(args.current, f"BENCH_{mod}.json")
+        if not os.path.exists(path):
+            errors.append(f"missing {path}: benchmark module did not run")
+            continue
+        cur[mod] = _load(path)
+
+    for mod, names in REQUIRED.items():
+        for name in names:
+            if mod in cur and name not in cur[mod]:
+                errors.append(f"{mod}: required entry {name!r} missing — "
+                              f"the tiled/untiled grid variants did not run")
+
+    for tiled, untiled in TILED_BEATS_UNTILED:
+        for mod in cur:
+            if tiled in cur[mod] and untiled in cur[mod]:
+                tv, uv = cur[mod][tiled]["value"], cur[mod][untiled]["value"]
+                if tv >= uv:
+                    errors.append(
+                        f"{tiled} ({tv:.2f} ms) does not beat "
+                        f"{untiled} ({uv:.2f} ms)")
+
+    for name in MULTIDIM_BLOCKS:
+        for mod in cur:
+            if name not in cur[mod]:
+                continue
+            dims = cur[mod][name].get("block_shape")
+            if dims is None:  # older records only carry the prose form
+                m = _BLOCKS_RE.search(cur[mod][name].get("derived", ""))
+                dims = [int(x) for x in m.group(1).split(",")] if m else None
+            if dims is None:
+                errors.append(f"{name}: no block_shape in record — "
+                              f"grid conversion produced no multi-dim blocks")
+                continue
+            if len(dims) < 2 or dims[-1] < 8:
+                errors.append(f"{name}: block shape {dims} is not a "
+                              f"multi-dim lane-aligned block")
+
+    if args.baseline:
+        pairs = []
+        for mod in cur:
+            bpath = os.path.join(args.baseline, f"BENCH_{mod}.json")
+            if not os.path.exists(bpath):
+                continue
+            base = _load(bpath)
+            for name, e in cur[mod].items():
+                b = base.get(name)
+                if (b is None or not name.endswith("_ms")
+                        or e.get("small") != b.get("small")
+                        or b["value"] < args.min_ms):
+                    continue
+                pairs.append((name, e["value"], b["value"]))
+        if pairs:
+            med = statistics.median(c / b for _, c, b in pairs)
+            norm = min(max(med, 0.5), 4.0)
+            for name, c, b in pairs:
+                if c / b > args.factor * norm:
+                    errors.append(
+                        f"{name}: {c:.2f} ms vs baseline {b:.2f} ms is a "
+                        f"{c / b:.2f}x slowdown (> {args.factor}x after "
+                        f"median normalization {norm:.2f})")
+            print(f"regression check: {len(pairs)} matched entries, "
+                  f"median ratio {med:.2f}")
+        else:
+            print("regression check: no comparable baseline entries")
+
+    for e in errors:
+        print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)
+    if not errors:
+        print("benchmark checks passed")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -137,24 +137,19 @@ def run(report, small: bool = False):
           for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
     gx_ref, gw_ref = reference(gn, gd)
 
-    def grid_pipeline(fused: bool) -> PassManager:
-        passes = [SetExpansionPreferencePass(("generic",)),
-                  ExpandLibraryNodesPass()]
-        if fused:
-            passes.append(MapFusionPass())
-        passes += [MapTilingPass(tile_size=128), GridConversionPass()]
-        return PassManager(passes,
-                           name="grid_fused" if fused else "grid_unfused")
-
-    grid_times, kernels = {}, {}
-    for name, fused in (("unfused", False), ("fused", True)):
-        c = lower(build(gn)).compile("pallas", pipeline=grid_pipeline(fused))
+    grid_times, kernels, blocks = {}, {}, {}
+    for name, fused, tiled in (("unfused", False, True),
+                               ("fused", True, True),
+                               ("untiled", True, False)):
+        c = lower(build(gn)).compile(
+            "pallas", pipeline=_grid_pipeline(fused, tiled))
         c(**gd)  # compile
         t0 = time.perf_counter()
         out = c(**gd)
         np.asarray(out["w_out"])
         grid_times[name] = time.perf_counter() - t0
         kernels[name] = c.report["grid_kernels"]
+        blocks[name] = [e["block_shape"] for e in c.report["grid_converted"]]
         np.testing.assert_allclose(np.asarray(out["x_out"]), gx_ref,
                                    rtol=5e-2, atol=5e-1)
         np.testing.assert_allclose(np.asarray(out["w_out"]), gw_ref,
@@ -164,6 +159,59 @@ def run(report, small: bool = False):
     report("gemver_grid_unfused_ms", grid_times["unfused"] * 1e3,
            f"n={gn}; kernels={kernels['unfused']}", backend="pallas")
     report("gemver_grid_fused_ms", grid_times["fused"] * 1e3,
-           f"n={gn}; ger pair fused, B1 in-kernel; speedup "
+           f"n={gn}; ger pair fused, B1 in-kernel, blocks="
+           f"{blocks['fused'][0]}; speedup "
            f"{grid_times['unfused']/grid_times['fused']:.2f}x vs unfused",
+           backend="pallas", block_shape=blocks["fused"][0])
+    report("gemver_grid_untiled_ms", grid_times["untiled"] * 1e3,
+           f"n={gn}; fused but 1-element blocks {blocks['untiled'][0]}; "
+           f"tiled speedup "
+           f"{grid_times['untiled']/grid_times['fused']:.2f}x",
            backend="pallas")
+    assert grid_times["fused"] < grid_times["untiled"], \
+        "tiled grid variant must beat the 1-element-block grid variant"
+
+
+def _grid_pipeline(fused: bool, tiled: bool = True,
+                   tile_size: int = None) -> PassManager:
+    passes = [SetExpansionPreferencePass(("generic",)),
+              ExpandLibraryNodesPass()]
+    if fused:
+        passes.append(MapFusionPass())
+    if tiled:
+        passes.append(MapTilingPass(tile_size=tile_size)
+                      if tile_size else MapTilingPass())
+    passes.append(GridConversionPass())
+    return PassManager(passes, name=f"grid_f{int(fused)}_t{int(tiled)}"
+                                    f"_{tile_size or 'auto'}")
+
+
+def calibrate(report, small: bool = False):
+    """Sweep the minor (lane) tile size for the fused grid ladder on the
+    current backend and record the measured winner — the numbers the
+    GridConversion cost model's static thresholds should be tuned to."""
+    rng = np.random.default_rng(1)
+    gn = 64 if small else GRID_N
+    gd = {k: rng.standard_normal((gn, gn) if k == "A" else gn
+                                 ).astype(np.float32)
+          for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
+    best, times = None, {}
+    for t in (8, 16, 32, 64, 128):
+        if t > gn:
+            continue
+        c = lower(build(gn)).compile(
+            "pallas", pipeline=_grid_pipeline(True, True, tile_size=t))
+        c(**gd)  # compile
+        t0 = time.perf_counter()
+        out = c(**gd)
+        np.asarray(out["w_out"])
+        times[t] = time.perf_counter() - t0
+        blk = c.report["grid_converted"][0]["block_shape"]
+        report(f"gemver_calibrate_tile{t}_ms", times[t] * 1e3,
+               f"n={gn}; fused grid, minor tile {t}, blocks {blk}",
+               backend="pallas")
+        if best is None or times[t] < times[best]:
+            best = t
+    report("gemver_calibrate_best_tile", best,
+           f"n={gn}; measured crossover of the minor-tile sweep "
+           f"{sorted(times)}", backend="pallas")

@@ -2,11 +2,16 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only axpydot,...]
                                                [--small] [--json OUT]
+                                               [--calibrate]
 Prints ``name,value,derived`` CSV lines; exits non-zero on any failure.
 ``--small`` shrinks problem sizes for CI smoke runs; ``--json OUT``
 additionally writes one machine-readable ``BENCH_<name>.json`` per module
-(entries: name, value, derived, backend) so the perf trajectory can be
-tracked across commits.
+(entries: name, value, derived, backend, small) so the perf trajectory
+can be tracked across commits. ``--calibrate`` additionally runs each
+module's tile-size sweep (``calibrate(report, small)``) on the current
+backend and records the measured per-tile times plus the winning tile —
+the measured numbers the GridConversion cost model's static thresholds
+should be recalibrated against.
 """
 from __future__ import annotations
 
@@ -25,6 +30,9 @@ def main() -> int:
                     help="reduced problem sizes (CI smoke)")
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="directory to write BENCH_<name>.json records")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="sweep tile sizes per module and record the "
+                         "measured crossover")
     args = ap.parse_args()
 
     from . import axpydot, gemver, lenet, stencil_bench
@@ -46,16 +54,19 @@ def main() -> int:
             continue
         entries = []
 
-        def report(bname, value, derived="", backend="jnp"):
+        def report(bname, value, derived="", backend="jnp", **extra):
             print(f"{bname},{value:.6g},{derived}", flush=True)
             entries.append({"name": bname, "value": float(value),
-                            "derived": derived, "backend": backend})
+                            "derived": derived, "backend": backend,
+                            "small": bool(args.small), **extra})
 
         try:
             if "small" in inspect.signature(mod.run).parameters:
                 mod.run(report, small=args.small)
             else:
                 mod.run(report)
+            if args.calibrate and hasattr(mod, "calibrate"):
+                mod.calibrate(report, small=args.small)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

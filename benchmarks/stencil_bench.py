@@ -17,7 +17,8 @@ from repro.core.sdfg import SDFG
 from repro.core.symbolic import sym
 from repro.frontends.stencil import build_stencil_program
 from repro.kernels import stencil
-from repro.pipeline import lower
+from repro.pipeline import (GridConversionPass, MapTilingPass, PassManager,
+                            lower)
 from repro.transforms import DeviceOffload, StreamingComposition
 
 # reduced domains (paper: 2^17 x 4096 and 2^15 x 128 x 128)
@@ -82,17 +83,28 @@ def run(report, small: bool = False):
            f"{_gops(a3.size, 13, td3):.2f} GOp/s CPU-interp")
 
     # generated grid path: the star stencil map as ONE partial-coverage
-    # grid kernel, against the structural jnp/vmap lowering
+    # grid kernel — multi-dim sublane x lane tiles with windowed halo
+    # reads — against the 1-element-block grid and the jnp/vmap lowering
     sn, sm = star_dom
     sa = rng.standard_normal((sn, sm)).astype(np.float32)
     cg = lower(_star_sdfg(sn, sm)).compile("pallas")
-    assert cg.report["grid_kernels"] == ["star"]
+    assert cg.report["grid_kernels"] == ["star_tiled"]
+    star_blocks = cg.report["grid_converted"][0]["block_shape"]
+    cu = lower(_star_sdfg(sn, sm)).compile(
+        "pallas", pipeline=PassManager([GridConversionPass()],
+                                       name="star_untiled"))
+    assert cu.report["grid_kernels"] == ["star"]
     cj = lower(_star_sdfg(sn, sm)).compile("jnp")
     cg(a=sa)  # compile
     t0 = time.perf_counter()
     og = cg(a=sa)
     np.asarray(og["b"])
     tg = time.perf_counter() - t0
+    cu(a=sa)
+    t0 = time.perf_counter()
+    ou = cu(a=sa)
+    np.asarray(ou["b"])
+    tu = time.perf_counter() - t0
     cj(a=sa)
     t0 = time.perf_counter()
     oj = cj(a=sa)
@@ -100,11 +112,19 @@ def run(report, small: bool = False):
     tj = time.perf_counter() - t0
     np.testing.assert_allclose(np.asarray(og["b"]), np.asarray(oj["b"]),
                                rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ou["b"]), np.asarray(oj["b"]),
+                               rtol=1e-5, atol=1e-6)
     report("stencil_star_grid_ms", tg * 1e3,
-           f"dom={star_dom}; generated pallas_call grid kernel",
+           f"dom={star_dom}; generated grid kernel, blocks={star_blocks}; "
+           f"tiled speedup {tu/tg:.2f}x vs 1-element blocks",
+           backend="pallas", block_shape=star_blocks)
+    report("stencil_star_grid_untiled_ms", tu * 1e3,
+           f"dom={star_dom}; 1-element-block grid kernel",
            backend="pallas")
     report("stencil_star_jnp_ms", tj * 1e3,
            f"dom={star_dom}; structural vmap lowering")
+    assert tg < tu, \
+        "tiled grid variant must beat the 1-element-block grid variant"
 
     # Fig.-17 two-iteration diffusion program through the full stack
     chain_dom = [128, 64] if small else [512, 256]
@@ -132,3 +152,33 @@ def run(report, small: bool = False):
     report("stencilflow_chain_ms", tc * 1e3,
            f"fused={c.report['fused_regions']}; volume {v0}->{v1} B "
            f"({v0/v1:.2f}x; intermediate b never leaves VMEM)")
+
+
+def calibrate(report, small: bool = False):
+    """Sweep the sublane (second-minor) tile of the star grid kernel on
+    the current backend; record per-tile times and the measured winner."""
+    sn, sm = (34, 34) if small else STAR_DOM
+    sa = np.random.default_rng(2).standard_normal((sn, sm)).astype(np.float32)
+    best, times = None, {}
+    for t in (2, 4, 8, 16, 32):
+        if t >= sn - 2:
+            continue
+        pm = PassManager(
+            [MapTilingPass(tile_sizes={"j": sm - 2, "i": t}),
+             GridConversionPass()], name=f"star_tile{t}")
+        c = lower(_star_sdfg(sn, sm)).compile("pallas", pipeline=pm)
+        c(a=sa)  # compile
+        t0 = time.perf_counter()
+        out = c(a=sa)
+        np.asarray(out["b"])
+        times[t] = time.perf_counter() - t0
+        blk = c.report["grid_converted"][0]["block_shape"] \
+            if c.report["grid_converted"] else None
+        report(f"stencil_calibrate_tile{t}_ms", times[t] * 1e3,
+               f"dom=({sn},{sm}); star grid, sublane tile {t}, "
+               f"blocks {blk}", backend="pallas")
+        if best is None or times[t] < times[best]:
+            best = t
+    report("stencil_calibrate_best_tile", best,
+           f"dom=({sn},{sm}); measured crossover of sublane sweep "
+           f"{sorted(times)}", backend="pallas")

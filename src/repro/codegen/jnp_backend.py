@@ -273,13 +273,33 @@ class StateLowering:
                 return True
         return False
 
+    @staticmethod
+    def _partial_tile_pairs(m):
+        """(counter, intra, tile, extent) for MapTiling'd parameter pairs
+        whose extent is not a tile multiple — the lattice points where
+        ``counter*tile + intra >= extent`` are padding and must be
+        skipped by the structural lowerings."""
+        from ..transforms.map_tiling import normalize_tiling
+        pairs = []
+        pset = set(m.params)
+        for q, info in normalize_tiling(m.annotations.get("tiling", {})).items():
+            ext, ts, ctr = info.get("extent"), info.get("tile"), \
+                info.get("counter")
+            if (q in pset and ctr in pset and ext is not None
+                    and int(ext) % int(ts)):
+                pairs.append((ctr, q, int(ts), int(ext)))
+        return pairs
+
     def _run_map_sequential(self, entry, exit_, inner, sizes, starts):
         """Trace-time loop (paper: unrolled map = replicated hardware)."""
         m = entry.map
-        idx = [0] * len(sizes)
+        partial = self._partial_tile_pairs(m)
 
         def rec(d):
             if d == len(sizes):
+                for ctr, q, ts, ext in partial:
+                    if self.symenv[ctr] * ts + self.symenv[q] >= ext:
+                        return  # padding lane of a partial final tile
                 self._exec_scope_once(entry, exit_, inner)
                 return
             for i in range(sizes[d]):
@@ -380,24 +400,59 @@ class StateLowering:
                         outs[id(e)] = v
             return tuple(outs[id(e)] for e in out_edges)
 
+        # The vmap lattice is built over *groups*: normally one group per
+        # parameter (the classic meshgrid), but a MapTiling'd pair whose
+        # extent is not a tile multiple collapses into one flat group that
+        # enumerates only the valid (counter, intra) points — the padding
+        # lanes of the partial final tile never execute, mirroring the
+        # Pallas backend's in-kernel masking.
+        partial = self._partial_tile_pairs(m)
+        pos = {p: i for i, p in enumerate(m.params)}
+        in_pair = {}
+        for ctr, q, ts, ext in partial:
+            in_pair[ctr] = in_pair[q] = (ctr, q, ts, ext)
+        groups = []  # (member params, 1-D member value arrays, size)
+        done = set()
+        for p in m.params:
+            if p in done:
+                continue
+            if p in in_pair and all(x in pos for x in in_pair[p][:2]):
+                ctr, q, ts, ext = in_pair[p]
+                flat = jnp.arange(ext)
+                groups.append(((ctr, q),
+                               (starts[pos[ctr]] + flat // ts,
+                                starts[pos[q]] + flat % ts), ext))
+                done |= {ctr, q}
+            else:
+                i = pos[p]
+                groups.append(((p,), (jnp.arange(sizes[i]) + starts[i],),
+                               sizes[i]))
+                done.add(p)
+        gsizes = [g[2] for g in groups]
+
         if sizes:
-            grids = jnp.meshgrid(*[jnp.arange(s) + st for s, st in
-                                   zip(sizes, starts)], indexing="ij")
-            flat = [g.reshape(-1) for g in grids]
-            outs = jax.vmap(body)(*flat)
-            stacked = tuple(o.reshape(tuple(sizes) + o.shape[1:])
+            mesh = jnp.meshgrid(*[jnp.arange(s) for s in gsizes],
+                                indexing="ij")
+            flat_idx = [g.reshape(-1) for g in mesh]
+            pvals = {}
+            for gi, (params, vals, _) in enumerate(groups):
+                for p, v in zip(params, vals):
+                    pvals[p] = v[flat_idx[gi]]
+            outs = jax.vmap(body)(*[pvals[p] for p in m.params])
+            stacked = tuple(o.reshape(tuple(gsizes) + o.shape[1:])
                             for o in outs)
         else:
             stacked = body()
 
         static = self._static_syms()
+        group_params = [set(g[0]) for g in groups]
         for e, val in zip(out_edges, stacked):
             name = e.memlet.data
             self.ensure_value(name)
             subset = e.memlet.subset
             if subset is None:
                 # whole-container write from a mapped tasklet => reduction
-                axes = tuple(range(len(sizes)))
+                axes = tuple(range(len(groups)))
                 if e.memlet.wcr in WCR_MODES:
                     self.env[name] = wcr_combine(
                         e.memlet.wcr, self.env[name],
@@ -409,25 +464,28 @@ class StateLowering:
             used_params = set()
             for r in subset:
                 used_params |= (r.start.free_symbols & set(m.params))
-            unused_axes = tuple(i for i, p in enumerate(m.params)
-                                if p not in used_params)
+            unused_axes = tuple(gi for gi, ps in enumerate(group_params)
+                                if not (ps & used_params))
             if e.memlet.wcr in WCR_MODES and unused_axes:
                 val = wcr_reduce(e.memlet.wcr, val, unused_axes)
-                kept = [i for i in range(len(m.params)) if i not in unused_axes]
+                kept = [gi for gi in range(len(groups))
+                        if gi not in unused_axes]
             else:
-                kept = list(range(len(m.params)))
+                kept = list(range(len(groups)))
             if not used_params:
                 # scalar target
                 out_memlet = e.memlet
                 self.env[name] = write_memlet(self.env[name], out_memlet, val,
                                               static)
                 continue
-            # build index arrays per dim over the kept param grid
+            # build index arrays per dim over the kept group grid
             kept_grids = jnp.meshgrid(
-                *[jnp.arange(sizes[i]) + starts[i] for i in kept],
-                indexing="ij")
+                *[jnp.arange(gsizes[gi]) for gi in kept], indexing="ij")
             kept_env = dict(static)
-            kept_env.update({m.params[i]: g for i, g in zip(kept, kept_grids)})
+            for ax, gi in enumerate(kept):
+                params, vals, _ = groups[gi]
+                for p, v in zip(params, vals):
+                    kept_env[p] = v[kept_grids[ax]]
             idx_arrays = []
             is_slice = False
             for r in subset:

@@ -13,7 +13,12 @@ kernels from the dataflow IR:
     :func:`core.memlet.factor_subset` into ``block_shape`` + an
     ``index_map`` over grid coordinates — exactly a Pallas ``BlockSpec``.
     Intra-tile parameters (MapTiling annotations) widen index dimensions
-    into VMEM-resident blocks;
+    into VMEM-resident blocks — multi-dimensional after multi-parameter
+    tiling, e.g. an (8, 128) sublane×lane tile. Block-misaligned affine
+    accesses (stencil halo offsets) degrade to element-addressed
+    *windows*: the whole container dimension rides in VMEM and the kernel
+    body slices the window per grid step. Operands whose blocks coincide
+    are deduplicated into one VMEM buffer;
   * write-conflict-resolution ``add``/``max``/``min`` memlets whose index
     map ignores some grid dimensions become VMEM scratch accumulators
     (zeros / running extrema) with ``@pl.when(k == 0)`` init and a flush
@@ -25,14 +30,21 @@ kernels from the dataflow IR:
     materialize — they thread through the kernel body as local values,
     so a fused producer->consumer map pair is one launch with zero HBM
     intermediates;
-  * tasklet bodies are applied per-element via nested ``vmap`` over the
-    intra-tile parameters, so scalar tasklets stay scalar semantics-wise
-    while executing on whole blocks.
+  * tasklet bodies whose operands are all scalar-per-iteration apply
+    **once to the whole block** (array-level ops on the (8, 128) tile) —
+    an abstract-shape trace (``jax.eval_shape``) verifies the body is
+    elementwise (results broadcast to the tile shape) before the fast
+    path is taken; genuinely scalar-indexed or slice-consuming bodies
+    keep the nested per-element ``vmap`` over the intra-tile parameters;
+  * partial final tiles (ceil-division MapTiling of non-divisible
+    extents) are masked: Pallas itself drops the out-of-bounds region of
+    boundary blocks, and reduced lanes are masked to the wcr identity
+    in-kernel before accumulation.
 
-Maps whose memlets are non-affine, dynamic, strided, or misaligned are
-left un-annotated by ``GridConversionPass`` and fall back to the shared
-structural-interpreter lowering — mirroring the paper's fallback to
-generic expansions.
+Maps whose memlets are non-affine, dynamic, strided, or misaligned beyond
+what windows express are left un-annotated by ``GridConversionPass`` and
+fall back to the shared structural-interpreter lowering — mirroring the
+paper's fallback to generic expansions.
 """
 from __future__ import annotations
 
@@ -47,9 +59,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..core.dtypes import ScheduleType
 from ..core.memlet import (BlockFactorError, SubsetFactorization,
-                           factor_subset)
+                           eval_affine, factor_subset)
 from ..core.sdfg import (MapEntry, MapExit, Scalar, SDFG, State, Stream,
                          Tasklet)
+from ..transforms.map_tiling import normalize_tiling
 from .common import (WCR_MODES, _apply_wcr, wcr_combine, wcr_identity,
                      wcr_reduce)
 from .jnp_backend import StateLowering, build_callable as _build_callable
@@ -80,11 +93,34 @@ class GridSpec:
     inputs: Tuple[EdgeSpec, ...]
     outputs: Tuple[EdgeSpec, ...]
     tasklet_labels: Tuple[str, ...] = ()       # topo-ordered chain labels
+    #: (intra param, counter param, tile, extent) for non-divisible tiles
+    partial_tiles: Tuple[Tuple[str, str, int, int], ...] = ()
 
 
 def _scalar_fact() -> SubsetFactorization:
     from ..core.symbolic import Expr
     return SubsetFactorization((1,), (Expr.const(0),), (0,))
+
+
+def operand_key(es: EdgeSpec) -> Tuple:
+    """Dedup key for input operands: everything BlockSpec-relevant.
+    Windows are per-edge (sliced in-kernel) and deliberately excluded, so
+    a stencil's five halo reads of one container share one VMEM buffer
+    when their blocks coincide."""
+    return (es.data, es.scalar, es.fact.block_shape,
+            tuple(repr(e) for e in es.fact.index_exprs),
+            es.fact.squeeze_dims, es.fact.param_dims)
+
+
+def unique_operands(spec: GridSpec) -> List[EdgeSpec]:
+    """Representative EdgeSpec per deduplicated input operand."""
+    seen, reps = {}, []
+    for es in spec.inputs:
+        k = operand_key(es)
+        if k not in seen:
+            seen[k] = len(reps)
+            reps.append(es)
+    return reps
 
 
 def _tasklet_chain(state: State, entry: MapEntry, scopes) -> List[Tasklet]:
@@ -100,13 +136,47 @@ def _tasklet_chain(state: State, entry: MapEntry, scopes) -> List[Tasklet]:
 
 
 def _output_box(fact: SubsetFactorization, grid: Dict[str, Tuple[int, int]],
-                label: str) -> Tuple[Tuple[int, int], ...]:
-    """Element-range box written by an output across the whole grid; also
-    verifies full coverage inside the box (each dim's block index must be a
-    constant or ``param + const`` with a param used by no other dim)."""
+                label: str, dim_sizes: Tuple[int, ...],
+                valid_extents: Dict[str, int]) -> Tuple[Tuple[int, int], ...]:
+    """Element-range box written by an output across the whole grid,
+    clamped to the container and to the *valid* extent of partial tiles;
+    also verifies full coverage inside the box (each dim's block index
+    must be a constant or ``param + const`` with a param used by no other
+    dim; a window must step by exactly its length)."""
     box = []
     seen_params = set()
-    for d, (e, bs) in enumerate(zip(fact.index_exprs, fact.block_shape)):
+    win = {d: (e, ln) for d, e, ln in fact.windows}
+    pd_inv = {d: q for q, d in fact.param_dims}
+    for d, bs in enumerate(fact.block_shape):
+        dim_sz = dim_sizes[d] if d < len(dim_sizes) else bs
+        if d in win:
+            e, ln = win[d]
+            c0, syms = 0, {}
+            for mono, c in e.terms.items():
+                if mono == ():
+                    c0 = int(c)
+                else:
+                    syms[mono[0][0]] = int(c)
+            if not syms:
+                box.append((c0, min(c0 + ln, dim_sz)))
+                continue
+            if len(syms) > 1 or set(syms) & seen_params:
+                raise BlockFactorError(
+                    f"output of {label!r}: window dim {d} start {e} not "
+                    f"contiguously covered across the grid")
+            (g, cg), = syms.items()
+            if cg != ln:
+                raise BlockFactorError(
+                    f"output of {label!r}: window dim {d} steps by {cg} "
+                    f"but spans {ln} elements")
+            seen_params.add(g)
+            n = grid[g][1]
+            hi = c0 + (n - 1) * ln + ln
+            if pd_inv.get(d) in valid_extents:
+                hi = min(hi, c0 + valid_extents[pd_inv[d]])
+            box.append((c0, min(hi, dim_sz)))
+            continue
+        e = fact.index_exprs[d]
         c0 = 0
         syms = {}
         for mono, c in e.terms.items():
@@ -115,7 +185,8 @@ def _output_box(fact: SubsetFactorization, grid: Dict[str, Tuple[int, int]],
             else:
                 syms[mono[0][0]] = c
         if not syms:
-            box.append((c0 * bs, c0 * bs + bs))
+            span = valid_extents.get(pd_inv.get(d), bs)
+            box.append((c0 * bs, min(c0 * bs + span, dim_sz)))
             continue
         if len(syms) > 1 or set(syms) & seen_params:
             raise BlockFactorError(
@@ -127,7 +198,10 @@ def _output_box(fact: SubsetFactorization, grid: Dict[str, Tuple[int, int]],
                 f"output of {label!r}: dim {d} strides blocks by {cg}")
         seen_params.add(g)
         n = grid[g][1]
-        box.append((c0 * bs, (c0 + n - 1) * bs + bs))
+        hi = (c0 + n - 1) * bs + bs
+        if pd_inv.get(d) in valid_extents:
+            hi = min(hi, c0 * bs + valid_extents[pd_inv[d]])
+        box.append((c0 * bs, min(hi, dim_sz)))
     return tuple(box)
 
 
@@ -146,9 +220,11 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
     chain_index = {t: i for i, t in enumerate(chain)}
     env = dict(sdfg.symbol_values) if env is None else dict(env)
 
-    tiling = dict(m.annotations.get("tiling", {}))
+    tiling = normalize_tiling(m.annotations.get("tiling", {}))
     grid_params: Dict[str, Tuple[int, int]] = {}
     block_params: Dict[str, int] = {}
+    partials: List[Tuple[str, str, int, int]] = []
+    valid_extents: Dict[str, int] = {}
     for p, r in zip(m.params, m.ranges):
         try:
             start, size = r.start.subs(env).as_int(), r.size.subs(env).as_int()
@@ -158,15 +234,29 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         if size < 1:
             raise BlockFactorError(f"map {m.label!r}: empty range for {p}")
         if p in tiling and size > 1:
-            if start != 0 or size != int(tiling[p]):
+            info = tiling[p]
+            if start != 0 or size != int(info["tile"]):
                 raise BlockFactorError(
                     f"map {m.label!r}: tile param {p} range [{start}, "
-                    f"+{size}) disagrees with tiling annotation {tiling[p]}")
+                    f"+{size}) disagrees with tiling annotation "
+                    f"{info['tile']}")
             block_params[p] = size
+            ext = info.get("extent")
+            if ext is not None:
+                valid_extents[p] = int(ext)
+                if int(ext) % size:
+                    ctr = info.get("counter")
+                    if ctr is None or ctr not in m.params:
+                        raise BlockFactorError(
+                            f"map {m.label!r}: partial tile {p} has no "
+                            f"counter to mask against")
+                    partials.append((p, ctr, size, int(ext)))
         else:
             grid_params[p] = (start, size)
     if not grid_params:
         raise BlockFactorError(f"map {m.label!r}: no grid parameters")
+    partial_qs = {q for q, _, _, _ in partials}
+    partial_counters = {c for _, c, _, _ in partials}
 
     def _factor(memlet):
         if memlet.dynamic:
@@ -177,9 +267,25 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         if isinstance(desc, Stream):
             raise BlockFactorError(f"stream operand {memlet.data!r}")
         if isinstance(desc, Scalar) or not getattr(desc, "shape", ()):
-            return _scalar_fact(), True
-        return factor_subset(memlet.subset, desc.shape, grid_params,
-                             block_params, env), False
+            return _scalar_fact(), True, (1,)
+        fact = factor_subset(memlet.subset, desc.shape, grid_params,
+                             block_params, env, allow_windows=True)
+        from ..core.symbolic import Expr
+        dim_sizes = tuple(int(Expr.wrap(s).evaluate(env))
+                          for s in desc.shape)
+        # a window whose start depends on a partial tile's counter would
+        # clamp-shift at the boundary block: fall back instead
+        for d, expr, ln in fact.windows:
+            if expr.free_symbols & partial_counters:
+                raise BlockFactorError(
+                    f"window on {memlet.data!r} dim {d} rides the partial "
+                    f"tile counter {sorted(expr.free_symbols & partial_counters)}")
+            pdq = {dd: q for q, dd in fact.param_dims}.get(d)
+            if pdq in partial_qs:
+                raise BlockFactorError(
+                    f"window on {memlet.data!r} dim {d} spans partial "
+                    f"tile param {pdq}")
+        return fact, False, tuple(dim_sizes)
 
     inputs = []
     out_edge_list = []  # (chain index, edge)
@@ -194,7 +300,7 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                         f"map {m.label!r}: wcr on in-kernel intermediate "
                         f"{e.memlet.data!r}")
                 continue
-            fact, scalar = _factor(e.memlet)
+            fact, scalar, _ = _factor(e.memlet)
             inputs.append(EdgeSpec(e.dst_conn, e.memlet.data, fact, scalar,
                                    node=ti))
         for e in state.out_edges(t):
@@ -216,11 +322,23 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         if e.memlet.wcr is not None and e.memlet.wcr not in WCR_MODES:
             raise BlockFactorError(
                 f"map {m.label!r}: wcr {e.memlet.wcr!r} unsupported")
-        fact, scalar = _factor(e.memlet)
-        box = _output_box(fact, grid_params, m.label)
+        fact, scalar, dim_sizes = _factor(e.memlet)
+        box = _output_box(fact, grid_params, m.label, dim_sizes,
+                          valid_extents)
         used = set()
         for ex in fact.index_exprs:
             used |= ex.free_symbols
+        for _, wexpr, _ in fact.windows:
+            used |= wexpr.free_symbols
+        if e.memlet.wcr is None:
+            # a partial tile lane absent from a plain output would make the
+            # garbage lane the "last write": fall back
+            pd = dict(fact.param_dims)
+            for q in partial_qs:
+                if q not in pd:
+                    raise BlockFactorError(
+                        f"map {m.label!r}: partial tile param {q} absent "
+                        f"from plain output {e.memlet.data!r}")
         for p in m.params:
             if p in used and p in grid_params and p not in used_any:
                 used_any.append(p)
@@ -233,6 +351,10 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
     outputs = []
     for ti, e, fact, scalar, box, used in outs_raw:
         reduction = tuple(p for p in order if p not in used)
+        if reduction and fact.windows:
+            raise BlockFactorError(
+                f"map {m.label!r}: windowed output {e.memlet.data!r} "
+                f"cannot host a scratch reduction")
         # every reduction dim must iterate inside every used dim
         max_used = max((order.index(p) for p in order if p in used),
                        default=-1)
@@ -249,9 +371,11 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
     return GridSpec(
         kernel_name=m.label,
         grid=tuple((p, grid_params[p][1]) for p in order),
-        block_params=tuple(sorted(block_params.items())),
+        block_params=tuple((p, block_params[p]) for p in m.params
+                           if p in block_params),
         inputs=tuple(inputs), outputs=tuple(outputs),
-        tasklet_labels=tuple(t.label for t in chain))
+        tasklet_labels=tuple(t.label for t in chain),
+        partial_tiles=tuple(partials))
 
 
 # ---------------------------------------------------------------------------
@@ -290,41 +414,11 @@ class PallasStateLowering(StateLowering):
         return True
 
     # ------------------------------------------------------------------
-    def _emit_grid_kernel(self, entry: MapEntry, chain: List[Tasklet],
-                          spec: GridSpec):
-        interpret = self.sdfg.metadata.get("pallas_interpret", True)
-        grid_names = [p for p, _ in spec.grid]
-        grid_sizes = tuple(n for _, n in spec.grid)
-        block_order = [q for q, _ in spec.block_params]
+    def _chain_runner(self, chain: List[Tasklet], spec: GridSpec):
+        """Build ``chain_call(opvals) -> results`` running the topo-ordered
+        tasklet chain with container operands from ``opvals`` (keyed by
+        input-edge index) and tasklet->tasklet values as locals."""
         chain_index = {t: i for i, t in enumerate(chain)}
-
-        in_vals = []
-        for es in spec.inputs:
-            v = jnp.asarray(self.ensure_value(es.data))
-            if es.scalar:
-                v = jnp.reshape(v, (1,))
-            in_vals.append(v)
-        in_specs = [pl.BlockSpec(es.fact.block_shape,
-                                 es.fact.index_map(grid_names))
-                    for es in spec.inputs]
-
-        prev_vals, out_specs, out_shapes = [], [], []
-        scratch_shapes, scratch_index = [], {}
-        for oi, es in enumerate(spec.outputs):
-            pv = jnp.asarray(self.ensure_value(es.data))
-            if es.scalar:
-                pv = jnp.reshape(pv, (1,))
-            prev_vals.append(pv)
-            out_specs.append(pl.BlockSpec(es.fact.block_shape,
-                                          es.fact.index_map(grid_names)))
-            out_shapes.append(jax.ShapeDtypeStruct(pv.shape, pv.dtype))
-            if es.wcr in WCR_MODES and es.reduction:
-                scratch_index[oi] = len(scratch_shapes)
-                scratch_shapes.append(
-                    pltpu.VMEM(es.fact.block_shape, pv.dtype))
-
-        # per-tasklet wiring: container operands (spec), in-kernel locals
-        # (tasklet->tasklet edges), and result slots (spec outputs)
         int_in: List[List[Tuple[str, Tuple[int, str]]]] = []
         out_binds: List[List[Tuple[str, str, object]]] = []
         for ti, t in enumerate(chain):
@@ -342,10 +436,9 @@ class PallasStateLowering(StateLowering):
                 if e.dst in chain_index:
                     out_binds[ti].append((e.src_conn, "local",
                                           (ti, e.src_conn)))
-
         fns = [t.fn for t in chain]
         decl_outputs = [list(getattr(t, "outputs", ())) for t in chain]
-        n_in, n_out = len(spec.inputs), len(spec.outputs)
+        n_out = len(spec.outputs)
 
         def chain_call(opvals):
             local = {}
@@ -371,15 +464,134 @@ class PallasStateLowering(StateLowering):
                         results[ref] = r[conn]
             return tuple(results)
 
-        def kernel(*refs):
-            ins = refs[:n_in]
-            outs = refs[n_in:n_in + n_out]
-            scratch = refs[n_in + n_out:]
-            ids = [pl.program_id(k) for k in range(len(grid_names))]
+        return chain_call
 
+    def _whole_block_eligible(self, spec: GridSpec, chain_call,
+                              chain: List[Tasklet]) -> bool:
+        """True when every operand is scalar-per-iteration (all non-tile
+        effective dims are size 1) AND the chain is verifiably
+        elementwise: an abstract-shape trace confirms every result
+        broadcasts to the tile shape, and a concrete probe on random
+        block data checks the whole-block application against the
+        per-element (nested vmap) semantics — a shape trace alone cannot
+        reject bodies like ``lambda a: jnp.sum(a)`` whose scalar result
+        still broadcasts. Slice-consuming, shape-changing, or
+        value-diverging bodies keep the per-element nested vmap."""
+        import numpy as np
+        if not spec.block_params:
+            return False
+        if not all(getattr(t, "side_effect_free", True) for t in chain):
+            return False
+        block_order = [q for q, _ in spec.block_params]
+        bp = dict(spec.block_params)
+        tile_shape = tuple(n for _, n in spec.block_params)
+        for es in list(spec.inputs) + list(spec.outputs):
+            pdims = set(dict(es.fact.param_dims).values())
+            for d, n in enumerate(es.fact.effective_shape()):
+                if n != 1 and d not in pdims:
+                    return False
+        rng = np.random.default_rng(2025)
+        padded, unpadded = {}, {}
+        for i, es in enumerate(spec.inputs):
+            pd = dict(es.fact.param_dims)
+            present = tuple(bp[q] for q in block_order if q in pd)
+            desc = self.sdfg.arrays.get(es.data)
+            dt = np.dtype(desc.dtype.np_dtype if desc is not None
+                          else np.float32)
+            if np.issubdtype(dt, np.inexact):
+                base = rng.standard_normal(present).astype(dt)
+            elif dt == np.bool_:
+                base = rng.integers(0, 2, present).astype(dt)
+            else:
+                base = rng.integers(1, 8, present).astype(dt)
+            unpadded[i] = jnp.asarray(base)
+            padded[i] = jnp.reshape(
+                unpadded[i],
+                tuple(bp[q] if q in pd else 1 for q in block_order))
+        try:
+            results = jax.eval_shape(chain_call, padded)
+            for r in results:
+                if jnp.broadcast_shapes(tuple(r.shape),
+                                        tile_shape) != tile_shape:
+                    return False
+            # the emit may be running under an outer jit trace, where ops
+            # on concrete arrays are staged as tracers; the probe needs
+            # real values at trace time
+            with jax.ensure_compile_time_eval():
+                whole = [jnp.broadcast_to(jnp.asarray(r), tile_shape)
+                         for r in chain_call(padded)]
+                f = chain_call
+                for q in reversed(block_order):
+                    axes = {i: (0 if q in dict(es.fact.param_dims)
+                                else None)
+                            for i, es in enumerate(spec.inputs)}
+                    f = jax.vmap(f, in_axes=(axes,), out_axes=0)
+                ref = [jnp.broadcast_to(jnp.asarray(r), tile_shape)
+                       for r in f(unpadded)]
+                return all(
+                    np.allclose(np.asarray(w), np.asarray(r), rtol=1e-5,
+                                atol=1e-6, equal_nan=True)
+                    for w, r in zip(whole, ref))
+        except Exception:
+            return False
+
+    # ------------------------------------------------------------------
+    def _emit_grid_kernel(self, entry: MapEntry, chain: List[Tasklet],
+                          spec: GridSpec):
+        interpret = self.sdfg.metadata.get("pallas_interpret", True)
+        grid_names = [p for p, _ in spec.grid]
+        grid_sizes = tuple(n for _, n in spec.grid)
+        block_order = [q for q, _ in spec.block_params]
+        bp = dict(spec.block_params)
+        tile_shape = tuple(n for _, n in spec.block_params)
+
+        op_reps = unique_operands(spec)
+        op_index = {operand_key(es): i for i, es in enumerate(op_reps)}
+        op_of_edge = [op_index[operand_key(es)] for es in spec.inputs]
+
+        in_vals = []
+        for es in op_reps:
+            v = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                v = jnp.reshape(v, (1,))
+            in_vals.append(v)
+        in_specs = [pl.BlockSpec(es.fact.block_shape,
+                                 es.fact.index_map(grid_names))
+                    for es in op_reps]
+
+        prev_vals, out_specs, out_shapes = [], [], []
+        scratch_shapes, scratch_index = [], {}
+        for oi, es in enumerate(spec.outputs):
+            pv = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                pv = jnp.reshape(pv, (1,))
+            prev_vals.append(pv)
+            out_specs.append(pl.BlockSpec(es.fact.block_shape,
+                                          es.fact.index_map(grid_names)))
+            out_shapes.append(jax.ShapeDtypeStruct(pv.shape, pv.dtype))
+            if es.wcr in WCR_MODES and es.reduction:
+                scratch_index[oi] = len(scratch_shapes)
+                scratch_shapes.append(
+                    pltpu.VMEM(es.fact.block_shape, pv.dtype))
+
+        chain_call = self._chain_runner(chain, spec)
+        whole_block = self._whole_block_eligible(spec, chain_call, chain)
+        n_ops, n_out = len(op_reps), len(spec.outputs)
+
+        def kernel(*refs):
+            ins = refs[:n_ops]
+            outs = refs[n_ops:n_ops + n_out]
+            scratch = refs[n_ops + n_out:]
+            ids = [pl.program_id(k) for k in range(len(grid_names))]
+            id_env = dict(zip(grid_names, ids))
+
+            raw = [ref[...] for ref in ins]
             opvals = {}
-            for i, (es, ref) in enumerate(zip(spec.inputs, ins)):
-                v = ref[...]
+            for i, es in enumerate(spec.inputs):
+                v = raw[op_of_edge[i]]
+                for d, expr, ln in es.fact.windows:
+                    v = jax.lax.dynamic_slice_in_dim(
+                        v, eval_affine(expr, id_env), ln, axis=d)
                 if es.fact.squeeze_dims:
                     v = jnp.squeeze(v, axis=es.fact.squeeze_dims)
                 pd = dict(es.fact.param_dims)
@@ -390,7 +602,18 @@ class PallasStateLowering(StateLowering):
                     v = jnp.moveaxis(v, src, list(range(len(src))))
                 opvals[i] = v
 
-            if block_order:
+            if whole_block:
+                # one array-level application over the whole tile: pad
+                # every operand to rank len(block_order) (size-1 axes for
+                # absent tile params) and let broadcasting do the rest
+                bvals = {}
+                for i, es in enumerate(spec.inputs):
+                    pd = dict(es.fact.param_dims)
+                    shape = tuple(bp[q] if q in pd else 1
+                                  for q in block_order)
+                    bvals[i] = jnp.reshape(opvals[i], shape)
+                results = chain_call(bvals)
+            elif block_order:
                 f = chain_call
                 for q in reversed(block_order):
                     axes = {i: (0 if q in dict(es.fact.param_dims) else None)
@@ -402,8 +625,30 @@ class PallasStateLowering(StateLowering):
 
             for oi, (es, oref) in enumerate(zip(spec.outputs, outs)):
                 val = jnp.asarray(results[oi])
+                if whole_block:
+                    val = jnp.broadcast_to(val, tile_shape)
+                if es.wcr in WCR_MODES and spec.partial_tiles:
+                    # mask reduced padding lanes to the identity; lanes
+                    # present in the output land in the block's OOB region
+                    # and are dropped by Pallas itself
+                    pd = dict(es.fact.param_dims)
+                    for q, counter, ts, ext in spec.partial_tiles:
+                        if q in pd:
+                            continue
+                        ax = block_order.index(q)
+                        lane = jax.lax.broadcasted_iota(
+                            jnp.int32, jnp.shape(val), ax)
+                        gidx = ids[grid_names.index(counter)] * ts + lane
+                        val = jnp.where(
+                            gidx < ext, val,
+                            wcr_identity(es.wcr, jnp.asarray(val).dtype))
                 val = self._assemble_block(val, es, block_order)
-                if es.wcr in WCR_MODES and es.reduction:
+                if es.fact.windows:
+                    idx = [slice(None)] * len(es.fact.block_shape)
+                    for d, expr, ln in es.fact.windows:
+                        idx[d] = pl.ds(eval_affine(expr, id_env), ln)
+                    oref[tuple(idx)] = val.astype(oref.dtype)
+                elif es.wcr in WCR_MODES and es.reduction:
                     acc = scratch[scratch_index[oi]]
                     red_pos = [grid_names.index(p) for p in es.reduction]
                     first = _conds(ids, red_pos, grid_sizes, at_end=False)
@@ -451,10 +696,11 @@ class PallasStateLowering(StateLowering):
 
     @staticmethod
     def _assemble_block(val, es: EdgeSpec, block_order: List[str]):
-        """Rearrange a (vmapped) tasklet result — leading axes one per
-        intra-tile param, trailing axes the tasklet's own result dims —
-        into the output's block shape."""
+        """Rearrange a whole-block or (vmapped) tasklet result — leading
+        axes one per intra-tile param, trailing axes the tasklet's own
+        result dims — into the output's effective block shape."""
         pd = dict(es.fact.param_dims)
+        eff = es.fact.effective_shape()
         absent = tuple(i for i, q in enumerate(block_order) if q not in pd)
         if absent:
             if es.wcr in WCR_MODES:  # intra-block reduction
@@ -466,14 +712,14 @@ class PallasStateLowering(StateLowering):
         present = [q for q in block_order if q in pd]
         nlead = len(present)
         trailing = list(range(nlead, jnp.ndim(val)))
-        slice_dims = [d for d in range(len(es.fact.block_shape))
-                      if d not in pd.values() and es.fact.block_shape[d] > 1]
+        slice_dims = [d for d in range(len(eff))
+                      if d not in pd.values() and eff[d] > 1]
         if len(trailing) == len(slice_dims) and (present or trailing):
             src_of = {pd[q]: i for i, q in enumerate(present)}
             src_of.update({d: t for d, t in zip(slice_dims, trailing)})
             perm = [src_of[d] for d in sorted(src_of)]
             val = jnp.transpose(val, perm)
-        return jnp.reshape(val, es.fact.block_shape)
+        return jnp.reshape(val, eff)
 
 
 def build_callable(sdfg: SDFG):

@@ -186,11 +186,18 @@ class SubsetFactorization:
     expression over 0-based grid parameters; ``squeeze_dims`` are the
     size-1 index dimensions ``read_memlet`` squeezes; ``param_dims`` maps
     each intra-block (tile) parameter to the container dimension it spans.
+
+    ``windows`` handles block-*misaligned* affine accesses (stencil halo
+    offsets): a windowed dimension moves the whole container extent per
+    grid step (``block_shape[d]`` = container dim, block coordinate 0) and
+    the kernel body slices an element-addressed window out of it in-VMEM —
+    each entry is ``(dim, element-start Expr over grid params, length)``.
     """
     block_shape: Tuple[int, ...]
     index_exprs: Tuple[Expr, ...]
     squeeze_dims: Tuple[int, ...]
     param_dims: Tuple[Tuple[str, int], ...] = ()
+    windows: Tuple[Tuple[int, Expr, int], ...] = ()
 
     def index_map(self, param_order: Sequence[str]):
         """Build ``f(*grid_ids) -> block coords`` for a Pallas BlockSpec."""
@@ -203,11 +210,20 @@ class SubsetFactorization:
 
         return f
 
+    def effective_shape(self) -> Tuple[int, ...]:
+        """Shape of the value the kernel body sees: the block shape with
+        windowed dimensions narrowed to their window length."""
+        shp = list(self.block_shape)
+        for d, _, ln in self.windows:
+            shp[d] = ln
+        return tuple(shp)
+
 
 def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
                   grid_params: Mapping[str, Tuple[int, int]],
                   block_params: Mapping[str, int],
-                  env: Mapping[str, int]) -> SubsetFactorization:
+                  env: Mapping[str, int],
+                  allow_windows: bool = False) -> SubsetFactorization:
     """Factor ``subset`` into ``(block_shape, index_map)`` form.
 
     ``grid_params`` maps each grid parameter to its ``(range_start, size)``
@@ -217,6 +233,12 @@ def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
     block of that extent. ``env`` binds the remaining *static* symbols.
     Raises :class:`BlockFactorError` when the subset is non-affine, refers
     to unknown (dynamic) symbols, or its offsets don't align to the block.
+
+    With ``allow_windows``, a block-misaligned dimension (a stencil halo
+    offset, a non-block-multiple grid stride) degrades to a *window*
+    instead of raising: the BlockSpec moves the whole container dimension
+    and the factorization records an element-addressed window the kernel
+    body slices per grid step.
     """
     env = dict(env)
     shape_sizes = []
@@ -236,6 +258,7 @@ def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
               if st != 0}
     block_shape, exprs, squeeze = [], [], []
     param_dims: Dict[str, int] = {}
+    windows = []
     for d, r in enumerate(subset):
         ctx = f"dim {d} of {subset}"
         step = r.step.subs(env)
@@ -253,6 +276,7 @@ def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
         if unknown:
             raise BlockFactorError(f"unbound symbols {sorted(unknown)} in {ctx}")
         bsyms = sorted(s for s in coeffs if s in block_params)
+        q = None
         if bsyms:
             if len(bsyms) > 1:
                 raise BlockFactorError(
@@ -271,6 +295,18 @@ def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
             bs = sz
         if bs <= 0:
             raise BlockFactorError(f"empty block in {ctx}")
+        misaligned = bool(c0 % bs) or any(
+            cg % bs for g, cg in coeffs.items() if g not in block_params)
+        if misaligned and allow_windows and bs > 1:
+            # whole container dimension per step; element-addressed window
+            start_expr = Expr.const(c0)
+            for g, cg in coeffs.items():
+                if g not in block_params:
+                    start_expr = start_expr + Expr.sym(g) * cg
+            block_shape.append(shape_sizes[d])
+            exprs.append(Expr.const(0))
+            windows.append((d, start_expr, bs))
+            continue
         if c0 % bs:
             raise BlockFactorError(
                 f"offset {c0} not aligned to block {bs} ({ctx})")
@@ -289,4 +325,5 @@ def factor_subset(subset: Optional[Subset], shape: Sequence[ExprLike],
             squeeze.append(d)
     return SubsetFactorization(tuple(block_shape), tuple(exprs),
                                tuple(squeeze),
-                               tuple(sorted(param_dims.items())))
+                               tuple(sorted(param_dims.items())),
+                               tuple(windows))

@@ -238,8 +238,10 @@ class GridConversionPass(Pass):
     # -- cost model -----------------------------------------------------
     def estimate(self, spec, sdfg: SDFG) -> Dict[str, int]:
         """Static cost estimate for a derived grid spec: total grid steps,
-        VMEM bytes pinned per step (in/out blocks double-buffered by the
-        Pallas pipeline + scratch accumulators), and chain length."""
+        VMEM bytes pinned per step (deduplicated in/out blocks
+        double-buffered by the Pallas pipeline + scratch accumulators),
+        bytes moved per step, the real block shape, and chain length."""
+        from ..codegen.pallas_backend import unique_operands
         steps = 1
         for _, n in spec.grid:
             steps *= n
@@ -250,14 +252,20 @@ class GridConversionPass(Pass):
                 block *= b
             return block
 
-        vmem = 0
-        for es in spec.inputs:
+        vmem = bytes_per_step = 0
+        for es in unique_operands(spec):
             vmem += 2 * block_bytes(es)   # HBM->VMEM double buffering
+            bytes_per_step += block_bytes(es)
         for es in spec.outputs:
             vmem += 2 * block_bytes(es)
+            bytes_per_step += block_bytes(es)
             if es.wcr and es.reduction:
                 vmem += block_bytes(es)   # scratch accumulator
+        block_shape = (list(spec.outputs[0].fact.effective_shape())
+                       if spec.outputs else [])
         return {"grid_steps": steps, "vmem_bytes": vmem,
+                "bytes_per_step": bytes_per_step,
+                "block_shape": block_shape,
                 "tasklets": max(1, len(spec.tasklet_labels))}
 
     def skip_reason(self, est: Dict[str, int]) -> Optional[str]:
@@ -288,7 +296,7 @@ class GridConversionPass(Pass):
         env = {k: v for k, v in sdfg.symbol_values.items()
                if k not in mutated}
 
-        converted, skipped, fallbacks = [], [], []
+        converted, skipped, fallbacks, decisions = [], [], [], []
         for st in sdfg.states:
             scopes = st.scope_children()
             for node in st.nodes:
@@ -307,14 +315,20 @@ class GridConversionPass(Pass):
                 if reason is not None:
                     node.map.annotations.pop(GRID_ANNOTATION, None)
                     skipped.append((node.map.label, reason))
+                    decisions.append({"map": node.map.label,
+                                      "decision": "vmap", "reason": reason,
+                                      **est})
                     continue
                 node.map.annotations[GRID_ANNOTATION] = spec
                 converted.append({"map": spec.kernel_name, **est})
+                decisions.append({"map": spec.kernel_name,
+                                  "decision": "grid", "reason": None, **est})
         report.setdefault("grid_kernels", []).extend(
             c["map"] for c in converted)
         report.setdefault("grid_converted", []).extend(converted)
         report.setdefault("grid_skipped", []).extend(skipped)
         report.setdefault("grid_fallbacks", []).extend(fallbacks)
+        report.setdefault("grid_decisions", []).extend(decisions)
         return [c["map"] for c in converted]
 
 
@@ -449,6 +463,9 @@ def default_pipeline(backend: str, interpret: bool = True,
                    kernels first, then prefer (pallas, xla, generic);
                    expanded map pairs fuse (MapFusion) before tiling so
                    producer->consumer chains become single grid kernels.
+                   Vectorization records the lane width that MapTiling's
+                   alignment-aware multi-dimensional defaults consume
+                   (minor dim -> 128 lanes, next dim -> 8 sublanes).
     """
     if backend == "pallas":
         return PassManager([
@@ -456,7 +473,8 @@ def default_pipeline(backend: str, interpret: bool = True,
             PipelineFusionPass(interpret=interpret),
             ExpandLibraryNodesPass(level=expansion_level),
             MapFusionPass(),
-            MapTilingPass(tile_size=128),
+            VectorizationPass(),
+            MapTilingPass(),
             GridConversionPass(),
         ], name="pallas_default")
     return PassManager([

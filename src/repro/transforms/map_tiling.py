@@ -1,33 +1,181 @@
-"""MapTiling: split a map dimension into (tile, intra-tile) — the
-platform-agnostic transformation the paper lists among the DaCe toolbox
-(§3.2), used on TPU to align block shapes with VMEM capacity.
+"""MapTiling: split map dimensions into (tile-counter, intra-tile) pairs —
+the platform-agnostic transformation the paper lists among the DaCe toolbox
+(§3.2), used on TPU to align block shapes with VMEM capacity and the
+VPU/MXU lane layout.
 
-Tiled maps are annotated with the tile structure (``annotations['tiling']``
-maps each intra-tile parameter to its extent); the Pallas grid code
+Tiling is **multi-dimensional and alignment-aware**: every eligible map
+parameter is split independently (mixed radix — one tile parameter per
+dimension), and the default tile sizes follow the TPU register layout the
+way the paper's Vectorization transform (§3.2.4) widens the FPGA data
+path: the minor (innermost) parameter tiles to the vector width recorded
+by ``Vectorization`` (``sdfg.metadata['vector_width']``, default 128
+lanes), the next parameter to 8 sublanes. Non-divisible extents are
+remainder-safe: the tile counter ranges over ``ceil(n / tile)`` blocks and
+the grid code generator masks the partial final block (the structural
+interpreter enumerates only valid lattice points).
+
+Tiled maps are annotated with the tile structure: ``annotations['tiling']``
+maps each intra-tile parameter to
+``{"tile", "counter", "extent", "blocks"}``. The Pallas grid code
 generator (``GridConversionPass`` + ``pallas_backend``) consumes it to
-derive BlockSpec block shapes: tile parameters widen memlet index
+derive BlockSpec block shapes: intra-tile parameters widen memlet index
 dimensions into VMEM-resident blocks while tile-counter parameters become
-grid dimensions.
+grid dimensions. The annotation — not the ``_tiled`` label suffix, which
+is purely cosmetic — is also what makes the transformation idempotent, so
+fuse-after-tile and per-dimension re-tiling compose.
 """
 from __future__ import annotations
 
-from typing import Dict
+import math
+from typing import Dict, Optional
 
+from ..core.dtypes import ScheduleType, TPU_LANES, TPU_SUBLANES
 from ..core.memlet import Range
 from ..core.sdfg import MapEntry, SDFG
-from ..core.symbolic import Expr, sym
+from ..core.symbolic import sym
 from .base import Transformation
+
+#: schedules whose maps tile (grid-eligible schedules; UNROLLED / MESH
+#: scopes are replicated hardware and keep their per-lane identity).
+_TILABLE = (ScheduleType.PIPELINED, ScheduleType.DEVICE)
+
+
+def normalize_tiling(ann: Dict) -> Dict[str, Dict]:
+    """Normalize a ``tiling`` annotation to the rich per-parameter form.
+    Legacy entries (``{param: extent_int}``) carry no counter/extent
+    information and are treated as exactly-divisible."""
+    out = {}
+    for q, info in (ann or {}).items():
+        if isinstance(info, dict):
+            out[q] = info
+        else:
+            out[q] = {"tile": int(info), "counter": None,
+                      "extent": None, "blocks": None}
+    return out
+
+
+def _choose_tile(n: int, preferred: int) -> Optional[int]:
+    """Tile size for an extent of ``n`` elements given a preferred
+    (alignment) width: the preferred width when it divides ``n``, else the
+    largest divisor of ``n`` within [preferred/4, preferred] (aligned
+    blocks, no remainder), else the preferred width with a masked partial
+    final block. None when ``n`` is too small to be worth splitting."""
+    if n <= 1 or preferred <= 1:
+        return None
+    if n <= preferred:
+        return n                      # whole dimension in one block
+    if n % preferred == 0:
+        return preferred
+    for d in range(preferred, max(2, preferred // 4) - 1, -1):
+        if n % d == 0:
+            return d
+    return preferred                  # ceil-division, masked partial block
 
 
 class MapTiling(Transformation):
-    def __init__(self, tile_size: int = 128, map_label: str = None):
+    """Split every eligible parameter of PIPELINED/DEVICE maps into a
+    (counter, intra) pair. ``tile_size`` overrides the preferred *minor*
+    (lane) width of the default policy — like the defaults, it plans each
+    map exactly once (an already-annotated map is left alone, so fixpoint
+    re-matches cannot whole-tile deliberately-skipped dims). Only
+    ``tile_sizes`` — explicit per-parameter tiles — composes with earlier
+    tilings, one dimension at a time."""
+
+    def __init__(self, tile_size: int = None, map_label: str = None,
+                 tile_sizes: Dict[str, int] = None):
         self.tile_size = tile_size
         self.map_label = map_label
+        self.tile_sizes = tile_sizes
 
+    # ------------------------------------------------------------------
+    def _shared_dim_params(self, sdfg: SDFG, st, entry: MapEntry) -> set:
+        """Parameters that co-index a memlet dimension with another map
+        parameter (e.g. ``x[c*K + l]``): splitting one would put two tile
+        parameters in a single dimension, which BlockSpec factorization
+        cannot express — leave them whole."""
+        pset = set(entry.map.params)
+        shared = set()
+        scopes = st.scope_children()
+        nodes = {entry}
+        stack = list(scopes.get(entry, []))
+        while stack:
+            nd = stack.pop()
+            if nd in nodes:
+                continue
+            nodes.add(nd)
+            if isinstance(nd, MapEntry):
+                stack.extend(scopes.get(nd, []))
+        for e in st.edges:
+            if e.src not in nodes and e.dst not in nodes:
+                continue
+            if e.memlet.subset is None:
+                continue
+            for r in e.memlet.subset:
+                used = (r.start.free_symbols | r.stop.free_symbols) & pset
+                if len(used) > 1:
+                    shared |= used
+        return shared
+
+    def _plan(self, sdfg: SDFG, st, entry: MapEntry,
+              tile_size: int, tile_sizes: Dict[str, int]
+              ) -> Dict[str, int]:
+        """Per-parameter tile plan for one map (param -> tile size)."""
+        m = entry.map
+        tiling = normalize_tiling(m.annotations.get("tiling"))
+        counters = {info.get("counter") for info in tiling.values()}
+        if tiling and not tile_sizes:
+            # the default policy plans a map exactly once: params it left
+            # untiled (small second dims, outer/batch dims) were left
+            # deliberately — a fixpoint re-match must not whole-tile them
+            # as fresh "minor" dims. Explicit tile_sizes still compose.
+            return {}
+        env = sdfg.symbol_values
+        sizes = {}
+        for p, r in zip(m.params, m.ranges):
+            if p in tiling or p in counters:
+                continue              # already tiled: idempotence
+            try:
+                sizes[p] = int(r.size.evaluate(env))
+            except Exception:
+                continue              # dynamic extent: cannot tile
+        if not sizes:
+            return {}
+        shared = self._shared_dim_params(sdfg, st, entry)
+        candidates = [p for p in m.params if p in sizes and p not in shared]
+        if not candidates:
+            return {}
+        plan: Dict[str, int] = {}
+        if tile_sizes:
+            for p in candidates:
+                if p in tile_sizes and sizes[p] > 1:
+                    plan[p] = max(1, min(int(tile_sizes[p]), sizes[p]))
+            return plan
+        lanes = tile_size or sdfg.metadata.get("vector_width") or TPU_LANES
+        minor = candidates[-1]
+        if len(m.params) == 1:
+            # a 1-D map only tiles when it yields >= 2 blocks (a whole-dim
+            # block would collapse the grid to a single step)
+            if sizes[minor] > lanes:
+                plan[minor] = _choose_tile(sizes[minor], lanes)
+        else:
+            t = _choose_tile(sizes[minor], lanes)
+            if t is not None:
+                plan[minor] = t
+            if len(candidates) >= 2:
+                second = candidates[-2]
+                if sizes[second] > TPU_SUBLANES:
+                    t2 = _choose_tile(sizes[second], TPU_SUBLANES)
+                    if t2 is not None:
+                        plan[second] = t2
+        return {p: t for p, t in plan.items() if t and t >= 1}
+
+    # ------------------------------------------------------------------
     def find_matches(self, sdfg: SDFG, tile_size: int = None,
-                     map_label: str = None, **kwargs):
-        ts = tile_size or self.tile_size
+                     map_label: str = None, tile_sizes: Dict[str, int] = None,
+                     **kwargs):
+        ts = tile_size if tile_size is not None else self.tile_size
         label = map_label or self.map_label
+        explicit = tile_sizes if tile_sizes is not None else self.tile_sizes
         for st in sdfg.states:
             for node in st.nodes:
                 if not isinstance(node, MapEntry):
@@ -35,31 +183,38 @@ class MapTiling(Transformation):
                 m = node.map
                 if label and not m.label.startswith(label):
                     continue
-                if len(m.params) != 1 or m.label.endswith("_tiled"):
+                if m.schedule not in _TILABLE:
                     continue
-                r = m.ranges[0]
-                try:
-                    n = r.size.evaluate(sdfg.symbol_values)
-                except Exception:
-                    continue
-                if n % ts == 0 and n > ts:
-                    yield {"state": st, "entry": node, "tile": ts}
+                plan = self._plan(sdfg, st, node, ts, explicit)
+                if plan:
+                    yield {"state": st, "entry": node, "plan": plan}
 
     def apply_match(self, sdfg: SDFG, match: Dict):
-        st, entry, ts = match["state"], match["entry"], match["tile"]
+        st, entry, plan = match["state"], match["entry"], match["plan"]
         m = entry.map
-        p = m.params[0]
-        lo = m.ranges[0].start
-        n = m.ranges[0].size
-        pt, pi = f"{p}_tile", f"{p}_in"
-        m.params = [pt, pi]
-        m.ranges = [Range.make(0, n / ts), Range.make(0, ts)]
-        m.label += "_tiled"
-        # metadata for the grid code generator: intra-tile params span
-        # VMEM-resident blocks, tile counters become the grid.
-        m.annotations.setdefault("tiling", {})[pi] = ts
-        # rewrite memlets in the scope: p -> lo + p_tile*ts + p_in
-        repl = {p: lo + sym(pt) * ts + sym(pi)}
+        env = sdfg.symbol_values
+        ann = m.annotations.setdefault("tiling", {})
+        new_params, new_ranges, repl = [], [], {}
+        for p, r in zip(m.params, m.ranges):
+            if p not in plan:
+                new_params.append(p)
+                new_ranges.append(r)
+                continue
+            ts = plan[p]
+            n = int(r.size.evaluate(env))
+            blocks = math.ceil(n / ts)
+            lo = r.start
+            pt, pi = f"{p}_tile", f"{p}_in"
+            new_params += [pt, pi]
+            new_ranges += [Range.make(0, blocks), Range.make(0, ts)]
+            ann[pi] = {"tile": ts, "counter": pt, "extent": n,
+                       "blocks": blocks}
+            # rewrite memlets in the scope: p -> lo + p_tile*ts + p_in
+            repl[p] = lo + sym(pt) * ts + sym(pi)
+        m.params = new_params
+        m.ranges = new_ranges
+        if not m.label.endswith("_tiled"):
+            m.label += "_tiled"
         scopes = st.scope_children()
         stack = list(scopes.get(entry, []))
         nodes = {entry} | set(stack)

@@ -1,0 +1,271 @@
+"""Multi-dimensional MapTiling: property tests over random shapes and
+tile sizes (including non-divisible remainders with masked partial
+blocks), alignment-aware defaults from Vectorization's vector width, the
+annotation-based idempotence contract, and grid acceptance checks that
+gemver/stencil kernels compile with multi-dim lane/sublane blocks."""
+import math
+
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401
+from repro.core.memlet import Memlet, Range, Subset
+from repro.core.sdfg import SDFG
+from repro.core.symbolic import sym
+from repro.pipeline import (GridConversionPass, MapTilingPass, PassManager,
+                            lower)
+from repro.transforms import MapTiling, Vectorization
+from repro.transforms.map_tiling import _choose_tile, normalize_tiling
+
+
+def _ew2d_sdfg(n, m):
+    """out[i, j] = 2*x[i, j] + y[j] — elementwise 2-D map with a
+    broadcast second operand."""
+    s = SDFG("ew2d")
+    s.add_array("x", (n, m), "float32")
+    s.add_array("y", (m,), "float32")
+    s.add_array("out", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    st.add_mapped_tasklet(
+        "ew", {"i": (0, n), "j": (0, m)},
+        inputs={"a": Memlet.simple("x", Subset.indices([i, j])),
+                "b": Memlet.simple("y", Subset.indices([j]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i, j]))},
+        fn=lambda a, b: 2.0 * a + b)
+    return s
+
+
+def _rowsum_sdfg(n, m):
+    """out[i] += x[i, j] — wcr-add reduction over the minor dimension."""
+    s = SDFG("rowsum")
+    s.add_array("x", (n, m), "float32")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    st.add_mapped_tasklet(
+        "rowsum", {"i": (0, n), "j": (0, m)},
+        inputs={"a": Memlet.simple("x", Subset.indices([i, j]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]), wcr="add")},
+        fn=lambda a: a)
+    return s
+
+
+def _tile_pipeline(tile_sizes):
+    return PassManager([MapTilingPass(tile_sizes=tile_sizes),
+                        GridConversionPass(min_grid_steps=1)],
+                       name="explicit_tiles")
+
+
+# ---------------------------------------------------------------------------
+# explicit multi-dim tiling: both backends match numpy for every
+# (shape, tile) combination, divisible or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,ti,tj", [
+    (16, 32, 8, 16),     # exact tiles both dims
+    (18, 22, 8, 16),     # partial final tiles both dims
+    (7, 5, 3, 2),        # small with remainders
+    (13, 17, 4, 17),     # prime extents, whole-dim minor tile
+    (12, 9, 5, 4),       # remainder i, remainder j
+])
+def test_multidim_tiling_matches_numpy(n, m, ti, tj):
+    rng = np.random.default_rng(n * 100 + m)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    pm = _tile_pipeline({"i": ti, "j": tj})
+    cp = lower(_ew2d_sdfg(n, m)).compile("pallas", pipeline=pm, cache=None)
+    assert cp.report["grid_kernels"] == ["ew_tiled"]
+    op = np.asarray(cp(x=x, y=y)["out"])
+    np.testing.assert_allclose(op, 2 * x + y, rtol=1e-6)
+    # jnp mirrors the generalized (masked) tiling on the same tiled graph
+    s = _ew2d_sdfg(n, m)
+    s.apply(MapTiling, tile_sizes={"i": ti, "j": tj})
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(x=x, y=y)["out"])
+    np.testing.assert_allclose(oj, 2 * x + y, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,m,ti,tj", [
+    (16, 24, 8, 8),      # exact
+    (10, 23, 4, 8),      # partial minor tile: masked reduce lanes
+    (9, 7, 4, 3),        # partial both
+])
+def test_multidim_tiling_wcr_reduction_matches_numpy(n, m, ti, tj):
+    """Partial minor tiles must mask padding lanes to the wcr identity
+    before the intra-block reduction — a garbage lane would corrupt the
+    row sums."""
+    rng = np.random.default_rng(n * 7 + m)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    pm = _tile_pipeline({"i": ti, "j": tj})
+    cp = lower(_rowsum_sdfg(n, m)).compile("pallas", pipeline=pm, cache=None)
+    assert cp.report["grid_kernels"] == ["rowsum_tiled"]
+    op = np.asarray(cp(x=x)["out"])
+    np.testing.assert_allclose(op, x.sum(axis=1), rtol=1e-4, atol=1e-5)
+    s = _rowsum_sdfg(n, m)
+    s.apply(MapTiling, tile_sizes={"i": ti, "j": tj})
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+    np.testing.assert_allclose(oj, x.sum(axis=1), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# alignment-aware defaults + annotation contract
+# ---------------------------------------------------------------------------
+
+def test_choose_tile_prefers_divisors_then_masks():
+    assert _choose_tile(256, 128) == 128          # lane-aligned
+    assert _choose_tile(96, 128) == 96            # whole dim in one block
+    assert _choose_tile(192, 128) == 96           # largest divisor in range
+    assert _choose_tile(131, 128) == 128          # prime: ceil + mask
+    assert _choose_tile(1, 128) is None
+
+
+def test_default_tiles_follow_vector_width():
+    """vector_width recorded by Vectorization flows into MapTiling's
+    minor-dim default; the second dim tiles to sublanes."""
+    n, m = 64, 512
+    s = _ew2d_sdfg(n, m)
+    s.apply(Vectorization, width=128)
+    assert s.metadata["vector_width"] == 128
+    assert s.apply(MapTiling) == 1
+    entry = next(nd for st in s.states for nd in st.nodes
+                 if hasattr(nd, "map") and nd.map.label == "ew_tiled")
+    tiling = normalize_tiling(entry.map.annotations["tiling"])
+    assert tiling["j_in"]["tile"] == 128          # minor -> lanes
+    assert tiling["i_in"]["tile"] == 8            # second -> sublanes
+    assert entry.map.params == ["i_tile", "i_in", "j_tile", "j_in"]
+    assert tiling["j_in"]["blocks"] == math.ceil(m / 128)
+
+
+def test_annotation_idempotence_not_label():
+    """Re-applying MapTiling must be a no-op because of the *annotations*,
+    even when the label suffix is stripped — the `_tiled` label hack is
+    gone."""
+    s = _ew2d_sdfg(64, 256)
+    assert s.apply(MapTiling) == 1
+    entry = next(nd for st in s.states for nd in st.nodes
+                 if hasattr(nd, "map") and "ew" in nd.map.label)
+    entry.map.label = "ew"                        # strip the cosmetic suffix
+    assert s.apply(MapTiling) == 0                # annotations block re-tiling
+
+
+def test_per_dimension_retiling_composes():
+    """Tiling one dimension explicitly, then letting a second MapTiling
+    pick up the remaining dimension, must compose (and stay correct)."""
+    n, m = 24, 256
+    s = _ew2d_sdfg(n, m)
+    assert s.apply(MapTiling, tile_sizes={"j": 128}) == 1
+    assert s.apply(MapTiling, tile_sizes={"i": 8}) == 1
+    entry = next(nd for st in s.states for nd in st.nodes
+                 if hasattr(nd, "map") and "ew" in nd.map.label)
+    tiling = normalize_tiling(entry.map.annotations["tiling"])
+    assert {q: t["tile"] for q, t in tiling.items()} == {"j_in": 128,
+                                                         "i_in": 8}
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    cp = lower(s).compile("pallas", cache=None)
+    np.testing.assert_allclose(np.asarray(cp(x=x, y=y)["out"]), 2 * x + y,
+                               rtol=1e-6)
+
+
+def test_partial_tile_plain_output_falls_back():
+    """A partial tile whose intra param is ABSENT from a plain (non-wcr)
+    output cannot pick a deterministic last write from the padding lanes:
+    the scope must be left to the structural interpreter."""
+    n = 10
+    s = SDFG("lastwrite")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (1,), "float32")
+    st = s.add_state("main", is_start=True)
+    st.add_mapped_tasklet(
+        "lw", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([sym("i")]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([0]))},
+        fn=lambda v: v)
+    s.apply(MapTiling, tile_sizes={"i": 4})      # 10 = 2*4 + 2: partial
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == []
+    assert any("partial tile" in reason
+               for _, reason in cp.report["grid_fallbacks"])
+
+
+def test_whole_block_probe_rejects_reduction_shaped_bodies():
+    """A tasklet like ``lambda a: jnp.sum(a)`` is the identity under
+    per-element semantics but a reduction on whole blocks — and its
+    scalar result still broadcasts to the tile shape, so a shape trace
+    alone cannot reject it. The concrete probe must route it to the
+    per-element vmap path and keep results correct."""
+    import jax.numpy as jnp
+    n, m = 16, 256
+    s = SDFG("sneaky")
+    s.add_array("x", (n, m), "float32")
+    s.add_array("out", (n, m), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    st.add_mapped_tasklet(
+        "sneaky", {"i": (0, n), "j": (0, m)},
+        inputs={"a": Memlet.simple("x", Subset.indices([i, j]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i, j]))},
+        fn=lambda a: jnp.sum(a))
+    x = np.random.default_rng(5).standard_normal((n, m)).astype(np.float32)
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == ["sneaky_tiled"]
+    np.testing.assert_allclose(np.asarray(cp(x=x)["out"]), x, rtol=1e-6)
+
+
+def test_default_policy_plans_each_map_once():
+    """The apply_everywhere fixpoint must not whole-tile params the
+    default policy deliberately left untiled (outer/batch dims, second
+    dims <= sublanes) in a later round."""
+    n, b = 64, 32
+    s = SDFG("batch3d")
+    s.add_array("x", (b, n, 512), "float32")
+    s.add_array("out", (b, n, 512), "float32")
+    st = s.add_state("main", is_start=True)
+    bb, i, j = sym("b"), sym("i"), sym("j")
+    st.add_mapped_tasklet(
+        "b3", {"b": (0, b), "i": (0, n), "j": (0, 512)},
+        inputs={"a": Memlet.simple("x", Subset.indices([bb, i, j]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([bb, i, j]))},
+        fn=lambda a: a + 1.0)
+    assert s.apply(MapTiling) == 1                # one planning round only
+    entry = next(nd for st2 in s.states for nd in st2.nodes
+                 if hasattr(nd, "map") and "b3" in nd.map.label)
+    tiling = normalize_tiling(entry.map.annotations["tiling"])
+    assert set(tiling) == {"i_in", "j_in"}        # b stays a grid dim
+    assert "b" in entry.map.params and "b_in" not in entry.map.params
+
+
+# ---------------------------------------------------------------------------
+# acceptance: paper benchmarks get lane/sublane blocks
+# ---------------------------------------------------------------------------
+
+def test_gemver_grid_blocks_are_multidim():
+    from test_pallas_grid import _build_gemver
+    cp = lower(_build_gemver(128)).compile("pallas",
+                                           expansion_level="generic")
+    fused = next(c for c in cp.report["grid_converted"]
+                 if c["map"].startswith("ger0_map+ger1_map"))
+    assert fused["block_shape"] == [8, 128]       # sublane x lane aligned
+    assert fused["bytes_per_step"] > 0
+
+
+def test_stencil_grid_blocks_are_multidim():
+    from benchmarks.stencil_bench import _star_sdfg
+    cp = lower(_star_sdfg(130, 130)).compile("pallas")
+    assert cp.report["grid_kernels"] == ["star_tiled"]
+    (conv,) = cp.report["grid_converted"]
+    assert conv["block_shape"] == [8, 128]
+    assert conv["block_shape"][-1] >= 8
+
+
+def test_grid_decisions_recorded():
+    """The vmap-vs-grid decision inputs land in Compiled.report for
+    calibration: every analyzed scope gets a decision entry with the
+    cost-model inputs."""
+    cp = lower(_ew2d_sdfg(64, 256)).compile("pallas", cache=None)
+    (dec,) = cp.report["grid_decisions"]
+    assert dec["decision"] == "grid" and dec["reason"] is None
+    assert dec["block_shape"] == [8, 128]
+    assert dec["grid_steps"] == 16  # (64/8) x (256/128)
+    assert dec["vmem_bytes"] > 0 and dec["bytes_per_step"] > 0

@@ -1,0 +1,48 @@
+"""Property tests (optional hypothesis dependency) for multi-parameter
+MapTiling: random shapes x random tile sizes — including non-divisible
+remainders with masked partial final blocks — compared against numpy
+through the Pallas grid path, for elementwise maps and wcr-add
+reductions."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+                         "dependency (pip install -e .[test])")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.pipeline import lower  # noqa: E402
+
+from test_map_tiling_multidim import (_ew2d_sdfg, _rowsum_sdfg,  # noqa: E402
+                                      _tile_pipeline)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.integers(min_value=2, max_value=40),
+       m=hst.integers(min_value=2, max_value=40),
+       ti=hst.integers(min_value=1, max_value=12),
+       tj=hst.integers(min_value=1, max_value=14),
+       seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_property_random_shapes_and_tiles(n, m, ti, tj, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    y = rng.standard_normal(m).astype(np.float32)
+    pm = _tile_pipeline({"i": ti, "j": tj})
+    cp = lower(_ew2d_sdfg(n, m)).compile("pallas", pipeline=pm, cache=None)
+    op = np.asarray(cp(x=x, y=y)["out"])
+    np.testing.assert_allclose(op, 2 * x + y, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=hst.integers(min_value=2, max_value=30),
+       m=hst.integers(min_value=2, max_value=30),
+       ti=hst.integers(min_value=1, max_value=9),
+       tj=hst.integers(min_value=1, max_value=9),
+       seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_property_random_reductions(n, m, ti, tj, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    pm = _tile_pipeline({"i": ti, "j": tj})
+    cp = lower(_rowsum_sdfg(n, m)).compile("pallas", pipeline=pm, cache=None)
+    op = np.asarray(cp(x=x)["out"])
+    np.testing.assert_allclose(op, x.sum(axis=1), rtol=1e-4, atol=1e-5)

@@ -175,7 +175,7 @@ def test_gemm_wcr_grid_cross_validation():
     A = rng.standard_normal((M, K)).astype(np.float32)
     B = rng.standard_normal((K, N)).astype(np.float32)
     c = lower(s).compile("pallas")
-    assert c.report["grid_kernels"] == ["gemm"]
+    assert c.report["grid_kernels"] == ["gemm_tiled"]
     np.testing.assert_allclose(np.asarray(c(A=A, B=B)["C"]), A @ B,
                                rtol=1e-4, atol=1e-5)
 
@@ -199,7 +199,7 @@ def test_stencil_grid_cross_validation():
         fn=lambda c, nn, ss, ww, ee: 0.5 * c + 0.125 * (nn + ss + ww + ee))
     a = np.random.default_rng(3).standard_normal((n, m)).astype(np.float32)
     cp = lower(s).compile("pallas")
-    assert cp.report["grid_kernels"] == ["star"]
+    assert cp.report["grid_kernels"] == ["star_tiled"]
     out_p = np.asarray(cp(a=a)["b"])
     out_j = np.asarray(lower(s).compile("jnp")(a=a)["b"])
     assert np.isfinite(out_p).all()
@@ -274,13 +274,15 @@ def test_gemver_grid_cross_validation():
          for k in ("A", "u1", "v1", "u2", "v2", "y", "z")}
     cj = lower(_build_gemver(n)).compile("jnp")
     cp = lower(_build_gemver(n)).compile("pallas", expansion_level="generic")
-    assert cp.report["grid_kernels"] == ["ger0_map+ger1_map",
+    assert cp.report["grid_kernels"] == ["ger0_map+ger1_map_tiled",
                                          "gemv0_rows", "gemv1_rows"]
     assert cp.report["grid_fallbacks"] == []
     assert cp.report["grid_skipped"] == []
     fused = next(c for c in cp.report["grid_converted"]
-                 if c["map"] == "ger0_map+ger1_map")
+                 if c["map"] == "ger0_map+ger1_map_tiled")
     assert fused["tasklets"] == 2
+    # multi-dim tiling: the fused rank-1 pair runs on sublane x lane blocks
+    assert len(fused["block_shape"]) == 2 and fused["block_shape"][-1] >= 8
     oj, op = cj(**d), cp(**d)
     for kk in ("x_out", "w_out"):
         np.testing.assert_allclose(np.asarray(op[kk]), np.asarray(oj[kk]),
@@ -505,7 +507,7 @@ def test_wcr_extrema_grid_cross_validation(wcr):
         fn=lambda a: a)
     A = np.random.default_rng(13).standard_normal((M, N)).astype(np.float32)
     cp = lower(s).compile("pallas", cache=None)
-    assert cp.report["grid_kernels"] == [f"row{wcr}"]
+    assert cp.report["grid_kernels"] == [f"row{wcr}_tiled"]
     op = np.asarray(cp(A=A)["out"])
     oj = np.asarray(lower(s).compile("jnp", cache=None)(A=A)["out"])
     np.testing.assert_allclose(op, oj, rtol=1e-6)

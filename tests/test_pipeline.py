@@ -247,6 +247,7 @@ def test_default_pipeline_shapes():
                                         "PipelineFusion",
                                         "ExpandLibraryNodes",
                                         "MapFusion",
+                                        "Vectorization",
                                         "MapTiling",
                                         "GridConversion"]
     assert jnp_pm.signature() != pal_pm.signature()
