@@ -37,6 +37,19 @@ def build(n):
     return p.finalize()
 
 
+def build_two_producer(n):
+    """Fused-DAG variant: BOTH dot operands are produced —
+    ``result = (a*x + y) . (b*u + v)``. The dot scope is fed by two
+    independent producer exits; MapFusion folds both axpys in, so the
+    whole DAG is ONE grid kernel with two in-kernel intermediates."""
+    p = Program("axpydot2")
+    a = p.scalar_input("a", "float32")
+    b = p.scalar_input("b", "float32")
+    x, y, u, v = (p.input(nm, (n,)) for nm in ("x", "y", "u", "v"))
+    p.output("result", blas.dot(blas.axpy(a, x, y), blas.axpy(b, u, v)))
+    return p.finalize()
+
+
 def _time(fn, *args, reps=5, **kw):
     fn(*args, **kw)  # compile
     t0 = time.perf_counter()
@@ -145,3 +158,30 @@ def run(report, small: bool = False):
            backend="pallas")
     assert t_tiled_small < t_grid_untiled, \
         "tiled grid variant must beat the 1-element-block grid variant"
+
+    # two-producer DAG: dot over TWO generated operands fuses to ONE kernel
+    gb = np.float32(-0.3)
+    gu, gv = (rng.standard_normal(gn).astype(np.float32) for _ in range(2))
+    d_exp = np.dot((a * gx + gy).astype(np.float32),
+                   (gb * gu + gv).astype(np.float32))
+    c2u = lower(build_two_producer(gn)).compile(
+        "pallas", pipeline=grid_pipeline(False))
+    t_dag_unfused = _time(c2u, a=a, b=gb, x=gx, y=gy, u=gu, v=gv, reps=3)
+    assert len(c2u.report["grid_kernels"]) == 3
+    c2f = lower(build_two_producer(gn)).compile(
+        "pallas", pipeline=grid_pipeline(True))
+    t_dag_fused = _time(c2f, a=a, b=gb, x=gx, y=gy, u=gu, v=gv, reps=3)
+    assert len(c2f.report["grid_kernels"]) == 1, \
+        f"two-producer DAG must fuse to ONE kernel, got " \
+        f"{c2f.report['grid_kernels']}"
+    for c in (c2u, c2f):
+        got = float(np.asarray(
+            c(a=a, b=gb, x=gx, y=gy, u=gu, v=gv)["result"]).ravel()[0])
+        assert abs(got - d_exp) < 1e-3 * abs(d_exp)
+    report("axpydot_dag_unfused_ms", t_dag_unfused * 1e3,
+           f"n={gn}; kernels={c2u.report['grid_kernels']}", backend="pallas",
+           grid_kernels=len(c2u.report["grid_kernels"]))
+    report("axpydot_dag_fused_ms", t_dag_fused * 1e3,
+           f"n={gn}; two-producer dot as ONE kernel, both axpys in-kernel; "
+           f"speedup {t_dag_unfused/t_dag_fused:.2f}x vs unfused",
+           backend="pallas", grid_kernels=len(c2f.report["grid_kernels"]))

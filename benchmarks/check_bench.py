@@ -1,12 +1,16 @@
 """CI benchmark assertions over BENCH_<name>.json records.
 
-Two gates:
+Three gates:
 
 1. **Grid conversion actually happened**: the tiled+fused grid variants
    ran (their entries exist), their derived records carry multi-dim
    blocks (``blocks=[s, l]`` with a lane dim >= 8), and within the same
    run the tiled grid variant beats the 1-element-block grid variant.
-2. **No >FACTOR regression vs the committed baselines**: entries are
+2. **Fused DAGs actually fused**: the gemver ger->ger->gemv chain and the
+   axpydot two-producer dot each ran as ONE grid kernel (their records
+   carry ``grid_kernels == 1``), and the gemver fused-DAG variant beats
+   the pairwise-fused baseline measured in the same run.
+3. **No >FACTOR regression vs the committed baselines**: entries are
    matched by name against ``--baseline`` records with the same ``small``
    flag; overall machine-speed difference is normalized out with the
    median current/baseline ratio (clamped to [0.5, 4]) so a uniformly
@@ -26,15 +30,25 @@ import sys
 
 MODULES = ("axpydot", "gemver", "stencil")
 REQUIRED = {
-    "gemver": ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
+    "gemver": ("gemver_grid_fused_ms", "gemver_grid_untiled_ms",
+               "gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),
     "stencil": ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
-    "axpydot": ("axpydot_grid_fused_ms", "axpydot_grid_untiled_ms"),
+    "axpydot": ("axpydot_grid_fused_ms", "axpydot_grid_untiled_ms",
+                "axpydot_dag_fused_ms"),
 }
 #: (tiled entry, 1-element-block entry) measured at the same size
 TILED_BEATS_UNTILED = (
     ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
     ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
 )
+#: entries that must record a single fused grid kernel (grid_kernels == 1)
+SINGLE_KERNEL_DAGS = ("gemver_chain_dag_ms", "axpydot_dag_fused_ms")
+#: (fused-DAG entry, pairwise-fused baseline) measured at the same size.
+#: The committed margin is ~1.24x on few-ms timings, so the comparison
+#: carries a noise allowance: only a clear inversion fails (the
+#: structural grid_kernels==1 gate above catches lost fusion exactly).
+DAG_BEATS_PAIRWISE = (("gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),)
+DAG_NOISE_ALLOWANCE = 1.10
 #: entries whose derived record must show a multi-dim block shape
 MULTIDIM_BLOCKS = ("gemver_grid_fused_ms", "stencil_star_grid_ms")
 
@@ -80,6 +94,25 @@ def main() -> int:
                     errors.append(
                         f"{tiled} ({tv:.2f} ms) does not beat "
                         f"{untiled} ({uv:.2f} ms)")
+
+    for name in SINGLE_KERNEL_DAGS:
+        for mod in cur:
+            if name not in cur[mod]:
+                continue
+            nk = cur[mod][name].get("grid_kernels")
+            if nk != 1:
+                errors.append(f"{name}: fused DAG ran as {nk!r} grid "
+                              f"kernels, expected exactly 1")
+
+    for dag, pairwise in DAG_BEATS_PAIRWISE:
+        for mod in cur:
+            if dag in cur[mod] and pairwise in cur[mod]:
+                dv, pv = cur[mod][dag]["value"], cur[mod][pairwise]["value"]
+                if dv >= pv * DAG_NOISE_ALLOWANCE:
+                    errors.append(
+                        f"{dag} ({dv:.2f} ms) does not beat the "
+                        f"pairwise-fused baseline {pairwise} ({pv:.2f} ms, "
+                        f"noise allowance {DAG_NOISE_ALLOWANCE}x)")
 
     for name in MULTIDIM_BLOCKS:
         for mod in cur:

@@ -65,6 +65,22 @@ def build(n, manual_replication=False, replica_in_hbm=True):
     return p.finalize()
 
 
+def build_chain(n):
+    """The fused-DAG ladder rung: B = A + u1 v1^T + u2 v2^T ; w = alpha*B x.
+    With the elementwise-exact ``accumulate`` gemv expansion the whole
+    ger->ger->gemv chain is one iteration space and MapFusion collapses it
+    into ONE grid kernel (B1 and B2 never leave the kernel)."""
+    p = Program("gemver_chain")
+    A = p.input("A", (n, n))
+    u1, v1 = p.input("u1", (n,)), p.input("v1", (n,))
+    u2, v2 = p.input("u2", (n,)), p.input("v2", (n,))
+    xv = p.input("xw", (n,))
+    B1 = blas.ger(A, u1, v1)
+    B2 = blas.ger(B1, u2, v2)
+    p.output("w_out", blas.gemv(B2, xv, alpha=1.1))
+    return p.finalize()
+
+
 def reference(n, d):
     B = d["A"] + np.outer(d["u1"], d["v1"]) + np.outer(d["u2"], d["v2"])
     x = 0.9 * B.T @ d["y"] + d["z"]
@@ -171,6 +187,45 @@ def run(report, small: bool = False):
     assert grid_times["fused"] < grid_times["untiled"], \
         "tiled grid variant must beat the 1-element-block grid variant"
 
+    # fused-DAG chain: ger->ger->gemv as ONE grid kernel (accumulate gemv)
+    # vs the pairwise-fused baseline (ger pair fused, row-streaming gemv
+    # as its own kernel, B2 round-tripping through HBM between them).
+    # Sized where the avoided n^2 round-trip dominates: below ~256 the
+    # pairwise row-gemv block is too cheap for the fusion win to show.
+    cn = 384
+    cd = {k: rng.standard_normal((cn, cn) if k == "A" else cn
+                                 ).astype(np.float32)
+          for k in ("A", "u1", "v1", "u2", "v2", "xw")}
+    B = cd["A"] + np.outer(cd["u1"], cd["v1"]) + np.outer(cd["u2"], cd["v2"])
+    w_ref = 1.1 * B @ cd["xw"]
+    chain_times, chain_kernels = {}, {}
+    reps = 5  # this pair feeds a hard CI comparison gate: average it
+    for name, pref in (("dag", ("accumulate", "generic")),
+                       ("pairwise", ("generic",))):
+        c = lower(build_chain(cn)).compile(
+            "pallas", pipeline=_chain_pipeline(name, pref))
+        c(**cd)  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = c(**cd)
+            np.asarray(out["w_out"])
+        chain_times[name] = (time.perf_counter() - t0) / reps
+        chain_kernels[name] = c.report["grid_kernels"]
+        np.testing.assert_allclose(np.asarray(out["w_out"]), w_ref,
+                                   rtol=5e-2, atol=5e-1)
+    assert len(chain_kernels["dag"]) == 1, \
+        f"chain must fuse to ONE grid kernel, got {chain_kernels['dag']}"
+    assert len(chain_kernels["pairwise"]) >= 2
+    report("gemver_chain_dag_ms", chain_times["dag"] * 1e3,
+           f"n={cn}; ger->ger->gemv as ONE kernel "
+           f"{chain_kernels['dag']}; speedup "
+           f"{chain_times['pairwise']/chain_times['dag']:.2f}x vs pairwise",
+           backend="pallas", grid_kernels=len(chain_kernels["dag"]))
+    report("gemver_chain_pairwise_ms", chain_times["pairwise"] * 1e3,
+           f"n={cn}; pairwise-fused baseline, kernels="
+           f"{chain_kernels['pairwise']}", backend="pallas",
+           grid_kernels=len(chain_kernels["pairwise"]))
+
 
 def _grid_pipeline(fused: bool, tiled: bool = True,
                    tile_size: int = None) -> PassManager:
@@ -179,11 +234,26 @@ def _grid_pipeline(fused: bool, tiled: bool = True,
     if fused:
         passes.append(MapFusionPass())
     if tiled:
+        defaults = GridConversionPass.default_tiles("pallas", True)
         passes.append(MapTilingPass(tile_size=tile_size)
-                      if tile_size else MapTilingPass())
+                      if tile_size else
+                      MapTilingPass(tile_size=defaults.get("minor"),
+                                    second_size=defaults.get("second")))
     passes.append(GridConversionPass())
     return PassManager(passes, name=f"grid_f{int(fused)}_t{int(tiled)}"
                                     f"_{tile_size or 'auto'}")
+
+
+def _chain_pipeline(name: str, pref) -> PassManager:
+    defaults = GridConversionPass.default_tiles("pallas", True)
+    return PassManager([
+        SetExpansionPreferencePass(tuple(pref)),
+        ExpandLibraryNodesPass(),
+        MapFusionPass(),
+        MapTilingPass(tile_size=defaults.get("minor"),
+                      second_size=defaults.get("second")),
+        GridConversionPass(),
+    ], name=f"chain_{name}")
 
 
 def calibrate(report, small: bool = False):

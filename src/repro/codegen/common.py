@@ -47,6 +47,13 @@ def eval_expr(expr: Expr, env: Dict[str, object]):
     return 0 if result is None else result
 
 
+class DynamicStrideError(NotImplementedError):
+    """A memlet's stride (or a strided start) is only known at trace time,
+    which the vectorized lowering cannot address. Map lowerings catch this
+    and degrade to the sequential structural interpreter, where parameter
+    bindings are trace-time constants."""
+
+
 def _static_int(v) -> bool:
     return isinstance(v, int)
 
@@ -79,7 +86,7 @@ def read_memlet(value, memlet: Memlet, env: Dict[str, object]):
     starts = [eval_expr(r.start, env) for r in subset]
     steps = [eval_expr(r.step, env) for r in subset]
     if any(not _static_int(s) for s in steps):
-        raise NotImplementedError("dynamic memlet strides not supported")
+        raise DynamicStrideError("dynamic memlet strides not supported")
     squeeze = tuple(i for i, r in enumerate(subset) if r.is_index())
     if len(squeeze) == len(subset):
         return value[tuple(starts)]  # all-index: scalar (gather if traced)
@@ -122,7 +129,7 @@ def write_memlet(container_value, memlet: Memlet, new_value,
     starts = [eval_expr(r.start, env) for r in subset]
     steps = [eval_expr(r.step, env) for r in subset]
     if any(not _static_int(s) for s in steps):
-        raise NotImplementedError("dynamic memlet strides not supported")
+        raise DynamicStrideError("dynamic memlet strides not supported")
     all_index = all(r.is_index() for r in subset)
     if all_index:
         ref = container_value.at[tuple(starts)]
@@ -138,7 +145,7 @@ def write_memlet(container_value, memlet: Memlet, new_value,
     if any(sp != 1 for sp in steps):
         # a traced start with a stride would need a scatter; landing the
         # values on contiguous positions would be silently wrong
-        raise NotImplementedError(
+        raise DynamicStrideError(
             "strided memlet writes with traced starts not supported")
     if wcr == "add":
         cur = jax.lax.dynamic_slice(container_value, starts, sizes)

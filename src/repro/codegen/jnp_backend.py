@@ -26,8 +26,8 @@ from ..core.memlet import Memlet
 from ..core.sdfg import (AccessNode, Array, LibraryNode, MapEntry, MapExit,
                          NestedSDFG, Scalar, SDFG, State, Stream, Tasklet)
 from ..core.symbolic import Expr
-from .common import (WCR_MODES, _apply_wcr, eval_expr, read_memlet,
-                     wcr_combine, wcr_reduce, write_memlet)
+from .common import (DynamicStrideError, WCR_MODES, _apply_wcr, eval_expr,
+                     read_memlet, wcr_combine, wcr_reduce, write_memlet)
 
 # Maps whose scope is not a single tasklet fall back to a trace-time python
 # loop; cap the unrolled trip count so mistakes fail loudly instead of
@@ -233,13 +233,8 @@ class StateLowering:
         # threading per-iteration transients) vectorize with one vmap
         tasklet_chain = (all(isinstance(n, Tasklet) for n in inner)
                          and len(inner) >= 1)
-        if m.schedule in (ScheduleType.UNROLLED, ScheduleType.MESH,
-                          ScheduleType.MXU):
-            self._run_map_sequential(entry, exit_, inner, sizes, starts)
-        elif tasklet_chain and not any(
-                self._has_param_slice_writes(t, m) for t in inner):
-            self._run_map_vmap(entry, exit_, inner, sizes, starts)
-        else:
+
+        def sequential():
             total = int(np.prod(sizes)) if sizes else 1
             if total > SEQUENTIAL_TRIP_LIMIT:
                 raise NotImplementedError(
@@ -248,10 +243,46 @@ class StateLowering:
                     f"compile with the pallas backend's grid codegen")
             self._run_map_sequential(entry, exit_, inner, sizes, starts)
 
+        if m.schedule in (ScheduleType.UNROLLED, ScheduleType.MESH,
+                          ScheduleType.MXU):
+            self._run_map_sequential(entry, exit_, inner, sizes, starts)
+        elif (tasklet_chain
+              and not any(self._has_param_slice_writes(t, m) for t in inner)
+              and not self._has_dynamic_strides(entry, inner, exit_)):
+            snapshot = dict(self.env)
+            try:
+                self._run_map_vmap(entry, exit_, inner, sizes, starts)
+            except DynamicStrideError:
+                # a stride only the traced parameter bindings reveal:
+                # restore the env and take the sequential trace-time loop
+                self.env.clear()
+                self.env.update(snapshot)
+                sequential()
+        else:
+            sequential()
+
     def _lower_map_custom(self, entry: MapEntry, exit_: MapExit,
                           inner: List) -> bool:
         """Platform map-lowering hook; return True when the map was handled.
         The base (XLA-auto) backend has no platform strategy."""
+        return False
+
+    def _has_dynamic_strides(self, entry: MapEntry, inner: List,
+                             exit_: MapExit) -> bool:
+        """A subset whose *step* references a map parameter is only known
+        once the parameter is bound — the vectorized lowering would trace
+        it and ``read_memlet``/``write_memlet`` would refuse; route such
+        scopes to the sequential loop, where bindings are ints."""
+        params = set(entry.map.params)
+        nodes = {entry, exit_} | set(inner)
+        for e in self.state.edges:
+            if e.src not in nodes and e.dst not in nodes:
+                continue
+            if e.memlet.subset is None:
+                continue
+            for r in e.memlet.subset:
+                if r.step.free_symbols & params:
+                    return True
         return False
 
     def _has_param_slice_writes(self, tasklet: Tasklet, m) -> bool:

@@ -95,6 +95,9 @@ class GridSpec:
     tasklet_labels: Tuple[str, ...] = ()       # topo-ordered chain labels
     #: (intra param, counter param, tile, extent) for non-divisible tiles
     partial_tiles: Tuple[Tuple[str, str, int, int], ...] = ()
+    #: tasklet->tasklet edges inside the scope (fused-DAG intermediates
+    #: threaded as in-kernel values; the cost model charges VMEM for them)
+    internal_edges: int = 0
 
 
 def _scalar_fact() -> SubsetFactorization:
@@ -289,7 +292,8 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
 
     inputs = []
     out_edge_list = []  # (chain index, edge)
-    for ti, t in enumerate(chain):
+    internal_vals = set()  # distinct in-kernel values: a fan-out producer
+    for ti, t in enumerate(chain):    # value is stored once, not per reader
         for e in state.in_edges(t):
             if e.dst_conn is None or e.memlet.data is None:
                 continue
@@ -299,6 +303,7 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                     raise BlockFactorError(
                         f"map {m.label!r}: wcr on in-kernel intermediate "
                         f"{e.memlet.data!r}")
+                internal_vals.add((chain_index[e.src], e.src_conn))
                 continue
             fact, scalar, _ = _factor(e.memlet)
             inputs.append(EdgeSpec(e.dst_conn, e.memlet.data, fact, scalar,
@@ -375,7 +380,8 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                            if p in block_params),
         inputs=tuple(inputs), outputs=tuple(outputs),
         tasklet_labels=tuple(t.label for t in chain),
-        partial_tiles=tuple(partials))
+        partial_tiles=tuple(partials),
+        internal_edges=len(internal_vals))
 
 
 # ---------------------------------------------------------------------------

@@ -104,3 +104,20 @@ int32 = DType("int32")
 TPU_LANES = 128          # minor-dim vector width
 TPU_SUBLANES = 8         # second-minor width for fp32
 MXU_DIM = 128            # systolic array edge
+
+
+def sublanes_for_bytes(nbytes: int) -> int:
+    """Sublane count for an element width in bytes — the single source
+    of the packing rule (see :func:`sublanes_for`)."""
+    return TPU_SUBLANES * 4 // min(4, int(nbytes))
+
+
+def sublanes_for(dtype) -> int:
+    """Dtype-aware second-minor (sublane) tile width.
+
+    The native TPU tile is (sublane x 128 lanes) with the sublane count
+    set by element width: a register row packs 32 bits per lane, so
+    narrower dtypes pack more rows per tile — fp32 -> 8, bf16/fp16 -> 16,
+    int8/fp8 -> 32. Wider-than-32-bit dtypes keep the fp32 count.
+    """
+    return sublanes_for_bytes(DType(dtype).bytes)

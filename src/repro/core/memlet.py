@@ -45,7 +45,9 @@ class Range:
         return (self.stop - self.start) / self.step
 
     def is_index(self) -> bool:
-        return self.size == Expr.const(1)
+        # size == 1 without forming (stop-start)/step: symbolic division
+        # by a multi-term step (a per-iteration stride like i+1) raises
+        return self.stop - self.start == self.step
 
     def subs(self, env) -> "Range":
         return Range(self.start.subs(env), self.stop.subs(env), self.step.subs(env))

@@ -241,7 +241,56 @@ def _gemv_generic(node: Gemv, sdfg: SDFG, state: State):
     )
 
 
-Gemv.expansions = {"xla": _gemv_xla, "generic": _gemv_generic}
+def _gemv_accumulate(node: Gemv, sdfg: SDFG, state: State):
+    """Elementwise-exact accumulate expansion: one (i, j) map whose
+    tasklet contributes ``alpha * A[i, j] * x[j]`` to ``y[i]`` under
+    wcr-add (``y[j] += A[i, j] * x[i]`` for trans). Unlike the
+    row-streaming expansion, every A read is a single element over the
+    full (i, j) space — exactly the shape MapFusion fuses with an
+    upstream producer of A over the same space (ger -> gemv chains become
+    ONE grid kernel with the updated matrix held in-kernel).
+
+    ``beta * y0`` seeds through a separate elementwise wcr-add map:
+    addition commutes, so the seed and the accumulation maps need no
+    ordering edge between their writes."""
+    ops = operand_nodes(state, node)
+    n, m = sdfg.arrays[ops["A"].data].shape
+    trans, alpha, beta = node.trans, node.alpha, node.beta
+    Ae, xe = in_edge(state, node, "A"), in_edge(state, node, "x")
+    ye = out_edge(state, node, "y")
+    y0e = in_edge(state, node, "y0") if beta != 0.0 else None
+    state.remove_node(node)
+    i, j = sym("i"), sym("j")
+    out_idx, x_idx = (j, i) if trans else (i, j)
+    state.add_mapped_tasklet(
+        f"{node.label}_acc", {"i": (0, n), "j": (0, m)},
+        inputs={
+            "A": Memlet.simple(Ae.memlet.data, Subset.indices([i, j])),
+            "x": Memlet.simple(xe.memlet.data, Subset.indices([x_idx])),
+        },
+        outputs={"y": Memlet.simple(ye.memlet.data,
+                                    Subset.indices([out_idx]), wcr="add")},
+        fn=lambda A, x: alpha * A * x,
+        input_nodes={Ae.memlet.data: Ae.src, xe.memlet.data: xe.src},
+        output_nodes={ye.memlet.data: ye.dst},
+    )
+    if y0e is not None:
+        rows = m if trans else n
+        k = sym("k")
+        state.add_mapped_tasklet(
+            f"{node.label}_seed", {"k": (0, rows)},
+            inputs={"y0": Memlet.simple(y0e.memlet.data,
+                                        Subset.indices([k]))},
+            outputs={"y": Memlet.simple(ye.memlet.data,
+                                        Subset.indices([k]), wcr="add")},
+            fn=lambda y0: beta * y0,
+            input_nodes={y0e.memlet.data: y0e.src},
+            output_nodes={ye.memlet.data: ye.dst},
+        )
+
+
+Gemv.expansions = {"xla": _gemv_xla, "generic": _gemv_generic,
+                   "accumulate": _gemv_accumulate}
 
 
 # ---------------------------------------------------------------------------

@@ -224,6 +224,22 @@ class GridConversionPass(Pass):
     #: double-buffered working set a generated kernel may pin there.
     DEFAULT_VMEM_BUDGET = 16 * 2 ** 20
 
+    #: measured tile crossovers per (backend, interpret) — seeded from the
+    #: committed ``BENCH_*.json`` ``--calibrate`` sweeps: the gemver
+    #: minor-tile sweep bottoms out at 64 (not the lane-aligned 128) and
+    #: the star-stencil sublane sweep at 32 (not the fp32-aligned 8) on
+    #: CPU interpret mode, where per-step Python dispatch dwarfs register
+    #: packing. Real hardware (interpret=False) has no committed
+    #: calibration and keeps the static lane/sublane alignment defaults.
+    CALIBRATED_TILES = {("pallas", True): {"minor": 64, "second": 32}}
+
+    @classmethod
+    def default_tiles(cls, backend: str, interpret: bool = True) -> Dict:
+        """Per-backend preferred (minor, second) tile widths: the
+        calibrated table when a measured entry exists, else empty — the
+        caller falls back to the static alignment defaults."""
+        return dict(cls.CALIBRATED_TILES.get((backend, bool(interpret)), {}))
+
     def __init__(self, vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
                  min_grid_steps: int = 2, max_fused_tasklets: int = 16):
         self.vmem_budget_bytes = int(vmem_budget_bytes)
@@ -261,11 +277,24 @@ class GridConversionPass(Pass):
             bytes_per_step += block_bytes(es)
             if es.wcr and es.reduction:
                 vmem += block_bytes(es)   # scratch accumulator
+        # fused-DAG in-kernel intermediates: each tasklet->tasklet edge
+        # holds one tile-shaped value live in VMEM under the whole-block
+        # body (sized with the first output's element width)
+        in_kernel = int(getattr(spec, "internal_edges", 0))
+        if in_kernel:
+            tile_elems = 1
+            for _, b in spec.block_params:
+                tile_elems *= b
+            desc = sdfg.arrays.get(spec.outputs[0].data) \
+                if spec.outputs else None
+            elem = desc.dtype.bytes if desc is not None else 4
+            vmem += in_kernel * tile_elems * elem
         block_shape = (list(spec.outputs[0].fact.effective_shape())
                        if spec.outputs else [])
         return {"grid_steps": steps, "vmem_bytes": vmem,
                 "bytes_per_step": bytes_per_step,
                 "block_shape": block_shape,
+                "in_kernel_values": in_kernel,
                 "tasklets": max(1, len(spec.tasklet_labels))}
 
     def skip_reason(self, est: Dict[str, int]) -> Optional[str]:
@@ -465,16 +494,21 @@ def default_pipeline(backend: str, interpret: bool = True,
                    producer->consumer chains become single grid kernels.
                    Vectorization records the lane width that MapTiling's
                    alignment-aware multi-dimensional defaults consume
-                   (minor dim -> 128 lanes, next dim -> 8 sublanes).
+                   (minor dim -> 128 lanes, next dim -> dtype-aware
+                   sublanes); on CPU-interpret runs the measured
+                   crossover table (``GridConversionPass.default_tiles``)
+                   overrides both preferred widths.
     """
     if backend == "pallas":
+        tiles = GridConversionPass.default_tiles("pallas", interpret)
         return PassManager([
             SetExpansionPreferencePass(("pallas", "xla", "generic")),
             PipelineFusionPass(interpret=interpret),
             ExpandLibraryNodesPass(level=expansion_level),
             MapFusionPass(),
             VectorizationPass(),
-            MapTilingPass(),
+            MapTilingPass(tile_size=tiles.get("minor"),
+                          second_size=tiles.get("second")),
             GridConversionPass(),
         ], name="pallas_default")
     return PassManager([

@@ -12,34 +12,65 @@ scope lowers to a single Pallas grid kernel whose intermediate lives in
 registers/VMEM, where the unfused pair was two kernel launches with an
 HBM array between them.
 
+The transform handles general producer **DAGs**, not just linear chains:
+
+  * a consumer scope fed by several independent producer exits fuses
+    with all of them across fixpoint rounds (gemver's ger->ger->gemv
+    chain, a dot over two generated operands);
+  * ALL intermediates connecting one (producer exit, consumer entry)
+    pair fuse in a single application — each becomes its own
+    tasklet->tasklet edge (a producer computing sin+cos for one
+    consumer). If any of them is ineligible the pair refuses, because
+    fusing a subset would leave a container path into the fused scope
+    (a cycle);
+  * ``Scalar``-descriptor (and 0-d) intermediates fuse the same way
+    ``Array`` transients do — their disjoint-writes condition simply has
+    no index dimensions to discharge it, so they are legal exactly when
+    no parameter revisits them (all range sizes 1);
+  * iteration spaces match **up to MapTiling splits**
+    (:func:`transforms.map_tiling.range_equivalence`): a tiled producer
+    fuses with an untiled consumer over the same extent, two maps tiled
+    with the same annotation fuse pair-for-pair, and an untiled producer
+    adopting a tiled consumer's structure is retiled in place — so the
+    MapFusion / MapTiling pipeline orders commute.
+
 Legality (checked per match, mirrored by tests/test_map_fusion.py):
 
-  * the intermediate is a transient ``Array`` accessed at exactly one
-    node in the whole SDFG, written once by the producer's exit and read
-    only by the consumer's entry (no other readers/writers);
-  * producer and consumer ranges match positionally (after renaming the
-    consumer's parameters onto the producer's);
+  * each intermediate is a transient ``Array``/``Scalar`` accessed at
+    exactly one node in the whole SDFG, written once by the producer's
+    exit and read only by the consumer's entry (no other readers or
+    writers);
+  * producer and consumer iteration spaces are equivalent under
+    ``range_equivalence`` (positional renaming, tiling-aware);
   * every consumer read subset equals the producer write subset under
     that renaming — offset reads (stencil halos) refuse to fuse;
+  * the producer's writes are disjoint across iterations: every
+    parameter with more than one iteration must index the intermediate
+    injectively. Mixed-radix dimensions (``t[c*K + l]`` with ``l < K``,
+    the MapTiling form) count as injective; ``t[i+j]`` does not;
   * no write-conflict resolution on the intermediate's edges (a wcr
     write is not a per-iteration value);
   * both scopes contain only tasklets, and fusing must not reorder
     accesses to any *other* container shared between the two scopes.
 
-After fusion the intermediate's descriptor is retargeted to registers
+After fusion each intermediate's descriptor is retargeted to registers
 (``StorageType.REG``): it no longer appears at any access node, so it
-contributes nothing to the off-chip volume metric.
+contributes nothing to the off-chip volume metric. Fused labels join the
+component labels with ``+`` (stripping the cosmetic ``_tiled`` suffix
+from components, re-appending it when the fused map carries tiling
+annotations), so fuse-then-tile and tile-then-fuse name the same kernel.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from fractions import Fraction
+from typing import Dict, List, Optional, Tuple
 
 from ..core.dtypes import ScheduleType, StorageType
-from ..core.memlet import Memlet
+from ..core.memlet import Memlet, Subset
 from ..core.sdfg import (AccessNode, Array, MapEntry, MapExit, Scalar, SDFG,
                          State, Stream, Tasklet)
-from ..core.symbolic import Expr
 from .base import Transformation
+from .map_tiling import range_equivalence
 
 #: schedules whose scopes may fuse (grid-eligible schedules; UNROLLED /
 #: MESH scopes are replicated hardware and keep their own identity).
@@ -64,31 +95,99 @@ def _scope_tasklets(state: State, scopes, entry: MapEntry):
     return inner
 
 
-def _param_renaming(prod, cons) -> Optional[Dict[str, Expr]]:
-    """Positional consumer->producer parameter renaming, or None when the
-    iteration spaces differ."""
-    if len(prod.params) != len(cons.params):
-        return None
-    ren = {cp: Expr.sym(pp) for cp, pp in zip(cons.params, prod.params)
-           if cp != pp}
-    for rp, rc in zip(prod.ranges, cons.ranges):
-        if rc.subs(ren) != rp:
+def _fusible_desc(desc) -> bool:
+    return (isinstance(desc, (Array, Scalar)) and not isinstance(desc, Stream)
+            and desc.transient)
+
+
+def _scalar_like(desc) -> bool:
+    return not getattr(desc, "shape", ())
+
+
+def _group(state: State, px: MapExit, ce: MapEntry) -> Optional[List[AccessNode]]:
+    """Every access node carried from ``px`` into ``ce``. All of them
+    must fuse together (a leftover container between the pair would put a
+    cycle through the fused scope); an access node that also feeds a
+    third consumer poisons the whole pair — returns None."""
+    members = []
+    for e in state.out_edges(px):
+        dst = e.dst
+        if not isinstance(dst, AccessNode):
+            continue
+        outs = state.out_edges(dst)
+        to_ce = [o for o in outs if o.dst is ce]
+        if not to_ce:
+            continue
+        if len(to_ce) != len(outs):
             return None
-    return ren
+        members.append(dst)
+    return members or None
+
+
+def _injective_write(subset: Optional[Subset],
+                     sizes: Dict[str, Optional[int]]) -> bool:
+    """True when the write subset touches a distinct location on every
+    iteration of the (final) parameter space. Parameters whose range has
+    a single iteration cannot revisit anything and are exempt; a
+    dimension combining several parameters is accepted exactly when its
+    coefficients form a positional (mixed-radix) system — the MapTiling
+    ``start + counter*tile + intra`` shape — and rejected otherwise
+    (``t[i+j]`` collides across iterations)."""
+    used = set()
+    pset = set(sizes)
+    if subset is None or len(subset) == 0:
+        return all(sz == 1 for sz in sizes.values())
+    for r in subset:
+        rsyms = (r.start.free_symbols | r.stop.free_symbols
+                 | r.step.free_symbols)
+        if (rsyms & pset) and not r.is_index():
+            return False
+        terms = []
+        for mono, c in r.start.terms.items():
+            if mono == ():
+                continue
+            names = [nm for nm, _ in mono]
+            if not any(nm in pset for nm in names):
+                continue
+            if len(mono) != 1 or mono[0][1] != 1:
+                return False          # non-affine in a parameter
+            name = mono[0][0]
+            if isinstance(c, Fraction):
+                if c.denominator != 1:
+                    return False
+                c = c.numerator
+            coeff = abs(int(c))
+            if coeff == 0:
+                continue
+            sz = sizes.get(name)
+            if sz is None:
+                return False          # dynamic extent: cannot prove
+            if sz <= 1:
+                continue              # single iteration: no collision
+            if name in used:
+                return False          # same param indexes two dimensions
+            terms.append((coeff, sz, name))
+        terms.sort()
+        span = 0
+        for coeff, sz, name in terms:
+            if coeff <= span:
+                return False          # offsets of smaller terms overlap
+            span += coeff * (sz - 1)
+        used |= {name for _, _, name in terms}
+    covering = {p for p, sz in sizes.items() if sz is None or sz > 1}
+    return covering <= used
 
 
 class MapFusion(Transformation):
-    """transient array node between a map exit and a map entry over the
-    same iteration space -> merge the scopes; the intermediate becomes a
-    direct per-iteration tasklet->tasklet edge."""
+    """Transient array/scalar node(s) between a map exit and a map entry
+    over equivalent iteration spaces -> merge the scopes; each
+    intermediate becomes a direct per-iteration tasklet->tasklet edge."""
 
     def find_matches(self, sdfg: SDFG, **kwargs):
         for st in sdfg.states:
             for node in st.data_nodes():
                 desc = sdfg.arrays.get(node.data)
-                if not isinstance(desc, Array) or isinstance(desc, (Stream,)):
-                    continue
-                if not desc.transient:
+                if desc is None or not _fusible_desc(desc):
                     continue
                 if st.in_degree(node) != 1:
                     continue
@@ -99,21 +198,65 @@ class MapFusion(Transformation):
                 yield {"state": st, "node": node}
 
     # ------------------------------------------------------------------
+    def _write_edge(self, st: State, px: MapExit, t: str):
+        w_edges = [e for e in st.in_edges(px) if e.memlet.data == t]
+        return w_edges[0] if len(w_edges) == 1 else None
+
+    def _member_legal(self, sdfg: SDFG, st: State, member: AccessNode,
+                      px: MapExit, ce: MapEntry, plan: Dict) -> bool:
+        t = member.data
+        desc = sdfg.arrays.get(t)
+        if desc is None or not _fusible_desc(desc):
+            return False
+        if t in sdfg.metadata.get("pin_hbm", ()):
+            return False
+        # the one access node in the whole SDFG (no cross-PE aliasing)
+        count = sum(1 for s in sdfg.states for n in s.data_nodes()
+                    if n.data == t)
+        if count != 1 or st.in_degree(member) != 1:
+            return False
+        in_e = st.in_edges(member)[0]
+        if in_e.src is not px or in_e.memlet.wcr is not None:
+            return False
+        w = self._write_edge(st, px, t)
+        if w is None or w.memlet.wcr is not None or w.memlet.dynamic:
+            return False
+        scalar = _scalar_like(desc)
+        if w.memlet.subset is None and not scalar:
+            return False
+        wsub = w.memlet.subset.subs(plan["prod_repl"]) \
+            if w.memlet.subset is not None else None
+        # writes must be disjoint across iterations — otherwise the fused
+        # consumer reads its iteration's private value where the
+        # sequential schedule delivered the LAST write
+        if not _injective_write(wsub, plan["sizes"]):
+            return False
+        # every consumer read must be the element the producer just wrote
+        r_edges = [e for e in st.out_edges(ce) if e.memlet.data == t]
+        if not r_edges:
+            return False
+        for e in r_edges:
+            if e.memlet.wcr is not None or e.memlet.dynamic:
+                return False
+            rsub = e.memlet.subset
+            if rsub is None and wsub is None:
+                continue              # whole-scalar write, whole-scalar read
+            if rsub is None or wsub is None:
+                return False
+            if rsub.subs(plan["ren"]) != wsub:
+                return False
+        return True
+
+    # ------------------------------------------------------------------
     def can_apply(self, sdfg: SDFG, match: Dict) -> bool:
         st: State = match["state"]
         node: AccessNode = match["node"]
         if node not in st.graph:
             return False
-        t = node.data
-        desc = sdfg.arrays.get(t)
-        if not isinstance(desc, Array) or isinstance(desc, (Stream, Scalar)):
+        desc = sdfg.arrays.get(node.data)
+        if desc is None or not _fusible_desc(desc):
             return False
-        if not desc.transient or t in sdfg.metadata.get("pin_hbm", ()):
-            return False
-        # the one access node in the whole SDFG (no cross-PE aliasing)
-        count = sum(1 for s in sdfg.states for n in s.data_nodes()
-                    if n.data == t)
-        if count != 1 or st.in_degree(node) != 1:
+        if st.in_degree(node) != 1:
             return False
         in_e = st.in_edges(node)[0]
         if not isinstance(in_e.src, MapExit):
@@ -125,8 +268,8 @@ class MapFusion(Transformation):
         prod, cons = px.map, ce.map
         if prod.schedule not in _FUSIBLE or cons.schedule not in _FUSIBLE:
             return False
-        ren = _param_renaming(prod, cons)
-        if ren is None:
+        plan = range_equivalence(prod, cons, sdfg.symbol_values)
+        if plan is None:
             return False
         scopes = st.scope_children()
         if _scope_tasklets(st, scopes, px.entry) is None:
@@ -137,48 +280,15 @@ class MapFusion(Transformation):
                    if isinstance(n, MapExit) and n.entry is ce), None)
         if cx is None:
             return False
-        # exactly one in-scope writer of t, plain (no wcr), static subset
-        w_edges = [e for e in st.in_edges(px) if e.memlet.data == t]
-        if len(w_edges) != 1:
+        members = _group(st, px, ce)
+        if members is None or node not in members:
             return False
-        w = w_edges[0]
-        if w.memlet.wcr is not None or w.memlet.dynamic \
-                or w.memlet.subset is None:
-            return False
-        if in_e.memlet.wcr is not None:
-            return False
-        # the writes must be disjoint across iterations — otherwise the
-        # fused consumer reads its iteration's private value where the
-        # sequential schedule delivered the LAST write. Sufficient
-        # condition for an injective index map: every parameter indexes
-        # exactly one size-1 dimension, and no dimension mixes two
-        # parameters (t[i+j] collides; t[i:i+2] overlaps neighbors; a
-        # subset ignoring a param revisits locations).
-        pset = set(prod.params)
-        used_params = set()
-        for r in w.memlet.subset:
-            rsyms = (r.start.free_symbols | r.stop.free_symbols
-                     | r.step.free_symbols)
-            if (rsyms & pset) and not r.is_index():
+        for member in members:
+            if not self._member_legal(sdfg, st, member, px, ce, plan):
                 return False
-            dim_params = r.start.free_symbols & pset
-            if len(dim_params) > 1 or dim_params & used_params:
-                return False
-            used_params |= dim_params
-        if used_params != pset:
-            return False
-        # every consumer read must be the element the producer just wrote
-        r_edges = [e for e in st.out_edges(ce) if e.memlet.data == t]
-        if not r_edges:
-            return False
-        for e in r_edges:
-            if e.memlet.wcr is not None or e.memlet.dynamic \
-                    or e.memlet.subset is None:
-                return False
-            if e.memlet.subset.subs(ren) != w.memlet.subset:
-                return False
+        tset = {m.data for m in members}
         # renaming must not capture a consumer-scope symbol that already
-        # means something else (a free symbol equal to a producer param)
+        # means something else (a free symbol equal to a fused-map param)
         cons_free = set()
         for e in st.out_edges(ce) + st.in_edges(cx):
             if e.memlet.subset is not None:
@@ -186,15 +296,15 @@ class MapFusion(Transformation):
                     cons_free |= (r.start.free_symbols | r.stop.free_symbols
                                   | r.step.free_symbols)
         cons_free -= set(cons.params)
-        if cons_free & set(prod.params):
+        if cons_free & set(plan["params"]):
             return False
         # fusing must not reorder accesses to other shared containers
         prod_writes = {e.memlet.data for e in st.in_edges(px)
-                       if e.memlet.data} - {t}
+                       if e.memlet.data} - tset
         prod_reads = {e.memlet.data for e in st.out_edges(px.entry)
                       if e.memlet.data}
         cons_reads = {e.memlet.data for e in st.out_edges(ce)
-                      if e.memlet.data} - {t}
+                      if e.memlet.data} - tset
         cons_writes = {e.memlet.data for e in st.in_edges(cx)
                        if e.memlet.data}
         if prod_writes & (cons_reads | cons_writes):
@@ -202,11 +312,12 @@ class MapFusion(Transformation):
         if cons_writes & prod_reads:
             return False
         # no consumer input may depend on the producer through a path
-        # OTHER than the fused intermediate (a third scope in between):
+        # OTHER than the fused intermediates (a third scope in between):
         # rerouting those inputs to the fused entry would create a cycle
         import networkx as nx
+        member_set = set(members)
         for e in st.in_edges(ce):
-            if e.src is node:
+            if e.src in member_set:
                 continue
             if nx.has_path(st.graph, px, e.src):
                 return False
@@ -216,7 +327,6 @@ class MapFusion(Transformation):
     def apply_match(self, sdfg: SDFG, match: Dict):
         st: State = match["state"]
         node: AccessNode = match["node"]
-        t = node.data
         in_e = st.in_edges(node)[0]
         px: MapExit = in_e.src
         pe: MapEntry = px.entry
@@ -225,7 +335,26 @@ class MapFusion(Transformation):
         cons = ce.map
         cx = next(n for n in st.nodes
                   if isinstance(n, MapExit) and n.entry is ce)
-        ren = _param_renaming(prod, cons)
+        plan = range_equivalence(prod, cons, sdfg.symbol_values)
+        ren = plan["ren"]
+        members = _group(st, px, ce)
+        tset = {m.data for m in members}
+
+        # adopt the consumer's tile structure on retiled producer dims
+        if plan["prod_repl"]:
+            prod.params = list(plan["params"])
+            prod.ranges = list(plan["ranges"])
+            if plan["tiling"]:
+                prod.annotations.setdefault("tiling", {}).update(
+                    {q: info for q, info in plan["tiling"].items()
+                     if q in prod.params})
+            scopes0 = st.scope_children()
+            nodes = {pe, px} | set(scopes0.get(pe, []))
+            for e in st.edges:
+                if e.src in nodes or e.dst in nodes:
+                    if e.memlet.subset is not None:
+                        e.memlet.subset = e.memlet.subset.subs(
+                            plan["prod_repl"])
 
         def rn(memlet: Memlet) -> Memlet:
             if ren and memlet.subset is not None:
@@ -238,20 +367,26 @@ class MapFusion(Transformation):
         scopes = st.scope_children()
         cons_inner = set(_scope_tasklets(st, scopes, ce))
 
-        # the producer tasklet that computes t, and its output connector
-        w_edge = next(e for e in st.in_edges(px) if e.memlet.data == t)
-        writer, writer_conn = w_edge.src, w_edge.src_conn
+        # the producer tasklet and output connector behind each member
+        writer_of: Dict[str, Tuple] = {}
+        w_edges = []
+        for member in members:
+            w = self._write_edge(st, px, member.data)
+            writer_of[member.data] = (w.src, w.src_conn)
+            w_edges.append(w)
 
         # outer sources feeding the consumer entry, and existing producer
         # entry inputs (dedupe key: (source node, entry connector))
         outer_src = {e.memlet.data: e.src for e in st.in_edges(ce)
-                     if e.memlet.data not in (None, t)}
+                     if e.memlet.data is not None
+                     and e.memlet.data not in tset}
         pe_in = {(e.src, e.dst_conn) for e in st.in_edges(pe)}
 
         # consumer-scope reads: through the fused entry, or — for the
-        # intermediate — straight off the producer tasklet
+        # intermediates — straight off their producer tasklets
         for e in list(st.out_edges(ce)):
-            if e.memlet.data == t:
+            if e.memlet.data in tset:
+                writer, writer_conn = writer_of[e.memlet.data]
                 st.add_edge(writer, writer_conn, e.dst, e.dst_conn,
                             rn(e.memlet))
                 continue
@@ -275,13 +410,21 @@ class MapFusion(Transformation):
         for e in list(st.out_edges(cx)):
             st.add_edge(px, e.src_conn, e.dst, e.dst_conn, e.memlet)
 
-        # drop the intermediate round-trip and the consumed scope shell
-        st.remove_edge(w_edge)
-        st.remove_node(node)
+        # drop the intermediate round-trips and the consumed scope shell
+        for w in w_edges:
+            st.remove_edge(w)
+        for member in members:
+            st.remove_node(member)
         st.remove_node(ce)
         st.remove_node(cx)
 
-        prod.label = f"{prod.label}+{cons.label}"
-        # the intermediate now lives on a per-iteration edge only: pure
+        def base(lbl: str) -> str:
+            return lbl[:-len("_tiled")] if lbl.endswith("_tiled") else lbl
+
+        prod.label = f"{base(prod.label)}+{base(cons.label)}"
+        if prod.annotations.get("tiling"):
+            prod.label += "_tiled"
+        # the intermediates now live on per-iteration edges only: pure
         # on-chip storage, out of the off-chip volume metric
-        sdfg.arrays[t].storage = StorageType.REG
+        for t in tset:
+            sdfg.arrays[t].storage = StorageType.REG

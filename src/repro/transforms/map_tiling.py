@@ -9,30 +9,42 @@ dimension), and the default tile sizes follow the TPU register layout the
 way the paper's Vectorization transform (§3.2.4) widens the FPGA data
 path: the minor (innermost) parameter tiles to the vector width recorded
 by ``Vectorization`` (``sdfg.metadata['vector_width']``, default 128
-lanes), the next parameter to 8 sublanes. Non-divisible extents are
-remainder-safe: the tile counter ranges over ``ceil(n / tile)`` blocks and
-the grid code generator masks the partial final block (the structural
-interpreter enumerates only valid lattice points).
+lanes), the next parameter to the **dtype-aware sublane count** (fp32 ->
+8, bf16/fp16 -> 16, int8/fp8 -> 32 — the narrowest container accessed by
+the scope wins, falling back to the Vectorization-recorded
+``sublane_width``). Non-divisible extents are remainder-safe: the tile
+counter ranges over ``ceil(n / tile)`` blocks and the grid code generator
+masks the partial final block (the structural interpreter enumerates only
+valid lattice points).
 
 Tiled maps are annotated with the tile structure: ``annotations['tiling']``
 maps each intra-tile parameter to
-``{"tile", "counter", "extent", "blocks"}``. The Pallas grid code
-generator (``GridConversionPass`` + ``pallas_backend``) consumes it to
-derive BlockSpec block shapes: intra-tile parameters widen memlet index
+``{"tile", "counter", "extent", "blocks", "start"}``. The Pallas grid
+code generator (``GridConversionPass`` + ``pallas_backend``) consumes it
+to derive BlockSpec block shapes: intra-tile parameters widen memlet index
 dimensions into VMEM-resident blocks while tile-counter parameters become
 grid dimensions. The annotation — not the ``_tiled`` label suffix, which
 is purely cosmetic — is also what makes the transformation idempotent, so
 fuse-after-tile and per-dimension re-tiling compose.
+
+``range_equivalence`` is the annotation-aware iteration-space matcher
+``MapFusion`` consults so that tiling and fusion commute: a tiled
+producer matches an untiled consumer over the same underlying extent
+(the consumer parameter renames onto ``start + counter*tile + intra``),
+two maps tiled with the same annotation match pair-for-pair, and an
+untiled producer facing a tiled consumer is retiled in place with the
+consumer's tile structure.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
-from ..core.dtypes import ScheduleType, TPU_LANES, TPU_SUBLANES
+from ..core.dtypes import (ScheduleType, TPU_LANES, TPU_SUBLANES,
+                           sublanes_for_bytes)
 from ..core.memlet import Range
-from ..core.sdfg import MapEntry, SDFG
-from ..core.symbolic import sym
+from ..core.sdfg import Array, MapEntry, SDFG
+from ..core.symbolic import Expr, sym
 from .base import Transformation
 
 #: schedules whose maps tile (grid-eligible schedules; UNROLLED / MESH
@@ -72,29 +84,182 @@ def _choose_tile(n: int, preferred: int) -> Optional[int]:
     return preferred                  # ceil-division, masked partial block
 
 
+# ---------------------------------------------------------------------------
+# Annotation-aware iteration-space equivalence (MapFusion support)
+# ---------------------------------------------------------------------------
+
+
+def _logical_dims(m) -> Optional[List[Tuple]]:
+    """Group a map's parameters into logical iteration dimensions: a
+    MapTiling'd (counter, intra) pair is ONE dimension over its original
+    extent; every other parameter is its own dimension. Entries are
+    ``("tiled", counter, intra, info)`` / ``("plain", param, range)``.
+    Returns None when the parameter order interleaves pairs in a way the
+    positional reconstruction cannot express."""
+    tiling = normalize_tiling(m.annotations.get("tiling"))
+    rich = {q: info for q, info in tiling.items()
+            if info.get("counter") in m.params
+            and info.get("extent") is not None and q in m.params}
+    counters = {info["counter"]: q for q, info in rich.items()}
+    dims, order, seen = [], [], set()
+    for p, r in zip(m.params, m.ranges):
+        if p in seen:
+            continue
+        if p in rich:
+            info = rich[p]
+            dims.append(("tiled", info["counter"], p, info))
+            seen |= {p, info["counter"]}
+            order += [info["counter"], p]
+        elif p in counters:
+            q = counters[p]
+            dims.append(("tiled", p, q, rich[q]))
+            seen |= {p, q}
+            order += [p, q]
+        else:
+            dims.append(("plain", p, r))
+            order.append(p)
+    if order != list(m.params):
+        return None   # non-adjacent pair members: positional form ambiguous
+    return dims
+
+
+def range_equivalence(prod, cons, env: Dict[str, int]) -> Optional[Dict]:
+    """Match the iteration spaces of a producer and consumer map up to
+    MapTiling splits, using ``annotations['tiling']`` as the contract.
+
+    Returns None when the spaces differ, else a plan::
+
+        {"ren":       consumer param -> Expr over final producer params,
+         "prod_repl": producer param -> Expr   (retile substitution; only
+                      non-empty when an untiled producer dim must adopt
+                      the consumer's tiling),
+         "params", "ranges": the fused map's final parameter list,
+         "sizes":     final param -> int range size (None if symbolic),
+         "tiling":    tiling annotation entries the fused map must carry}
+    """
+    pdims, cdims = _logical_dims(prod), _logical_dims(cons)
+    if pdims is None or cdims is None or len(pdims) != len(cdims):
+        return None
+    ren: Dict[str, Expr] = {}
+    prod_repl: Dict[str, Expr] = {}
+    params: List[str] = []
+    ranges: List[Range] = []
+    tiling: Dict[str, Dict] = {}
+    plain_pairs = []
+    taken = set(prod.params)
+
+    def _static(e) -> Optional[int]:
+        try:
+            return int(Expr.wrap(e).evaluate(env))
+        except Exception:
+            return None
+
+    def _info_nums(info) -> Optional[Tuple[int, int, int, int]]:
+        start = info.get("start", 0)
+        if start is None:
+            return None
+        try:
+            return (int(info["tile"]), int(info["extent"]),
+                    int(info["blocks"]), int(start))
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def _fresh(name: str) -> str:
+        while name in taken:
+            name += "_f"
+        taken.add(name)
+        return name
+
+    for pd, cd in zip(pdims, cdims):
+        if pd[0] == "plain" and cd[0] == "plain":
+            _, pp, pr = pd
+            _, cp, cr = cd
+            if cp != pp:
+                ren[cp] = Expr.sym(pp)
+            plain_pairs.append((pr, cr))
+            params.append(pp)
+            ranges.append(pr)
+        elif pd[0] == "tiled" and cd[0] == "tiled":
+            _, pctr, pq, pinfo = pd
+            _, cctr, cq, cinfo = cd
+            pn, cn = _info_nums(pinfo), _info_nums(cinfo)
+            if pn is None or cn is None or pn != cn:
+                return None
+            if cctr != pctr:
+                ren[cctr] = Expr.sym(pctr)
+            if cq != pq:
+                ren[cq] = Expr.sym(pq)
+            params += [pctr, pq]
+            ranges += [Range.make(0, pn[2]), Range.make(0, pn[0])]
+            tiling[pq] = dict(pinfo)
+        elif pd[0] == "tiled":
+            # tiled producer, untiled consumer: the consumer parameter is
+            # the composed producer index
+            _, pctr, pq, pinfo = pd
+            _, cp, cr = cd
+            pn = _info_nums(pinfo)
+            cs, csz, cst = _static(cr.start), _static(cr.size), \
+                _static(cr.step)
+            if pn is None or None in (cs, csz, cst):
+                return None
+            if cst != 1 or cs != pn[3] or csz != pn[1]:
+                return None
+            taken |= {pctr, pq}
+            ren[cp] = (Expr.const(pn[3]) + Expr.sym(pctr) * pn[0]
+                       + Expr.sym(pq))
+            params += [pctr, pq]
+            ranges += [Range.make(0, pn[2]), Range.make(0, pn[0])]
+            tiling[pq] = dict(pinfo)
+        else:
+            # untiled producer, tiled consumer: retile the producer in
+            # place with the consumer's tile structure
+            _, pp, pr = pd
+            _, cctr, cq, cinfo = cd
+            cn = _info_nums(cinfo)
+            ps, psz, pst = _static(pr.start), _static(pr.size), \
+                _static(pr.step)
+            if cn is None or None in (ps, psz, pst):
+                return None
+            if pst != 1 or ps != cn[3] or psz != cn[1]:
+                return None
+            taken.discard(pp)         # pp is being replaced: its name frees up
+            nctr, nq = _fresh(cctr), _fresh(cq)
+            prod_repl[pp] = (Expr.const(cn[3]) + Expr.sym(nctr) * cn[0]
+                             + Expr.sym(nq))
+            if cctr != nctr:
+                ren[cctr] = Expr.sym(nctr)
+            if cq != nq:
+                ren[cq] = Expr.sym(nq)
+            params += [nctr, nq]
+            ranges += [Range.make(0, cn[2]), Range.make(0, cn[0])]
+            tiling[nq] = {**cinfo, "counter": nctr}
+    for pr, cr in plain_pairs:
+        if cr.subs(ren) != pr:
+            return None
+    sizes = {p: _static(r.size) for p, r in zip(params, ranges)}
+    return {"ren": ren, "prod_repl": prod_repl, "params": params,
+            "ranges": ranges, "sizes": sizes, "tiling": tiling or None}
+
+
 class MapTiling(Transformation):
     """Split every eligible parameter of PIPELINED/DEVICE maps into a
     (counter, intra) pair. ``tile_size`` overrides the preferred *minor*
-    (lane) width of the default policy — like the defaults, it plans each
+    (lane) width of the default policy and ``second_size`` the preferred
+    second-minor (sublane) width — like the defaults, they plan each
     map exactly once (an already-annotated map is left alone, so fixpoint
     re-matches cannot whole-tile deliberately-skipped dims). Only
     ``tile_sizes`` — explicit per-parameter tiles — composes with earlier
     tilings, one dimension at a time."""
 
     def __init__(self, tile_size: int = None, map_label: str = None,
-                 tile_sizes: Dict[str, int] = None):
+                 tile_sizes: Dict[str, int] = None, second_size: int = None):
         self.tile_size = tile_size
         self.map_label = map_label
         self.tile_sizes = tile_sizes
+        self.second_size = second_size
 
     # ------------------------------------------------------------------
-    def _shared_dim_params(self, sdfg: SDFG, st, entry: MapEntry) -> set:
-        """Parameters that co-index a memlet dimension with another map
-        parameter (e.g. ``x[c*K + l]``): splitting one would put two tile
-        parameters in a single dimension, which BlockSpec factorization
-        cannot express — leave them whole."""
-        pset = set(entry.map.params)
-        shared = set()
+    def _scope_nodes(self, st, entry: MapEntry) -> set:
         scopes = st.scope_children()
         nodes = {entry}
         stack = list(scopes.get(entry, []))
@@ -105,6 +270,16 @@ class MapTiling(Transformation):
             nodes.add(nd)
             if isinstance(nd, MapEntry):
                 stack.extend(scopes.get(nd, []))
+        return nodes
+
+    def _shared_dim_params(self, sdfg: SDFG, st, entry: MapEntry,
+                          nodes: set) -> set:
+        """Parameters that co-index a memlet dimension with another map
+        parameter (e.g. ``x[c*K + l]``): splitting one would put two tile
+        parameters in a single dimension, which BlockSpec factorization
+        cannot express — leave them whole."""
+        pset = set(entry.map.params)
+        shared = set()
         for e in st.edges:
             if e.src not in nodes and e.dst not in nodes:
                 continue
@@ -116,9 +291,28 @@ class MapTiling(Transformation):
                     shared |= used
         return shared
 
+    def _scope_sublanes(self, sdfg: SDFG, st, entry: MapEntry,
+                        nodes: set) -> int:
+        """Dtype-aware sublane preference for one scope: the narrowest
+        Array element among the containers its memlets touch decides the
+        packing (fp32 -> 8, bf16 -> 16, int8 -> 32); scopes touching no
+        sized array fall back to the Vectorization-recorded default."""
+        min_bytes = None
+        for e in st.edges:
+            if e.src not in nodes and e.dst not in nodes:
+                continue
+            desc = sdfg.arrays.get(e.memlet.data) \
+                if e.memlet.data is not None else None
+            if isinstance(desc, Array) and not desc.is_stream and desc.shape:
+                b = desc.dtype.bytes
+                min_bytes = b if min_bytes is None else min(min_bytes, b)
+        if min_bytes is None:
+            return sdfg.metadata.get("sublane_width") or TPU_SUBLANES
+        return sublanes_for_bytes(min_bytes)
+
     def _plan(self, sdfg: SDFG, st, entry: MapEntry,
-              tile_size: int, tile_sizes: Dict[str, int]
-              ) -> Dict[str, int]:
+              tile_size: int, tile_sizes: Dict[str, int],
+              second_size: int = None) -> Dict[str, int]:
         """Per-parameter tile plan for one map (param -> tile size)."""
         m = entry.map
         tiling = normalize_tiling(m.annotations.get("tiling"))
@@ -140,7 +334,8 @@ class MapTiling(Transformation):
                 continue              # dynamic extent: cannot tile
         if not sizes:
             return {}
-        shared = self._shared_dim_params(sdfg, st, entry)
+        nodes = self._scope_nodes(st, entry)
+        shared = self._shared_dim_params(sdfg, st, entry, nodes)
         candidates = [p for p in m.params if p in sizes and p not in shared]
         if not candidates:
             return {}
@@ -151,6 +346,7 @@ class MapTiling(Transformation):
                     plan[p] = max(1, min(int(tile_sizes[p]), sizes[p]))
             return plan
         lanes = tile_size or sdfg.metadata.get("vector_width") or TPU_LANES
+        sublanes = second_size or self._scope_sublanes(sdfg, st, entry, nodes)
         minor = candidates[-1]
         if len(m.params) == 1:
             # a 1-D map only tiles when it yields >= 2 blocks (a whole-dim
@@ -163,8 +359,8 @@ class MapTiling(Transformation):
                 plan[minor] = t
             if len(candidates) >= 2:
                 second = candidates[-2]
-                if sizes[second] > TPU_SUBLANES:
-                    t2 = _choose_tile(sizes[second], TPU_SUBLANES)
+                if sizes[second] > sublanes:
+                    t2 = _choose_tile(sizes[second], sublanes)
                     if t2 is not None:
                         plan[second] = t2
         return {p: t for p, t in plan.items() if t and t >= 1}
@@ -172,10 +368,11 @@ class MapTiling(Transformation):
     # ------------------------------------------------------------------
     def find_matches(self, sdfg: SDFG, tile_size: int = None,
                      map_label: str = None, tile_sizes: Dict[str, int] = None,
-                     **kwargs):
+                     second_size: int = None, **kwargs):
         ts = tile_size if tile_size is not None else self.tile_size
         label = map_label or self.map_label
         explicit = tile_sizes if tile_sizes is not None else self.tile_sizes
+        second = second_size if second_size is not None else self.second_size
         for st in sdfg.states:
             for node in st.nodes:
                 if not isinstance(node, MapEntry):
@@ -185,7 +382,7 @@ class MapTiling(Transformation):
                     continue
                 if m.schedule not in _TILABLE:
                     continue
-                plan = self._plan(sdfg, st, node, ts, explicit)
+                plan = self._plan(sdfg, st, node, ts, explicit, second)
                 if plan:
                     yield {"state": st, "entry": node, "plan": plan}
 
@@ -204,27 +401,23 @@ class MapTiling(Transformation):
             n = int(r.size.evaluate(env))
             blocks = math.ceil(n / ts)
             lo = r.start
+            try:
+                start = int(lo.evaluate(env))
+            except Exception:
+                start = None          # symbolic start: fusion equivalence
+                                      # across this split is refused
             pt, pi = f"{p}_tile", f"{p}_in"
             new_params += [pt, pi]
             new_ranges += [Range.make(0, blocks), Range.make(0, ts)]
             ann[pi] = {"tile": ts, "counter": pt, "extent": n,
-                       "blocks": blocks}
+                       "blocks": blocks, "start": start}
             # rewrite memlets in the scope: p -> lo + p_tile*ts + p_in
             repl[p] = lo + sym(pt) * ts + sym(pi)
         m.params = new_params
         m.ranges = new_ranges
         if not m.label.endswith("_tiled"):
             m.label += "_tiled"
-        scopes = st.scope_children()
-        stack = list(scopes.get(entry, []))
-        nodes = {entry} | set(stack)
-        while stack:
-            nd = stack.pop()
-            if isinstance(nd, MapEntry):
-                for child in scopes.get(nd, []):
-                    if child not in nodes:
-                        nodes.add(child)
-                        stack.append(child)
+        nodes = self._scope_nodes(st, entry)
         for e in st.edges:
             if e.src in nodes or e.dst in nodes:
                 if e.memlet.subset is not None:

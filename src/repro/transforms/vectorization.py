@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Dict
 
-from ..core.dtypes import TPU_LANES
+from ..core.dtypes import TPU_LANES, sublanes_for_bytes
 from ..core.sdfg import Array, SDFG, Scalar, Stream
 from .base import Transformation
 
@@ -29,11 +29,14 @@ class Vectorization(Transformation):
         w = match["width"]
         sdfg.metadata["vector_width"] = w
         env = sdfg.symbol_values
+        min_bytes = None
         for name, desc in sdfg.arrays.items():
             if isinstance(desc, (Scalar, Stream)) or not isinstance(desc, Array):
                 continue
             if not desc.shape:
                 continue
+            min_bytes = desc.dtype.bytes if min_bytes is None \
+                else min(min_bytes, desc.dtype.bytes)
             minor = desc.shape[-1]
             try:
                 if minor.evaluate(env) % w == 0:
@@ -41,3 +44,8 @@ class Vectorization(Transformation):
             except Exception:
                 # symbolic minor dim: assume divisible (checked at dry-run)
                 desc.vector_width = w
+        if min_bytes is not None:
+            # the dtype-aware sublane count MapTiling's second-dim default
+            # consults when a scope's own containers don't pin one
+            # (narrowest container wins: its packing needs the most rows)
+            sdfg.metadata["sublane_width"] = sublanes_for_bytes(min_bytes)

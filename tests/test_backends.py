@@ -108,3 +108,40 @@ def build_and_compile_generic(n, m):
     p.output("y", blas.gemv(A2, xh))
     p.output("yt", blas.gemv(A2, uh, trans=True))
     return p.finalize().compile("jnp", expansion_level="generic")
+
+
+def test_dynamic_stride_memlets_fall_back_to_sequential():
+    """A subset whose STEP rides a map parameter used to crash the whole
+    compile with NotImplementedError out of read_memlet; it must degrade
+    to the sequential structural interpreter on both backends, and the
+    pallas pipeline must record the scope in grid_fallbacks."""
+    import jax.numpy as jnp
+
+    from repro.core.memlet import Memlet, Range, Subset
+    from repro.core.sdfg import SDFG
+    from repro.core.symbolic import sym
+    from repro.pipeline import lower
+
+    n = 8
+    s = SDFG("dynstride")
+    s.add_array("x", (2 * n,), "float32")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    # read x[0 : 2n : i+1] — a per-iteration stride; sum it into out[i]
+    st.add_mapped_tasklet(
+        "dyn", {"i": (0, n)},
+        inputs={"v": Memlet.simple(
+            "x", Subset([Range.make(0, 2 * n, i + 1)]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda v: jnp.sum(v))
+    x = np.random.default_rng(20).standard_normal(2 * n).astype(np.float32)
+    ref = np.array([x[0:2 * n:k + 1].sum() for k in range(n)],
+                   dtype=np.float32)
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-5)
+    cp = lower(s).compile("pallas", cache=None)
+    assert cp.report["grid_kernels"] == []
+    assert any("strided" in reason or "stride" in reason
+               for _, reason in cp.report["grid_fallbacks"])
+    np.testing.assert_allclose(np.asarray(cp(x=x)["out"]), ref, rtol=1e-5)

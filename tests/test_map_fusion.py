@@ -1,7 +1,8 @@
 """MapFusion: legality (refusals), semantics (fused == unfused), the
-off-chip-volume payoff, and the acceptance path — a producer->consumer
-map pair compiling to ONE Pallas grid kernel with the intermediate held
-in-kernel."""
+off-chip-volume payoff, and the acceptance paths — producer DAGs
+(multi-producer, multi-intermediate, scalar intermediates,
+fuse-across-tiling) compiling to ONE Pallas grid kernel with every
+intermediate held in-kernel."""
 import numpy as np
 import pytest
 
@@ -15,7 +16,7 @@ from repro.frontends.api import Program
 from repro.pipeline import (ExpandLibraryNodesPass, GridConversionPass,
                             MapFusionPass, MapTilingPass, PassManager,
                             SetExpansionPreferencePass, lower)
-from repro.transforms import DeviceOffload, MapFusion
+from repro.transforms import DeviceOffload, MapFusion, MapTiling
 
 
 def _pair_sdfg(n=64, cons_params=None, wcr=None, offset=0,
@@ -326,3 +327,331 @@ def test_fusion_cascades_over_elementwise_chain():
     assert len(c.report["grid_kernels"]) == 1
     np.testing.assert_allclose(np.asarray(c(x=x)["out"]),
                                (x * 2 + 3) ** 2, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# multi-producer DAGs, multi-intermediate groups, scalar intermediates
+# ---------------------------------------------------------------------------
+
+def _two_producer_sdfg(n=128):
+    """t1 = x+1 and t2 = y*2 from independent producers; out = t1+t2."""
+    s = SDFG("twoprod")
+    for nm in ("x", "y", "out"):
+        s.add_array(nm, (n,), "float32")
+    s.add_transient("t1", (n,), "float32")
+    s.add_transient("t2", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    _, _, e1 = st.add_mapped_tasklet(
+        "p1", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"w": Memlet.simple("t1", Subset.indices([i]))},
+        fn=lambda v: v + 1.0)
+    t1n = next(e.dst for e in st.out_edges(e1) if e.memlet.data == "t1")
+    _, _, e2 = st.add_mapped_tasklet(
+        "p2", {"j": (0, n)},
+        inputs={"v": Memlet.simple("y", Subset.indices([sym("j")]))},
+        outputs={"w": Memlet.simple("t2", Subset.indices([sym("j")]))},
+        fn=lambda v: v * 2.0)
+    t2n = next(e.dst for e in st.out_edges(e2) if e.memlet.data == "t2")
+    st.add_mapped_tasklet(
+        "c", {"k": (0, n)},
+        inputs={"u1": Memlet.simple("t1", Subset.indices([sym("k")])),
+                "u2": Memlet.simple("t2", Subset.indices([sym("k")]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([sym("k")]))},
+        fn=lambda u1, u2: u1 + u2, input_nodes={"t1": t1n, "t2": t2n})
+    return s
+
+
+def test_fusion_multi_producer_dag_single_kernel():
+    """A consumer fed by TWO independent producer exits fuses with both
+    (fixpoint), and the fused DAG compiles to ONE grid kernel on pallas
+    and one vmapped body on jnp."""
+    n = 128
+    s = _two_producer_sdfg(n)
+    assert s.apply(MapFusion) == 2
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    ref = (x + 1) + (y * 2)
+    cp = lower(s).compile("pallas", cache=None)
+    assert len(cp.report["grid_kernels"]) == 1
+    conv = cp.report["grid_converted"][0]
+    assert conv["tasklets"] == 3 and conv["in_kernel_values"] == 2
+    np.testing.assert_allclose(np.asarray(cp(x=x, y=y)["out"]), ref,
+                               rtol=1e-5)
+    s2 = _two_producer_sdfg(n)
+    s2.apply(MapFusion)
+    oj = np.asarray(lower(s2).compile("jnp", cache=None)(x=x, y=y)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-5)
+
+
+def _two_intermediate_sdfg(n=64, wcr_on_X=None):
+    """ONE producer writing TWO intermediates, both read by one consumer:
+    both must fuse in a single application (fusing only one would leave a
+    container path into the fused scope — a cycle)."""
+    s = SDFG("twoint")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    s.add_transient("t", (n,), "float32")
+    s.add_transient("X", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    _, _, px = st.add_mapped_tasklet(
+        "prod", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"t": Memlet.simple("t", Subset.indices([i])),
+                 "X": Memlet.simple("X", Subset.indices([i]), wcr=wcr_on_X)},
+        fn=lambda v: {"t": v + 1.0, "X": v * 2.0})
+    tn = next(e.dst for e in st.out_edges(px) if e.memlet.data == "t")
+    xn = next(e.dst for e in st.out_edges(px) if e.memlet.data == "X")
+    st.add_mapped_tasklet(
+        "cons", {"i": (0, n)},
+        inputs={"u": Memlet.simple("t", Subset.indices([i])),
+                "w2": Memlet.simple("X", Subset.indices([i]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda u, w2: u + w2, input_nodes={"t": tn, "X": xn})
+    return s
+
+
+def test_fusion_multi_intermediate_one_application():
+    n = 64
+    s = _two_intermediate_sdfg(n)
+    assert s.apply(MapFusion) == 1        # both intermediates, one apply
+    assert s.arrays["t"].storage is StorageType.REG
+    assert s.arrays["X"].storage is StorageType.REG
+    x = np.random.default_rng(8).standard_normal(n).astype(np.float32)
+    ref = (x + 1) + (x * 2)
+    for backend in ("jnp", "pallas"):
+        out = np.asarray(lower(s).compile(backend, cache=None)(x=x)["out"])
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_fusion_multi_intermediate_poisoned_by_wcr():
+    """When ANY intermediate between the pair is ineligible (here: wcr on
+    one of two), the whole pair refuses — fusing a subset would put a
+    cycle through the leftover container."""
+    assert _two_intermediate_sdfg(wcr_on_X="add").apply(MapFusion) == 0
+
+
+def _scalar_pair_sdfg(trips):
+    s = SDFG("scalpair")
+    s.add_array("x", (4,), "float32")
+    s.add_array("out", (4,), "float32")
+    s.add_scalar("sc", "float32", transient=True)
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    _, _, p = st.add_mapped_tasklet(
+        "p", {"i": (0, trips)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"w": Memlet.simple("sc")},
+        fn=lambda v: v + 1.0)
+    scn = next(e.dst for e in st.out_edges(p) if e.memlet.data == "sc")
+    st.add_mapped_tasklet(
+        "c", {"i": (0, trips)},
+        inputs={"u": Memlet.simple("sc")},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda u: u * 2.0, input_nodes={"sc": scn})
+    return s
+
+
+def test_fusion_scalar_intermediate():
+    """A Scalar-descriptor intermediate fuses under the same disjointness
+    rule as arrays: with no index dimensions, it is legal exactly when no
+    parameter revisits it (single-trip maps) — and refused otherwise
+    (the sequential schedule delivers the LAST write to every consumer
+    iteration, not the per-iteration value)."""
+    s = _scalar_pair_sdfg(trips=1)
+    assert s.apply(MapFusion) == 1
+    assert s.arrays["sc"].storage is StorageType.REG
+    x = np.arange(1, 5, dtype=np.float32)
+    out = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+    exp = np.zeros(4, np.float32)
+    exp[0] = (x[0] + 1) * 2
+    np.testing.assert_allclose(out, exp, rtol=1e-6)
+    assert _scalar_pair_sdfg(trips=4).apply(MapFusion) == 0
+
+
+# ---------------------------------------------------------------------------
+# fuse-across-tiling: range equivalence up to MapTiling splits
+# ---------------------------------------------------------------------------
+
+def _tileable_pair(n=512):
+    return _pair_sdfg(n=n, cons_params={"j": (0, n)})
+
+
+@pytest.mark.parametrize("tile_prod,tile_cons,fuses", [
+    (None, None, True),              # classic untiled pair
+    ({"i": 64}, None, True),         # tiled producer, untiled consumer
+    (None, {"j": 64}, True),         # untiled producer, tiled consumer
+    ({"i": 64}, {"j": 64}, True),    # both tiled, same tile
+    ({"i": 64}, {"j": 128}, False),  # tile mismatch refuses
+])
+def test_fusion_across_tiling_matrix(tile_prod, tile_cons, fuses):
+    """Range matching consults Map.annotations['tiling']: a tiled
+    producer and untiled consumer (or two maps tiled alike) over the same
+    underlying extent fuse; mismatched tiles refuse."""
+    n = 512
+    s = _tileable_pair(n)
+    if tile_prod:
+        s.apply(MapTiling, map_label="prod", tile_sizes=tile_prod)
+    if tile_cons:
+        s.apply(MapTiling, map_label="cons", tile_sizes=tile_cons)
+    assert (s.apply(MapFusion) == 1) is fuses
+    x = np.random.default_rng(9).standard_normal(n).astype(np.float32)
+    ref = (x + 1) * 2
+    for backend in ("jnp", "pallas"):
+        out = np.asarray(lower(s).compile(backend, cache=None)(x=x)["out"])
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_fusion_tiling_orders_commute():
+    """MapFusion -> MapTiling and MapTiling -> MapFusion must produce the
+    same fused kernel set (same labels, same single grid kernel)."""
+    def compile_order(order):
+        passes = [SetExpansionPreferencePass(("generic",)),
+                  ExpandLibraryNodesPass()]
+        if order == "fuse_first":
+            passes += [MapFusionPass(), MapTilingPass()]
+        else:
+            passes += [MapTilingPass(), MapFusionPass()]
+        passes.append(GridConversionPass())
+        return lower(_tileable_pair(512)).compile(
+            "pallas", pipeline=PassManager(passes, name=order), cache=None)
+
+    ft, tf = compile_order("fuse_first"), compile_order("tile_first")
+    assert ft.report["grid_kernels"] == tf.report["grid_kernels"]
+    assert len(ft.report["grid_kernels"]) == 1
+    x = np.random.default_rng(10).standard_normal(512).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(ft(x=x)["out"]),
+                               np.asarray(tf(x=x)["out"]), rtol=1e-6)
+
+
+def _three_scope_sdfg(n=32, s_transient=True):
+    """m1 writes t1 AND a second container S; m2 consumes t1; m3 reads
+    t2 (from m2) and S."""
+    s = SDFG("threescope")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    for nm in ("t1", "t2"):
+        s.add_transient(nm, (n,), "float32")
+    if s_transient:
+        s.add_transient("S", (n,), "float32")
+    else:
+        s.add_array("S", (n,), "float32")     # program output: not fusible
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    _, _, e1 = st.add_mapped_tasklet(
+        "m1", {"i": (0, n)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"t1": Memlet.simple("t1", Subset.indices([i])),
+                 "S": Memlet.simple("S", Subset.indices([i]))},
+        fn=lambda v: {"t1": v + 1.0, "S": v * 3.0})
+    t1n = next(e.dst for e in st.out_edges(e1) if e.memlet.data == "t1")
+    sn = next(e.dst for e in st.out_edges(e1) if e.memlet.data == "S")
+    _, _, e2 = st.add_mapped_tasklet(
+        "m2", {"i": (0, n)},
+        inputs={"v": Memlet.simple("t1", Subset.indices([i]))},
+        outputs={"w": Memlet.simple("t2", Subset.indices([i]))},
+        fn=lambda v: v - 2.0, input_nodes={"t1": t1n})
+    t2n = next(e.dst for e in st.out_edges(e2) if e.memlet.data == "t2")
+    st.add_mapped_tasklet(
+        "m3", {"i": (0, n)},
+        inputs={"v": Memlet.simple("t2", Subset.indices([i])),
+                "s2": Memlet.simple("S", Subset.indices([i]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda v, s2: v + s2, input_nodes={"t2": t2n, "S": sn})
+    return s
+
+
+def test_fusion_shared_container_across_three_scopes():
+    """With S a non-transient output, m1+m2 fuse but m3 must stay out:
+    the fused scope writes the shared container m3 reads, and fusing m3
+    would put a container path (a cycle) through the fused scope. With S
+    transient and element-exact, all three scopes legally collapse — S
+    just joins the intermediate group."""
+    n = 32
+    x = np.random.default_rng(11).standard_normal(n).astype(np.float32)
+    ref = ((x + 1) - 2) + x * 3
+
+    s = _three_scope_sdfg(n, s_transient=False)
+    assert s.apply(MapFusion) == 1        # m1+m2 only; m3 stays out
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 2
+    for backend in ("jnp", "pallas"):
+        out = lower(s).compile(backend, cache=None)(x=x)
+        np.testing.assert_allclose(np.asarray(out["out"]), ref, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out["S"]), x * 3, rtol=1e-5)
+
+    s = _three_scope_sdfg(n, s_transient=True)
+    assert s.apply(MapFusion) == 2        # S rides the t2 group
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+    for backend in ("jnp", "pallas"):
+        out = np.asarray(lower(s).compile(backend, cache=None)(x=x)["out"])
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the paper DAGs as single grid kernels
+# ---------------------------------------------------------------------------
+
+def _chain_pipeline(order="fuse_first"):
+    passes = [SetExpansionPreferencePass(("accumulate", "generic")),
+              ExpandLibraryNodesPass()]
+    if order == "fuse_first":
+        passes += [MapFusionPass(), MapTilingPass()]
+    else:
+        passes += [MapTilingPass(), MapFusionPass()]
+    passes.append(GridConversionPass())
+    return PassManager(passes, name=f"chain_{order}")
+
+
+def test_gemver_chain_fuses_to_one_grid_kernel():
+    """Acceptance: gemver's ger->ger->gemv chain (accumulate gemv
+    expansion) lowers to a single pallas_call — with B1 and B2 held
+    in-kernel — in BOTH pipeline orders."""
+    from benchmarks.gemver import build_chain
+    n = 96
+    rng = np.random.default_rng(12)
+    d = {k: rng.standard_normal((n, n) if k == "A" else n).astype(np.float32)
+         for k in ("A", "u1", "v1", "u2", "v2", "xw")}
+    B = d["A"] + np.outer(d["u1"], d["v1"]) + np.outer(d["u2"], d["v2"])
+    ref = 1.1 * B @ d["xw"]
+    kernels = {}
+    for order in ("fuse_first", "tile_first"):
+        cp = lower(build_chain(n)).compile(
+            "pallas", pipeline=_chain_pipeline(order), cache=None)
+        kernels[order] = cp.report["grid_kernels"]
+        assert len(cp.report["grid_kernels"]) == 1
+        conv = cp.report["grid_converted"][0]
+        assert conv["tasklets"] == 3 and conv["in_kernel_values"] == 2
+        np.testing.assert_allclose(np.asarray(cp(**d)["w_out"]), ref,
+                                   rtol=1e-3, atol=1e-4)
+    assert kernels["fuse_first"] == kernels["tile_first"]
+    cj = lower(build_chain(n)).compile("jnp", cache=None)
+    np.testing.assert_allclose(np.asarray(cj(**d)["w_out"]), ref,
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_axpydot_two_producer_dot_single_kernel():
+    """Acceptance: a dot over TWO produced operands — both axpys fold
+    into the dot's grid kernel."""
+    from benchmarks.axpydot import build_two_producer
+    n = 2048
+    rng = np.random.default_rng(13)
+    a, b = np.float32(0.7), np.float32(-0.4)
+    x, y, u, v = (rng.standard_normal(n).astype(np.float32)
+                  for _ in range(4))
+    ref = np.dot((a * x + y).astype(np.float32),
+                 (b * u + v).astype(np.float32))
+    cp = lower(build_two_producer(n)).compile(
+        "pallas", pipeline=_accumulate_pipeline(fused=True), cache=None)
+    assert len(cp.report["grid_kernels"]) == 1
+    conv = cp.report["grid_converted"][0]
+    assert conv["tasklets"] == 3 and conv["in_kernel_values"] == 2
+    got = float(np.asarray(
+        cp(a=a, b=b, x=x, y=y, u=u, v=v)["result"]).ravel()[0])
+    np.testing.assert_allclose(got, ref, rtol=1e-4)

@@ -108,3 +108,69 @@ def test_strided_write_matches_numpy(n, start, step, wcr, seed):
     else:
         ref[sl] = vals
     np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.sampled_from([8, 33, 64]),
+       prods=hst.lists(hst.tuples(
+           hst.sampled_from(list(range(len(_OPS)))),   # producer body
+           hst.sampled_from(list(range(len(_OPS))))),  # second stage
+           min_size=1, max_size=3),
+       seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_random_multi_producer_dags_match_numpy(n, prods, seed):
+    """Random multi-producer DAGs: k independent producer chains (k in
+    1..3, each 1-2 maps deep) feeding ONE consumer that sums them. Every
+    scope must fuse into a single map, and both backends must match the
+    plain numpy composition."""
+    from repro.core.sdfg import MapEntry  # noqa: E402
+    k = len(prods)
+    s = SDFG("dagprop")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    feed_nodes, feed_names, total_maps = {}, [], 0
+    rng = np.random.default_rng(seed)
+    data = {}
+    for pi, (op1, op2) in enumerate(prods):
+        src = f"x{pi}"
+        s.add_array(src, (n,), "float32")
+        data[src] = rng.standard_normal(n).astype(np.float32)
+        t1 = f"t{pi}_0"
+        s.add_transient(t1, (n,), "float32")
+        _, _, ex = st.add_mapped_tasklet(
+            f"p{pi}a", {"i": (0, n)},
+            inputs={"v": Memlet.simple(src, Subset.indices([i]))},
+            outputs={"w": Memlet.simple(t1, Subset.indices([i]))},
+            fn=_OPS[op1])
+        node = next(e.dst for e in st.out_edges(ex) if e.memlet.data == t1)
+        total_maps += 1
+        t2 = f"t{pi}_1"
+        s.add_transient(t2, (n,), "float32")
+        _, _, ex2 = st.add_mapped_tasklet(
+            f"p{pi}b", {"i": (0, n)},
+            inputs={"v": Memlet.simple(t1, Subset.indices([i]))},
+            outputs={"w": Memlet.simple(t2, Subset.indices([i]))},
+            fn=_OPS[op2], input_nodes={t1: node})
+        node = next(e.dst for e in st.out_edges(ex2) if e.memlet.data == t2)
+        total_maps += 1
+        feed_nodes[t2] = node
+        feed_names.append(t2)
+    st.add_mapped_tasklet(
+        "consume", {"i": (0, n)},
+        inputs={f"u{pi}": Memlet.simple(nm, Subset.indices([i]))
+                for pi, nm in enumerate(feed_names)},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda **kw: sum(kw.values()),
+        input_nodes=feed_nodes)
+    total_maps += 1
+    assert s.apply(MapFusion) == total_maps - 1   # everything collapses
+    entries = [nd for st2 in s.states for nd in st2.nodes
+               if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+    ref = np.zeros(n, dtype=np.float32)
+    for pi, (op1, op2) in enumerate(prods):
+        ref = ref + _OPS[op2](_OPS[op1](data[f"x{pi}"]))
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(**data)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-4, atol=1e-5)
+    op_ = np.asarray(lower(s).compile("pallas", cache=None)(**data)["out"])
+    np.testing.assert_allclose(op_, ref, rtol=1e-4, atol=1e-5)

@@ -246,7 +246,9 @@ def test_gemver_grid_blocks_are_multidim():
                                            expansion_level="generic")
     fused = next(c for c in cp.report["grid_converted"]
                  if c["map"].startswith("ger0_map+ger1_map"))
-    assert fused["block_shape"] == [8, 128]       # sublane x lane aligned
+    # CPU-interpret calibrated defaults: 32-sublane x 64-lane blocks
+    assert fused["block_shape"] == [32, 64]
+    assert fused["block_shape"][-1] >= 8
     assert fused["bytes_per_step"] > 0
 
 
@@ -255,7 +257,7 @@ def test_stencil_grid_blocks_are_multidim():
     cp = lower(_star_sdfg(130, 130)).compile("pallas")
     assert cp.report["grid_kernels"] == ["star_tiled"]
     (conv,) = cp.report["grid_converted"]
-    assert conv["block_shape"] == [8, 128]
+    assert conv["block_shape"] == [32, 64]        # calibrated defaults
     assert conv["block_shape"][-1] >= 8
 
 
@@ -266,6 +268,69 @@ def test_grid_decisions_recorded():
     cp = lower(_ew2d_sdfg(64, 256)).compile("pallas", cache=None)
     (dec,) = cp.report["grid_decisions"]
     assert dec["decision"] == "grid" and dec["reason"] is None
-    assert dec["block_shape"] == [8, 128]
-    assert dec["grid_steps"] == 16  # (64/8) x (256/128)
+    assert dec["block_shape"] == [32, 64]         # calibrated defaults
+    assert dec["grid_steps"] == 8   # (64/32) x (256/64)
     assert dec["vmem_bytes"] > 0 and dec["bytes_per_step"] > 0
+
+
+def test_sublane_default_is_dtype_aware():
+    """The second-dim tile default follows the container dtype's packing:
+    fp32 -> 8 sublanes, bf16 -> 16, int8 -> 32 (pallas guide tiling
+    table). The narrowest container accessed by the scope decides."""
+    from repro.core.dtypes import sublanes_for
+    assert sublanes_for("float32") == 8
+    assert sublanes_for("bfloat16") == 16
+    assert sublanes_for("float16") == 16
+    assert sublanes_for("int8") == 32
+    assert sublanes_for("float64") == 8
+
+    def ew(dtype):
+        n, m = 64, 512
+        s = SDFG("ewdt")
+        s.add_array("x", (n, m), dtype)
+        s.add_array("out", (n, m), dtype)
+        st = s.add_state("main", is_start=True)
+        i, j = sym("i"), sym("j")
+        st.add_mapped_tasklet(
+            "ew", {"i": (0, n), "j": (0, m)},
+            inputs={"a": Memlet.simple("x", Subset.indices([i, j]))},
+            outputs={"o": Memlet.simple("out", Subset.indices([i, j]))},
+            fn=lambda a: a + a)
+        return s
+
+    for dtype, sub in (("float32", 8), ("bfloat16", 16), ("int8", 32)):
+        s = ew(dtype)
+        assert s.apply(MapTiling) == 1
+        entry = next(nd for st in s.states for nd in st.nodes
+                     if hasattr(nd, "map") and "ew" in nd.map.label)
+        tiling = normalize_tiling(entry.map.annotations["tiling"])
+        assert tiling["i_in"]["tile"] == sub, (dtype, tiling)
+        assert tiling["j_in"]["tile"] == 128
+
+
+def test_vectorization_records_sublane_width():
+    """Vectorization records the dtype-aware sublane width alongside the
+    lane width, for scopes whose own containers can't pin one."""
+    from repro.core.dtypes import DType
+    s = _ew2d_sdfg(64, 256)
+    s.arrays["x"].dtype = DType("bfloat16")
+    s.apply(Vectorization, width=128)
+    assert s.metadata["vector_width"] == 128
+    assert s.metadata["sublane_width"] == 16   # narrowest container: bf16
+
+
+def test_calibrated_tile_table_feeds_default_pipeline():
+    """The committed-calibration tile table is consulted by the default
+    pallas pipeline (interpret mode); real hardware keeps the static
+    alignment defaults."""
+    assert GridConversionPass.default_tiles("pallas", True) == {
+        "minor": 64, "second": 32}
+    assert GridConversionPass.default_tiles("pallas", False) == {}
+    from repro.pipeline.passes import default_pipeline
+    pm = default_pipeline("pallas", interpret=True)
+    tiling_pass = next(p for p in pm if p.name == "MapTiling")
+    assert tiling_pass.kwargs["tile_size"] == 64
+    assert tiling_pass.kwargs["second_size"] == 32
+    pm2 = default_pipeline("pallas", interpret=False)
+    tiling_pass2 = next(p for p in pm2 if p.name == "MapTiling")
+    assert tiling_pass2.kwargs["tile_size"] is None
