@@ -28,13 +28,18 @@ import re
 import statistics
 import sys
 
-MODULES = ("axpydot", "gemver", "stencil")
+MODULES = ("axpydot", "gemver", "stencil", "serve")
 REQUIRED = {
     "gemver": ("gemver_grid_fused_ms", "gemver_grid_untiled_ms",
                "gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),
     "stencil": ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
     "axpydot": ("axpydot_grid_fused_ms", "axpydot_grid_untiled_ms",
                 "axpydot_dag_fused_ms"),
+    # serving rows present at every problem size (--small and full)
+    "serve": tuple(f"serve_{a}_b{b}_{kind}_tps"
+                   for a in ("starcoder2_3b", "gemma3_4b", "rwkv6_7b")
+                   for b in (1, 8)
+                   for kind in ("baseline", "compiled")),
 }
 #: (tiled entry, 1-element-block entry) measured at the same size
 TILED_BEATS_UNTILED = (
@@ -130,8 +135,18 @@ def main() -> int:
                 errors.append(f"{name}: block shape {dims} is not a "
                               f"multi-dim lane-aligned block")
 
+    # serving: the compiled decode step must actually contain Pallas grid
+    # kernels (the per-layer attention converts) in at least one bucket
+    if "serve" in cur:
+        if not any(e.get("grid_kernels", 0) >= 1
+                   for e in cur["serve"].values()):
+            errors.append("serve: no entry records grid_kernels >= 1 — "
+                          "the compiled decode step converted no "
+                          "attention grid kernels")
+
     if args.baseline:
         pairs = []
+        tps_pairs = []
         for mod in cur:
             bpath = os.path.join(args.baseline, f"BENCH_{mod}.json")
             if not os.path.exists(bpath):
@@ -139,11 +154,12 @@ def main() -> int:
             base = _load(bpath)
             for name, e in cur[mod].items():
                 b = base.get(name)
-                if (b is None or not name.endswith("_ms")
-                        or e.get("small") != b.get("small")
-                        or b["value"] < args.min_ms):
+                if b is None or e.get("small") != b.get("small"):
                     continue
-                pairs.append((name, e["value"], b["value"]))
+                if name.endswith("_tps"):
+                    tps_pairs.append((name, e["value"], b["value"]))
+                elif name.endswith("_ms") and b["value"] >= args.min_ms:
+                    pairs.append((name, e["value"], b["value"]))
         if pairs:
             med = statistics.median(c / b for _, c, b in pairs)
             norm = min(max(med, 0.5), 4.0)
@@ -157,6 +173,20 @@ def main() -> int:
                   f"median ratio {med:.2f}")
         else:
             print("regression check: no comparable baseline entries")
+        if tps_pairs:
+            # throughput rows: higher is better, so the slowdown ratio and
+            # the machine-speed normalization both invert
+            med = statistics.median(b / c for _, c, b in tps_pairs)
+            norm = min(max(med, 0.5), 4.0)
+            for name, c, b in tps_pairs:
+                if b / c > args.factor * norm:
+                    errors.append(
+                        f"{name}: {c:.0f} tok/s vs baseline {b:.0f} tok/s "
+                        f"is a {b / c:.2f}x throughput regression (> "
+                        f"{args.factor}x after median normalization "
+                        f"{norm:.2f})")
+            print(f"throughput check: {len(tps_pairs)} matched entries, "
+                  f"median ratio {med:.2f}")
 
     for e in errors:
         print(f"BENCH CHECK FAILED: {e}", file=sys.stderr)

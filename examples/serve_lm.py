@@ -1,62 +1,81 @@
-"""Serving driver: batched greedy decoding with a KV cache.
+"""Serving driver: continuous batching over the compiled decode step.
 
-Run: PYTHONPATH=src python examples/serve_lm.py --arch granite-3-2b --tokens 64
+Run: PYTHONPATH=src python examples/serve_lm.py --arch starcoder2-3b
 (uses the reduced config on CPU; the full config is exercised by the
 multi-pod dry-run.)
+
+Requests with mixed prompt/output lengths stream through the
+:class:`repro.serving.Scheduler`: chunked prefill, paged KV cache with a
+per-slot block table, and one (B, ctx)-bucketed SDFG-compiled decode
+step per iteration — the per-layer attention runs as Pallas grid
+kernels inside it. Prints per-request latency, the compiled-step report
+(grid kernels vs fallbacks), and the compilation-cache hit rate.
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.pipeline.cache import COMPILATION_CACHE
+from repro.serving import Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=64)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=24,
+                    help="max new tokens per request")
+    ap.add_argument("--max-model-len", type=int, default=256)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    max_seq = args.prompt_len + args.tokens
-    cache = model.init_cache(args.batch, max_seq)
+
+    n_pages = args.slots * (args.max_model_len // args.page_size) + 1
+    sched = Scheduler(model, params, max_slots=args.slots,
+                      page_size=args.page_size, n_pages=n_pages,
+                      max_model_len=args.max_model_len)
 
     rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab,
-                                      (args.batch, args.prompt_len),
-                                      dtype=np.int32))
+    for _ in range(args.requests):  # mixed lengths: continuous batching
+        plen = int(rng.integers(4, 32))
+        new = int(rng.integers(4, args.tokens + 1))
+        sched.submit(list(rng.integers(0, cfg.vocab, plen)), new)
 
-    step = jax.jit(model.decode_step, donate_argnums=(1,))
-
-    # prefill token-by-token (chunked prefill is the production path)
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, prompt[:, t:t + 1])
-
-    # batched greedy decode
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out_tokens = [tok]
     t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        logits, cache = step(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
+    reqs = sched.run()
+    wall = time.perf_counter() - t0
+    sched.check_invariants()
 
-    seq = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    tps = args.batch * (args.tokens - 1) / dt
-    print(f"arch={args.arch} (reduced) batch={args.batch}")
-    print(f"generated {seq.shape[1]} tokens/seq; throughput {tps:.1f} tok/s "
-          f"(CPU)")
-    print("first sequence:", seq[0][:16], "...")
+    total = sum(len(r.tokens_out) for r in reqs)
+    print(f"arch={args.arch} (reduced) slots={args.slots} "
+          f"requests={args.requests}")
+    print(f"{total} tokens in {wall:.2f}s -> {total / wall:.1f} tok/s "
+          f"({sched.n_steps} decode steps)\n")
+    print(f"{'rid':>4} {'prompt':>7} {'new':>4} {'ttft_ms':>8} "
+          f"{'p50_ms':>7} {'p99_ms':>7}")
+    for r in reqs:
+        steady = r.token_times[1:] or r.token_times
+        print(f"{r.rid:>4} {len(r.prompt):>7} {len(r.tokens_out):>4} "
+              f"{r.ttft * 1e3:>8.1f} "
+              f"{np.percentile(steady, 50) * 1e3:>7.2f} "
+              f"{np.percentile(steady, 99) * 1e3:>7.2f}")
+
+    print("\ncompiled (B, ctx) buckets:", sorted(sched.compiler._steps))
+    for (B, ctx), step in sorted(sched.compiler._steps.items()):
+        rep = step.report
+        print(f"  ({B}, {ctx}): grid_kernels={rep.get('grid_kernels')} "
+              f"fallbacks={rep.get('grid_fallbacks')}")
+    stats = COMPILATION_CACHE.stats
+    print(f"compilation cache: {stats['hits']} hits / "
+          f"{stats['misses']} misses ({stats['entries']} entries)")
 
 
 if __name__ == "__main__":

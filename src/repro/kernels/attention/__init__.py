@@ -1,4 +1,5 @@
 from . import ops  # noqa: F401
+from .decode import decode_attention
 from .ops import attention_ref, flash_attention
 
-__all__ = ["attention_ref", "flash_attention", "ops"]
+__all__ = ["attention_ref", "decode_attention", "flash_attention", "ops"]

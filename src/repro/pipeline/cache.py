@@ -13,18 +13,45 @@ instances.
 """
 from __future__ import annotations
 
+import os
 import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Optional
 
 _MISSING = object()
 
+#: env var overriding the default LRU capacity. Serving sweeps many
+#: (batch, context) shape buckets; a deployment holding more live buckets
+#: than the default can raise this without code changes.
+CACHE_SIZE_ENV = "REPRO_COMPILE_CACHE_SIZE"
+DEFAULT_MAX_ENTRIES = 128
+
+
+def _default_max_entries() -> int:
+    raw = os.environ.get(CACHE_SIZE_ENV)
+    if raw is None:
+        return DEFAULT_MAX_ENTRIES
+    try:
+        n = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{CACHE_SIZE_ENV}={raw!r} is not an integer") from None
+    if n < 1:
+        raise ValueError(f"{CACHE_SIZE_ENV} must be >= 1, got {n}")
+    return n
+
 
 class CompilationCache:
-    """Bounded LRU cache with hit/miss accounting."""
+    """Bounded LRU cache with hit/miss accounting.
 
-    def __init__(self, max_entries: int = 128):
-        self.max_entries = max_entries
+    Capacity: explicit ``max_entries`` wins; ``None`` defers to the
+    ``REPRO_COMPILE_CACHE_SIZE`` env var (read at construction time), then
+    to ``DEFAULT_MAX_ENTRIES``.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        self.max_entries = _default_max_entries() if max_entries is None \
+            else max_entries
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0

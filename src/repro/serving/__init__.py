@@ -1,0 +1,17 @@
+"""SDFG-compiled decode serving (ROADMAP: serve-heavy-traffic).
+
+Continuous batching (:class:`Scheduler`), paged KV cache
+(:class:`KVPagePool`), and the shape-bucketed compiled decode step
+(:class:`DecodeStepCompiler`). See ARCHITECTURE.md, 'Serving path'.
+"""
+from .compile import (CompiledDecodeStep, DecodeStepCompiler,
+                      attention_layer_shapes, decode_pipeline,
+                      flat_layer_specs, flatten_params, state_specs)
+from .pages import NULL_PAGE, KVPagePool, PageError
+from .scheduler import Request, Scheduler
+
+__all__ = [
+    "CompiledDecodeStep", "DecodeStepCompiler", "KVPagePool", "NULL_PAGE",
+    "PageError", "Request", "Scheduler", "attention_layer_shapes",
+    "decode_pipeline", "flat_layer_specs", "flatten_params", "state_specs",
+]

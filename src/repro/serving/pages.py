@@ -1,0 +1,126 @@
+"""Paged KV cache (KVPagePool): fixed-size pages + per-slot block tables.
+
+The pool owns, per attention layer, a pair of page arrays
+``(n_pages, page_size, Hkv, Dh)``; sequences own *pages*, not a
+contiguous cache slab, so evicting a request frees its pages for the
+next admission without reshaping any live batch array. Page 0 is a
+reserved **null page**: block-table rows of inactive/evicted slots are
+zero, so the compiled decode step's KV write for padding lanes lands on
+the null page and the gather for those lanes reads it — both are masked
+out downstream (the attention mask covers positions > pos, and padding
+lanes are dropped before sampling), so the null page may hold garbage.
+
+Allocation is two-phase so admission can never strand a running request:
+``reserve`` claims worst-case page counts at admit time (a counter, no
+page identities), and ``alloc`` later binds concrete pages as the
+sequence actually crosses page boundaries. ``available`` is
+free-minus-reserved; the scheduler admits against it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+NULL_PAGE = 0
+
+
+class PageError(RuntimeError):
+    """Pool invariant violation (double free, over-allocation...)."""
+
+
+class KVPagePool:
+    """Page accounting + per-attention-layer page storage.
+
+    ``layers`` maps flat layer index -> (n_kv_heads, head_dim) for every
+    attention layer of the model (non-attention layers hold no pages).
+    """
+
+    def __init__(self, layers: Dict[int, Tuple[int, int]], n_pages: int,
+                 page_size: int, dtype=jnp.bfloat16):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 null + data), "
+                             f"got {n_pages}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.dtype = jnp.dtype(dtype)
+        # page 0 is the null page and is never handed out
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._reserved = 0
+        self.k_pages: Dict[int, jnp.ndarray] = {}
+        self.v_pages: Dict[int, jnp.ndarray] = {}
+        for li, (hkv, dh) in layers.items():
+            shape = (n_pages, page_size, hkv, dh)
+            self.k_pages[li] = jnp.zeros(shape, self.dtype)
+            self.v_pages[li] = jnp.zeros(shape, self.dtype)
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages that can still be *reserved* by a new admission."""
+        return len(self._free) - self._reserved
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size) if n_tokens > 0 else 0
+
+    def reserve(self, n: int):
+        if n > self.available:
+            raise PageError(f"cannot reserve {n} pages: only "
+                            f"{self.available} available")
+        self._reserved += n
+
+    def unreserve(self, n: int):
+        if n > self._reserved:
+            raise PageError(f"unreserve({n}) exceeds reservation "
+                            f"{self._reserved}")
+        self._reserved -= n
+
+    def alloc(self, n: int = 1, reserved: bool = True) -> List[int]:
+        """Bind ``n`` concrete pages. With ``reserved`` (the scheduler
+        path) the pages come out of this request's prior reservation."""
+        if n > len(self._free):
+            raise PageError(f"out of pages: want {n}, free "
+                            f"{len(self._free)}")
+        if reserved:
+            self.unreserve(n)
+        elif n > self.available:
+            raise PageError(f"alloc({n}) would eat into reservations: "
+                            f"available {self.available}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]):
+        for p in pages:
+            if p == NULL_PAGE:
+                raise PageError("freeing the null page")
+            if not (0 < p < self.n_pages):
+                raise PageError(f"freeing unknown page {p}")
+            if p in self._free:
+                raise PageError(f"double free of page {p}")
+            self._free.append(p)
+
+    def stats(self) -> dict:
+        return {"n_pages": self.n_pages, "free": len(self._free),
+                "reserved": self._reserved, "available": self.available,
+                "page_size": self.page_size}
+
+    # -- storage --------------------------------------------------------
+    def write_prefill(self, li: int, pages: List[int], k, v):
+        """Scatter a prefilled (S, Hkv, Dh) K/V slab into ``pages``.
+        S is padded up to a whole number of pages (pad rows are past the
+        sequence position, hence masked at attention time)."""
+        ps = self.page_size
+        s = k.shape[0]
+        pad = len(pages) * ps - s
+        if pad < 0:
+            raise PageError(f"{len(pages)} pages cannot hold {s} tokens")
+        idx = jnp.asarray(pages, jnp.int32)
+        kp = jnp.pad(k, ((0, pad), (0, 0), (0, 0))).reshape(
+            len(pages), ps, *k.shape[1:]).astype(self.dtype)
+        vp = jnp.pad(v, ((0, pad), (0, 0), (0, 0))).reshape(
+            len(pages), ps, *v.shape[1:]).astype(self.dtype)
+        self.k_pages[li] = self.k_pages[li].at[idx].set(kp)
+        self.v_pages[li] = self.v_pages[li].at[idx].set(vp)

@@ -1,0 +1,325 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+Requests are admitted/evicted *between* compiled decode steps. Admission
+is reservation-based: a request enters only when a free slot exists and
+the pool can reserve its worst-case page count (prompt + max_new_tokens),
+so a running request can never be starved of pages mid-decode. Prefill is
+chunked — the prompt runs through ``model.decode_step`` in fixed-size
+chunks against a small dense scratch cache, then the K/V slab is
+scattered into freshly bound pages and the scratch is dropped; chunked
+and whole-prompt prefill agree bit-for-bit because ``decode_step`` masks
+by absolute position, not by chunk boundary.
+
+Each step runs one (B, ctx)-bucketed compiled SDFG step
+(:mod:`.compile`): B is the smallest bucket covering the highest occupied
+slot, ctx the smallest page-multiple bucket covering the longest live
+sequence. Padding lanes carry zeroed block-table rows (-> null page) and
+position 0; their logits are never sampled. Eviction frees the request's
+pages, returns its unused reservation, zeroes its block-table row, and
+the next admission reuses both the slot and the pages — no live batch
+array is ever reshaped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compile import (DecodeStepCompiler, attention_layer_shapes,
+                      flat_layer_specs, state_specs)
+from .pages import KVPagePool, PageError
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    # -- scheduler-owned runtime state --
+    slot: int = -1
+    pos: int = 0                      # next KV write position
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    reserved_left: int = 0
+    submit_time: float = 0.0
+    first_token_time: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.submit_time
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class Scheduler:
+    """Continuous batching + chunked prefill over compiled decode steps."""
+
+    def __init__(self, model, params, *, max_slots: int = 8,
+                 page_size: int = 16, n_pages: int = 64,
+                 max_model_len: int = 256, prefill_chunk: int = 8,
+                 cache_dtype="bfloat16",
+                 compiler: Optional[DecodeStepCompiler] = None,
+                 interpret: bool = True,
+                 dtype_aware_sublanes: bool = False, compile_cache=None):
+        if max_model_len % page_size:
+            raise ValueError("max_model_len must be a multiple of "
+                             f"page_size ({page_size}), got {max_model_len}")
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.page_size = page_size
+        self.max_model_len = max_model_len
+        self.prefill_chunk = prefill_chunk
+        self.pool = KVPagePool(attention_layer_shapes(model), n_pages,
+                               page_size, dtype=cache_dtype)
+        self.compiler = compiler or DecodeStepCompiler(
+            model, params, page_size=page_size, n_pages=n_pages,
+            cache_dtype=cache_dtype, interpret=interpret,
+            dtype_aware_sublanes=dtype_aware_sublanes, cache=compile_cache)
+        self.block_table = np.zeros(
+            (max_slots, max_model_len // page_size), np.int32)
+        self._sspecs = state_specs(model)
+        self.states: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros((max_slots,) + shape, dt)
+            for name, (li, shape, dt) in self._sspecs.items()}
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.last_logits = None
+        self._next_rid = 0
+        self._prefill_step = jax.jit(model.decode_step)
+        self.n_steps = 0
+
+    # -- submission / admission -----------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_model_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens >= "
+                             f"max_model_len {self.max_model_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, list(prompt), max_new_tokens, eos_id,
+                      submit_time=time.perf_counter())
+        self.queue.append(req)
+        return rid
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _try_admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue[0]
+            total_tokens = min(len(req.prompt) + req.max_new_tokens,
+                               self.max_model_len)
+            total_pages = self.pool.pages_for(total_tokens)
+            if total_pages > self.pool.available:
+                return
+            self.queue.popleft()
+            self.pool.reserve(total_pages)
+            self._admit(req, slot, total_pages)
+
+    def _admit(self, req: Request, slot: int, total_pages: int):
+        """Chunked prefill into a dense scratch cache, then scatter the
+        K/V slab into pages and install the request in its slot."""
+        model, params = self.model, self.params
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        L = len(req.prompt)
+        cache = model.init_cache(1, L, dtype=self.pool.dtype)
+        logits = None
+        i = 0
+        while i < L:
+            chunk = prompt[:, i:i + self.prefill_chunk]
+            logits, cache = self._prefill_step(params, cache, chunk)
+            i += chunk.shape[1]
+
+        n_prompt_pages = self.pool.pages_for(L)
+        pages = self.pool.alloc(n_prompt_pages)
+        req.pages = pages
+        req.reserved_left = total_pages - n_prompt_pages
+        self.block_table[slot, :len(pages)] = pages
+
+        for li, layer_cache in self._iter_layer_caches(cache):
+            if "k" in layer_cache:  # attention
+                self.pool.write_prefill(li, pages, layer_cache["k"][0, :L],
+                                        layer_cache["v"][0, :L])
+            else:  # recurrent state rows
+                for key, a in layer_cache.items():
+                    name = f"st{li}__{key}"
+                    self.states[name] = self.states[name].at[slot].set(a[0])
+
+        req.slot = slot
+        req.pos = L
+        self.slots[slot] = req
+        first = int(jnp.argmax(logits[0, -1]))
+        req.tokens_out.append(first)
+        req.first_token_time = time.perf_counter()
+        req.token_times.append(req.first_token_time - req.submit_time)
+        self._maybe_finish(req, first)
+
+    def _iter_layer_caches(self, cache):
+        """(flat layer index, per-layer cache dict) in execution order."""
+        pi_count = len(self.model.period_specs)
+        li = 0
+        for pp in range(self.model.n_periods):
+            for pi in range(pi_count):
+                yield li, jax.tree.map(lambda a: a[pp], cache["body"][pi])
+                li += 1
+        for c in cache["tail"]:
+            yield li, c
+            li += 1
+
+    # -- eviction ---------------------------------------------------------
+    def _maybe_finish(self, req: Request, last_token: int):
+        if (len(req.tokens_out) >= req.max_new_tokens
+                or (req.eos_id is not None and last_token == req.eos_id)
+                or req.pos >= self.max_model_len - 1):
+            self._finish(req)
+
+    def _finish(self, req: Request):
+        if req.pages:
+            self.pool.free(req.pages)
+        self.pool.unreserve(req.reserved_left)
+        req.reserved_left = 0
+        if req.slot >= 0:
+            self.block_table[req.slot, :] = 0
+            for name in self.states:
+                self.states[name] = self.states[name].at[req.slot].set(0)
+            self.slots[req.slot] = None
+        req.done = True
+        self.finished.append(req)
+
+    # -- decode ----------------------------------------------------------
+    def _buckets(self, active: List[Request]) -> tuple:
+        top_slot = max(r.slot for r in active)
+        B = min(_pow2_at_least(top_slot + 1), self.max_slots)
+        longest = max(r.pos + 1 for r in active)
+        pages = _pow2_at_least(self.pool.pages_for(longest))
+        ctx = min(pages * self.page_size, self.max_model_len)
+        return B, ctx
+
+    def step(self) -> List[Request]:
+        """Admit waiting requests, run one compiled decode step over all
+        active slots, sample, and evict finished requests. Returns the
+        requests that finished during this step."""
+        self._try_admit()
+        n_done = len(self.finished)
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return self.finished[n_done:]
+
+        for r in active:  # bind a fresh page when crossing a boundary
+            while len(r.pages) < self.pool.pages_for(r.pos + 1):
+                pg = self.pool.alloc(1)[0]
+                r.reserved_left -= 1
+                self.block_table[r.slot, len(r.pages)] = pg
+                r.pages.append(pg)
+
+        B, ctx = self._buckets(active)
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.tokens_out[-1]
+            positions[r.slot] = r.pos
+        n_bt = ctx // self.page_size
+
+        kwargs = dict(self.compiler.flat_weights)
+        kwargs["tokens"] = jnp.asarray(tokens)
+        kwargs["positions"] = jnp.asarray(positions)
+        kwargs["block_table"] = jnp.asarray(self.block_table[:B, :n_bt])
+        for li in attention_layer_shapes(self.model):
+            kwargs[f"kp{li}"] = self.pool.k_pages[li]
+            kwargs[f"vp{li}"] = self.pool.v_pages[li]
+        for name in self._sspecs:
+            kwargs[name] = self.states[name][:B]
+
+        step_fn = self.compiler.step_for(B, ctx)
+        t0 = time.perf_counter()
+        out = step_fn(kwargs)
+        logits = out["logits"]
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.n_steps += 1
+        self.last_logits = logits
+
+        for li in attention_layer_shapes(self.model):
+            self.pool.k_pages[li] = out[f"kp{li}"]
+            self.pool.v_pages[li] = out[f"vp{li}"]
+        for name in self._sspecs:
+            if B == self.max_slots:
+                # the full slice aliased (and donated) the master buffer
+                self.states[name] = out[name]
+            else:
+                self.states[name] = self.states[name].at[:B].set(out[name])
+
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        now = time.perf_counter()
+        for r in active:
+            t = int(next_tokens[r.slot])
+            r.pos += 1
+            r.tokens_out.append(t)
+            r.token_times.append(dt)
+            self._maybe_finish(r, t)
+        del now
+        return self.finished[n_done:]
+
+    def run(self, max_steps: int = 100000) -> List[Request]:
+        """Drive until every submitted request finishes."""
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slots):
+                break
+            self.step()
+        else:
+            raise RuntimeError(f"did not drain within {max_steps} steps")
+        return sorted(self.finished, key=lambda r: r.rid)
+
+    # -- invariants -------------------------------------------------------
+    def check_invariants(self):
+        """Page accounting + block-table consistency; raises PageError."""
+        live: List[int] = []
+        for r in self.slots:
+            if r is None:
+                continue
+            live.extend(r.pages)
+            row = self.block_table[r.slot]
+            if list(row[:len(r.pages)]) != r.pages:
+                raise PageError(f"block-table row of slot {r.slot} does "
+                                f"not match its pages: {row[:len(r.pages)]}"
+                                f" vs {r.pages}")
+            if any(row[len(r.pages):]):
+                raise PageError(f"stale block-table entries in slot "
+                                f"{r.slot}: {row}")
+        if 0 in live:
+            raise PageError("null page bound to a live request")
+        if len(set(live)) != len(live):
+            raise PageError(f"page bound to two live requests: {live}")
+        n_accounted = self.pool.num_free + len(live)
+        if n_accounted != self.pool.n_pages - 1:
+            raise PageError(f"page leak: {self.pool.num_free} free + "
+                            f"{len(live)} live != {self.pool.n_pages - 1}")
+        reserved = sum(r.reserved_left for r in self.slots if r is not None)
+        if reserved != self.pool._reserved:
+            raise PageError(f"reservation drift: pool {self.pool._reserved}"
+                            f" vs requests {reserved}")
+        for i, r in enumerate(self.slots):
+            if r is None and any(self.block_table[i]):
+                raise PageError(f"free slot {i} has a non-zero "
+                                "block-table row")

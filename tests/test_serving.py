@@ -1,0 +1,293 @@
+"""Serving subsystem: paged KV pool, continuous batching, compiled step.
+
+Covers the ISSUE-6 acceptance invariants: no page leaks and consistent
+block tables across admit/evict churn, chunked prefill == whole-prompt
+prefill bit-for-bit, the compiled (B, ctx)-bucketed decode step matching
+the uncompiled ``decode_step`` token for token (two attention configs +
+RWKV), grid conversion of the in-step attention, compilation-cache hits
+across repeated shape buckets, and the env-configurable cache capacity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.pipeline.cache import (CACHE_SIZE_ENV, CompilationCache,
+                                  _default_max_entries)
+from repro.serving import KVPagePool, PageError, Scheduler
+
+
+def _f32(cfg):
+    """Serving math must match decode_step bit-for-bit; fp32 activations
+    make argmax ties impossible to hit by rounding."""
+    return dataclasses.replace(cfg, activation_dtype="float32")
+
+
+def _model(arch: str, f32=True):
+    cfg = get_config(arch).reduced()
+    if f32:
+        cfg = _f32(cfg)
+    model = TransformerLM(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _reference_decode(model, params, prompts, new_tokens, max_model_len):
+    """Greedy decode through jax.jit(decode_step) on a dense cache."""
+    B = prompts.shape[0]
+    cache = model.init_cache(B, max_model_len)
+    step = jax.jit(model.decode_step)
+    logits, cache = step(params, cache, jnp.asarray(prompts, jnp.int32))
+    tokens = [[int(jnp.argmax(logits[b, -1]))] for b in range(B)]
+    for _ in range(new_tokens - 1):
+        toks = jnp.asarray([[t[-1]] for t in tokens], jnp.int32)
+        logits, cache = step(params, cache, toks)
+        for b in range(B):
+            tokens[b].append(int(jnp.argmax(logits[b, 0])))
+    return tokens, logits
+
+
+# ---------------------------------------------------------------------------
+# KVPagePool
+# ---------------------------------------------------------------------------
+class TestPagePool:
+    def _pool(self, n_pages=8, page_size=4):
+        return KVPagePool({0: (2, 8)}, n_pages, page_size)
+
+    def test_null_page_never_allocated(self):
+        pool = self._pool()
+        pages = pool.alloc(pool.num_free, reserved=False)
+        assert 0 not in pages
+        assert len(pages) == pool.n_pages - 1
+
+    def test_reserve_alloc_free_roundtrip(self):
+        pool = self._pool()
+        pool.reserve(3)
+        assert pool.available == 7 - 3
+        pages = pool.alloc(2)
+        assert pool._reserved == 1
+        pool.free(pages)
+        pool.unreserve(1)
+        assert pool.num_free == 7 and pool.available == 7
+
+    def test_overcommit_rejected(self):
+        pool = self._pool()
+        pool.reserve(5)
+        with pytest.raises(PageError):
+            pool.reserve(3)
+        with pytest.raises(PageError):
+            pool.alloc(3, reserved=False)
+
+    def test_double_free_and_null_free_rejected(self):
+        pool = self._pool()
+        (pg,) = pool.alloc(1, reserved=False)
+        pool.free([pg])
+        with pytest.raises(PageError):
+            pool.free([pg])
+        with pytest.raises(PageError):
+            pool.free([0])
+
+    def test_write_prefill_pads_to_page(self):
+        pool = self._pool()
+        pages = pool.alloc(2, reserved=False)
+        k = jnp.ones((6, 2, 8), jnp.float32)  # 6 tokens over 2x4-slot pages
+        pool.write_prefill(0, pages, k, 2 * k)
+        got = pool.k_pages[0][jnp.asarray(pages)].reshape(8, 2, 8)
+        assert np.all(np.asarray(got[:6]) == 1.0)
+        assert np.all(np.asarray(got[6:]) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants under churn
+# ---------------------------------------------------------------------------
+class TestSchedulerInvariants:
+    def test_admit_evict_no_leaks(self):
+        model, params = _model("starcoder2-3b", f32=False)
+        sched = Scheduler(model, params, max_slots=3, page_size=8,
+                          n_pages=24, max_model_len=64, prefill_chunk=4,
+                          compile_cache=CompilationCache())
+        rng = np.random.RandomState(0)
+        for i in range(7):
+            L = int(rng.randint(2, 14))
+            sched.submit(list(rng.randint(0, model.cfg.vocab, size=L)),
+                         int(rng.randint(2, 9)))
+            if i % 2 == 0:
+                sched.step()
+                sched.check_invariants()
+        reqs = sched.run()
+        sched.check_invariants()
+        assert len(reqs) == 7
+        assert all(r.done for r in reqs)
+        # every page returned, every reservation released
+        assert sched.pool.num_free == sched.pool.n_pages - 1
+        assert sched.pool._reserved == 0
+        assert not np.any(sched.block_table)
+
+    def test_queue_waits_for_pages(self):
+        model, params = _model("starcoder2-3b", f32=False)
+        # room for exactly one request's worst case at a time
+        sched = Scheduler(model, params, max_slots=2, page_size=8,
+                          n_pages=4, max_model_len=32, prefill_chunk=8,
+                          compile_cache=CompilationCache())
+        for _ in range(2):
+            sched.submit(list(range(1, 9)), 8)  # 8+8 tokens -> 2 pages
+        sched.step()
+        assert sum(r is not None for r in sched.slots) == 1
+        assert len(sched.queue) == 1
+        reqs = sched.run()
+        assert len(reqs) == 2
+        sched.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill == whole-prompt prefill
+# ---------------------------------------------------------------------------
+class TestChunkedPrefill:
+    @pytest.mark.parametrize("chunk", [1, 3, 8])
+    def test_chunked_matches_whole(self, chunk):
+        model, params = _model("gemma3-4b")
+        prompt = np.arange(1, 12) % model.cfg.vocab
+        L = len(prompt)
+        step = jax.jit(model.decode_step)
+
+        whole_cache = model.init_cache(1, L)
+        whole_logits, whole_cache = step(
+            params, whole_cache, jnp.asarray(prompt[None], jnp.int32))
+
+        cache = model.init_cache(1, L)
+        logits = None
+        i = 0
+        while i < L:
+            logits, cache = step(
+                params, cache,
+                jnp.asarray(prompt[None, i:i + chunk], jnp.int32))
+            i += chunk
+
+        # XLA CPU selects different matmul kernels for (s=L) vs (s=chunk)
+        # activations, so equality across chunkings is to rounding, not
+        # bit-for-bit; the sampled token must still be identical.
+        wl, cl = np.asarray(whole_logits[0, -1]), np.asarray(logits[0, -1])
+        np.testing.assert_allclose(wl, cl, rtol=2e-6, atol=2e-6)
+        assert int(wl.argmax()) == int(cl.argmax())
+        for leaf_w, leaf_c in zip(jax.tree.leaves(whole_cache),
+                                  jax.tree.leaves(cache)):
+            np.testing.assert_allclose(
+                np.asarray(leaf_w, np.float32),
+                np.asarray(leaf_c, np.float32), rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Compiled step == uncompiled decode_step
+# ---------------------------------------------------------------------------
+class TestCompiledStep:
+    @pytest.mark.parametrize("arch", ["starcoder2-3b", "gemma3-4b",
+                                      "rwkv6-7b"])
+    def test_tokens_match_reference(self, arch):
+        model, params = _model(arch)
+        B, L, new = 4, 6, 5
+        prompts = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(1), (B, L), 0, model.cfg.vocab))
+        ref_tokens, _ = _reference_decode(model, params, prompts, new, 64)
+
+        sched = Scheduler(model, params, max_slots=4, page_size=8,
+                          n_pages=32, max_model_len=64, prefill_chunk=4,
+                          compile_cache=CompilationCache())
+        for b in range(B):
+            sched.submit(list(map(int, prompts[b])), new)
+        reqs = sched.run()
+        sched.check_invariants()
+        for b, r in enumerate(reqs):
+            assert r.tokens_out == ref_tokens[b], (
+                f"slot {b}: {r.tokens_out} != reference {ref_tokens[b]}")
+
+    def test_grid_kernel_in_compiled_step(self):
+        """At a grid-converting bucket the per-layer attention maps become
+        Pallas grid kernels inside the compiled step (dtype-aware tiling:
+        fp32 -> 8-row sublane blocks, so B=16 yields >= 2 grid steps)."""
+        model, params = _model("starcoder2-3b")
+        B, L, new = 16, 6, 4
+        prompts = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(1), (B, L), 0, model.cfg.vocab))
+        ref_tokens, _ = _reference_decode(model, params, prompts, new, 64)
+
+        sched = Scheduler(model, params, max_slots=B, page_size=8,
+                          n_pages=64, max_model_len=64, prefill_chunk=8,
+                          dtype_aware_sublanes=True,
+                          compile_cache=CompilationCache())
+        for b in range(B):
+            sched.submit(list(map(int, prompts[b])), new)
+        reqs = sched.run()
+        for b, r in enumerate(reqs):
+            assert r.tokens_out == ref_tokens[b]
+
+        report = sched.compiler._steps[max(sched.compiler._steps)].report
+        kernels = report.get("grid_kernels", [])
+        assert len(kernels) == model.cfg.n_layers
+        assert all("attn" in k for k in kernels)
+        blocks = report["grid_converted"][0]["block_shape"]
+        assert blocks[0] == 8  # fp32 sublane rows
+
+    def test_padding_lanes_do_not_disturb_active(self):
+        """A batch of 3 in 4 slots runs with one padding lane (null-page
+        writes + masked gathers); results must equal the dense 3-lane
+        reference."""
+        model, params = _model("starcoder2-3b")
+        B, L, new = 3, 5, 4
+        prompts = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(2), (B, L), 0, model.cfg.vocab))
+        ref_tokens, _ = _reference_decode(model, params, prompts, new, 64)
+        sched = Scheduler(model, params, max_slots=4, page_size=8,
+                          n_pages=32, max_model_len=64, prefill_chunk=4,
+                          compile_cache=CompilationCache())
+        for b in range(B):
+            sched.submit(list(map(int, prompts[b])), new)
+        reqs = sched.run()
+        for b, r in enumerate(reqs):
+            assert r.tokens_out == ref_tokens[b]
+
+
+# ---------------------------------------------------------------------------
+# Compilation-cache behavior
+# ---------------------------------------------------------------------------
+class TestServingCompileCache:
+    def test_bucket_reuse_hits_cache(self):
+        model, params = _model("starcoder2-3b", f32=False)
+        cc = CompilationCache()
+
+        def run_once():
+            sched = Scheduler(model, params, max_slots=3, page_size=8,
+                              n_pages=24, max_model_len=64,
+                              prefill_chunk=4, compile_cache=cc)
+            for _ in range(3):
+                sched.submit(list(range(1, 6)), 4)
+            sched.run()
+
+        run_once()
+        first = dict(cc.stats)
+        assert first["misses"] >= 1
+        run_once()  # identical workload -> identical (B, ctx) buckets
+        second = cc.stats
+        assert second["misses"] == first["misses"]
+        assert second["hits"] == first["hits"] + first["misses"]
+
+    def test_env_var_configures_capacity(self, monkeypatch):
+        monkeypatch.setenv(CACHE_SIZE_ENV, "2")
+        assert _default_max_entries() == 2
+        cc = CompilationCache()
+        assert cc.max_entries == 2
+        for i in range(4):
+            cc.store(i, i)
+        assert len(cc) == 2
+        # explicit argument wins over the env var
+        assert CompilationCache(max_entries=7).max_entries == 7
+
+    def test_env_var_rejects_garbage(self, monkeypatch):
+        monkeypatch.setenv(CACHE_SIZE_ENV, "zero")
+        with pytest.raises(ValueError):
+            CompilationCache()
+        monkeypatch.setenv(CACHE_SIZE_ENV, "0")
+        with pytest.raises(ValueError):
+            CompilationCache()
