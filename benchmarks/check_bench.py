@@ -6,10 +6,11 @@ Three gates:
    ran (their entries exist), their derived records carry multi-dim
    blocks (``blocks=[s, l]`` with a lane dim >= 8), and within the same
    run the tiled grid variant beats the 1-element-block grid variant.
-2. **Fused DAGs actually fused**: the gemver ger->ger->gemv chain and the
-   axpydot two-producer dot each ran as ONE grid kernel (their records
-   carry ``grid_kernels == 1``), and the gemver fused-DAG variant beats
-   the pairwise-fused baseline measured in the same run.
+2. **Fused DAGs actually fused**: the gemver ger->ger->gemv chain, the
+   axpydot two-producer dot, the 4-stage jacobi chain, and the LeNet
+   conv+pool stack each ran as ONE grid kernel (their records carry
+   ``grid_kernels == 1``), and each fused variant beats its
+   pairwise/per-stage baseline measured in the same run.
 3. **No >FACTOR regression vs the committed baselines**: entries are
    matched by name against ``--baseline`` records with the same ``small``
    flag; overall machine-speed difference is normalized out with the
@@ -28,13 +29,17 @@ import re
 import statistics
 import sys
 
-MODULES = ("axpydot", "gemver", "stencil", "serve")
+MODULES = ("axpydot", "gemver", "stencil", "jacobi_chain", "lenet", "serve")
 REQUIRED = {
     "gemver": ("gemver_grid_fused_ms", "gemver_grid_untiled_ms",
                "gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),
     "stencil": ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
     "axpydot": ("axpydot_grid_fused_ms", "axpydot_grid_untiled_ms",
                 "axpydot_dag_fused_ms"),
+    "jacobi_chain": ("jacobi_chain_fused_ms", "jacobi_chain_perstage_ms",
+                     "jacobi_chain_jnp_ms"),
+    "lenet": ("lenet_convblock_fused_ms", "lenet_convblock_perstage_ms",
+              "lenet_convblock_jnp_ms"),
     # serving rows present at every problem size (--small and full)
     "serve": tuple(f"serve_{a}_b{b}_{kind}_tps"
                    for a in ("starcoder2_3b", "gemma3_4b", "rwkv6_7b")
@@ -47,12 +52,16 @@ TILED_BEATS_UNTILED = (
     ("stencil_star_grid_ms", "stencil_star_grid_untiled_ms"),
 )
 #: entries that must record a single fused grid kernel (grid_kernels == 1)
-SINGLE_KERNEL_DAGS = ("gemver_chain_dag_ms", "axpydot_dag_fused_ms")
+SINGLE_KERNEL_DAGS = ("gemver_chain_dag_ms", "axpydot_dag_fused_ms",
+                      "jacobi_chain_fused_ms", "lenet_convblock_fused_ms")
 #: (fused-DAG entry, pairwise-fused baseline) measured at the same size.
 #: The committed margin is ~1.24x on few-ms timings, so the comparison
 #: carries a noise allowance: only a clear inversion fails (the
 #: structural grid_kernels==1 gate above catches lost fusion exactly).
-DAG_BEATS_PAIRWISE = (("gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),)
+DAG_BEATS_PAIRWISE = (("gemver_chain_dag_ms", "gemver_chain_pairwise_ms"),
+                      ("jacobi_chain_fused_ms", "jacobi_chain_perstage_ms"),
+                      ("lenet_convblock_fused_ms",
+                       "lenet_convblock_perstage_ms"))
 DAG_NOISE_ALLOWANCE = 1.10
 #: entries whose derived record must show a multi-dim block shape
 MULTIDIM_BLOCKS = ("gemver_grid_fused_ms", "stencil_star_grid_ms")

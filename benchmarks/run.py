@@ -35,13 +35,15 @@ def main() -> int:
                          "measured crossover")
     args = ap.parse_args()
 
-    from . import axpydot, gemver, lenet, serve_bench, stencil_bench
+    from . import (axpydot, gemver, jacobi_chain, lenet, serve_bench,
+                   stencil_bench)
     modules = {
-        "axpydot": axpydot,        # paper Table 1
-        "gemver": gemver,          # paper Table 2
-        "lenet": lenet,            # paper Table 3
-        "stencil": stencil_bench,  # paper Fig. 19
-        "serve": serve_bench,      # ROADMAP: serve-heavy-traffic
+        "axpydot": axpydot,            # paper Table 1
+        "gemver": gemver,              # paper Table 2
+        "lenet": lenet,                # paper Table 3 + fused conv stack
+        "stencil": stencil_bench,      # paper Fig. 19
+        "jacobi_chain": jacobi_chain,  # halo-fused deep stencil pipeline
+        "serve": serve_bench,          # ROADMAP: serve-heavy-traffic
     }
     only = set(args.only.split(",")) if args.only else set(modules)
 

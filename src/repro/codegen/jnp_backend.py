@@ -378,7 +378,14 @@ class StateLowering:
     def _run_map_vmap(self, entry, exit_, inner, sizes, starts):
         """Vectorized lowering of tasklet-only scopes: the canonical mapped
         tasklet, and MapFusion chains whose tasklet->tasklet edges thread
-        per-iteration transients as local values through one vmapped body."""
+        per-iteration transients as local values through one vmapped body.
+
+        Chains carrying *wcr* tasklet->tasklet edges (MapFusion's reduction
+        mode) cannot thread per-iteration values — the consumer needs the
+        fully accumulated reduction — so they lower through the two-phase
+        path: a full-lattice vmap of the producer side, a ``wcr_reduce``
+        over the reduction axes, then a kept-lattice vmap of the consumer
+        side fed with the reduced values."""
         m = entry.map
         chain_set = set(inner)
         chain = [n for n in self.state.topological_nodes() if n in chain_set]
@@ -401,6 +408,15 @@ class StateLowering:
         captured = {id(e): self.env[e.memlet.data]
                     for t in chain for e in ext_in[t]}
         base_env = dict(self.symenv)
+        groups, gsizes = self._vmap_groups(m, sizes, starts)
+
+        wcr_edges = [e for t in chain for e in int_in[t]
+                     if e.memlet.wcr is not None]
+        if wcr_edges:
+            self._run_map_vmap_phased(m, chain, chain_set, ext_in, int_in,
+                                      out_edges, captured, base_env,
+                                      groups, gsizes, wcr_edges)
+            return
 
         def body(*param_vals):
             local = dict(base_env)
@@ -414,29 +430,45 @@ class StateLowering:
                                                      e.memlet, local)
                 for e in int_in[t]:
                     kwargs[e.dst_conn] = vals[(e.src, e.src_conn)]
-                result = t.fn(**kwargs)
-                t_out = [e for e in self.state.out_edges(t)
-                         if e.dst in chain_set or e.memlet.data is not None]
-                if not isinstance(result, dict):
-                    conns = [e.src_conn for e in t_out]
-                    if isinstance(result, tuple):
-                        result = dict(zip(t.outputs or conns, result))
-                    else:
-                        result = {conns[0]: result}
-                for e in t_out:
+                result = self._normalize_result(t, result_of=t.fn(**kwargs))
+                for e in self.state.out_edges(t):
+                    if e.dst not in chain_set and e.memlet.data is None:
+                        continue
                     v = result[e.src_conn]
                     if e.dst in chain_set:
                         vals[(t, e.src_conn)] = v
-                    elif e.memlet.data is not None:
+                    else:
                         outs[id(e)] = v
             return tuple(outs[id(e)] for e in out_edges)
 
-        # The vmap lattice is built over *groups*: normally one group per
-        # parameter (the classic meshgrid), but a MapTiling'd pair whose
-        # extent is not a tile multiple collapses into one flat group that
-        # enumerates only the valid (counter, intra) points — the padding
-        # lanes of the partial final tile never execute, mirroring the
-        # Pallas backend's in-kernel masking.
+        if sizes:
+            pvals = self._lattice_param_values(groups, gsizes)
+            outs = jax.vmap(body)(*[pvals[p] for p in m.params])
+            stacked = tuple(o.reshape(tuple(gsizes) + o.shape[1:])
+                            for o in outs)
+        else:
+            stacked = body()
+        self._scatter_map_outputs(m, groups, gsizes, out_edges, stacked)
+
+    def _normalize_result(self, t, result_of):
+        """Coerce a tasklet return value into a connector->value dict."""
+        result = result_of
+        if isinstance(result, dict):
+            return result
+        t_out = [e for e in self.state.out_edges(t)
+                 if isinstance(e.dst, Tasklet) or e.memlet.data is not None]
+        conns = [e.src_conn for e in t_out]
+        if isinstance(result, tuple):
+            return dict(zip(t.outputs or conns, result))
+        return {conns[0]: result}
+
+    def _vmap_groups(self, m, sizes, starts):
+        """The vmap lattice is built over *groups*: normally one group per
+        parameter (the classic meshgrid), but a MapTiling'd pair whose
+        extent is not a tile multiple collapses into one flat group that
+        enumerates only the valid (counter, intra) points — the padding
+        lanes of the partial final tile never execute, mirroring the
+        Pallas backend's in-kernel masking."""
         partial = self._partial_tile_pairs(m)
         pos = {p: i for i, p in enumerate(m.params)}
         in_pair = {}
@@ -460,21 +492,169 @@ class StateLowering:
                                sizes[i]))
                 done.add(p)
         gsizes = [g[2] for g in groups]
+        return groups, gsizes
 
-        if sizes:
-            mesh = jnp.meshgrid(*[jnp.arange(s) for s in gsizes],
-                                indexing="ij")
-            flat_idx = [g.reshape(-1) for g in mesh]
-            pvals = {}
-            for gi, (params, vals, _) in enumerate(groups):
-                for p, v in zip(params, vals):
-                    pvals[p] = v[flat_idx[gi]]
-            outs = jax.vmap(body)(*[pvals[p] for p in m.params])
-            stacked = tuple(o.reshape(tuple(gsizes) + o.shape[1:])
-                            for o in outs)
+    @staticmethod
+    def _lattice_param_values(groups, gsizes):
+        """Flat per-parameter coordinate arrays over the full group mesh."""
+        mesh = jnp.meshgrid(*[jnp.arange(s) for s in gsizes], indexing="ij")
+        flat_idx = [g.reshape(-1) for g in mesh]
+        pvals = {}
+        for gi, (params, vals, _) in enumerate(groups):
+            for p, v in zip(params, vals):
+                pvals[p] = v[flat_idx[gi]]
+        return pvals
+
+    def _run_map_vmap_phased(self, m, chain, chain_set, ext_in, int_in,
+                             out_edges, captured, base_env, groups, gsizes,
+                             wcr_edges):
+        """Two-phase vectorized lowering for MapFusion's reduction mode.
+
+        Phase 1 (producer side) runs over the full iteration lattice and
+        yields the per-iteration reduction contributions; they are combined
+        with :func:`wcr_reduce` over the *reduction axes* — lattice groups
+        whose parameters do not address the reduction subset. Phase 2
+        (consumer side) then runs once per kept lattice point with the
+        reduced value bound to the wcr connector. Shapes the phased path
+        cannot express raise :class:`DynamicStrideError`, routing the scope
+        to the (already correct) sequential trace-time loop."""
+        pset = set(m.params)
+        phase2 = set()
+        work = [e.dst for e in wcr_edges]
+        while work:
+            t = work.pop()
+            if t in phase2:
+                continue
+            phase2.add(t)
+            work.extend(e.dst for e in self.state.out_edges(t)
+                        if e.dst in chain_set)
+        phase1 = [t for t in chain if t not in phase2]
+        p2chain = [t for t in chain if t in phase2]
+
+        for t in phase1:
+            for e in self.state.out_edges(t):
+                if (e.dst in phase2 and e.memlet.wcr is None):
+                    raise DynamicStrideError(
+                        "plain producer->consumer edge alongside a wcr edge")
+                if e.dst not in chain_set and e.memlet.data is not None:
+                    raise DynamicStrideError(
+                        "reduction producer also writes through the exit")
+        used_sets = []
+        for e in wcr_edges:
+            if e.memlet.wcr not in WCR_MODES or e.memlet.subset is None:
+                raise DynamicStrideError("unsupported in-chain wcr edge")
+            used = set()
+            for r in e.memlet.subset:
+                used |= (r.start.free_symbols & pset)
+            used_sets.append(used)
+        kept_params = used_sets[0]
+        if any(u != kept_params for u in used_sets):
+            raise DynamicStrideError(
+                "in-chain wcr edges disagree on reduction parameters")
+        red_params = pset - kept_params
+        for t in p2chain:
+            p2_memlets = [e.memlet for e in ext_in[t]]
+            p2_memlets += [e.memlet for e in self.state.out_edges(t)
+                           if e.dst not in chain_set
+                           and e.memlet.data is not None]
+            for ml in p2_memlets:
+                if ml.subset is None:
+                    continue
+                for r in ml.subset:
+                    syms = (r.start.free_symbols | r.stop.free_symbols
+                            | r.step.free_symbols)
+                    if syms & red_params:
+                        raise DynamicStrideError(
+                            "consumer memlet uses a reduction parameter")
+        kept = [gi for gi, (params, _, _) in enumerate(groups)
+                if set(params) & kept_params]
+        for gi in kept:
+            if not set(groups[gi][0]) <= kept_params:
+                raise DynamicStrideError(
+                    "partial-tile group straddles the reduction boundary")
+        red_axes = tuple(gi for gi in range(len(groups)) if gi not in kept)
+        if not red_axes:
+            raise DynamicStrideError("wcr chain reduces over no lattice axis")
+
+        wcr_keys, key_mode = [], {}
+        for e in wcr_edges:
+            k = (e.src, e.src_conn)
+            if k not in key_mode:
+                wcr_keys.append(k)
+                key_mode[k] = e.memlet.wcr
+            elif key_mode[k] != e.memlet.wcr:
+                raise DynamicStrideError(
+                    "one reduction value consumed under two wcr modes")
+
+        def body1(*param_vals):
+            local = dict(base_env)
+            local.update(dict(zip(m.params, param_vals)))
+            vals = {}
+            for t in phase1:
+                kwargs = {}
+                for e in ext_in[t]:
+                    kwargs[e.dst_conn] = read_memlet(captured[id(e)],
+                                                     e.memlet, local)
+                for e in int_in[t]:
+                    kwargs[e.dst_conn] = vals[(e.src, e.src_conn)]
+                result = self._normalize_result(t, result_of=t.fn(**kwargs))
+                for e in self.state.out_edges(t):
+                    if e.dst in chain_set:
+                        vals[(t, e.src_conn)] = result[e.src_conn]
+            return tuple(vals[k] for k in wcr_keys)
+
+        pvals = self._lattice_param_values(groups, gsizes)
+        outs1 = jax.vmap(body1)(*[pvals[p] for p in m.params])
+        stacked1 = tuple(o.reshape(tuple(gsizes) + o.shape[1:])
+                         for o in outs1)
+        reduced = tuple(wcr_reduce(key_mode[k], v, red_axes)
+                        for k, v in zip(wcr_keys, stacked1))
+
+        kept_groups = [groups[gi] for gi in kept]
+        kept_gsizes = [gsizes[gi] for gi in kept]
+        kept_plist = [p for g in kept_groups for p in g[0]]
+
+        def body2(red_vals, *param_vals):
+            local = dict(base_env)
+            local.update(dict(zip(kept_plist, param_vals)))
+            vals = dict(zip(wcr_keys, red_vals))
+            outs = {}
+            for t in p2chain:
+                kwargs = {}
+                for e in ext_in[t]:
+                    kwargs[e.dst_conn] = read_memlet(captured[id(e)],
+                                                     e.memlet, local)
+                for e in int_in[t]:
+                    kwargs[e.dst_conn] = vals[(e.src, e.src_conn)]
+                result = self._normalize_result(t, result_of=t.fn(**kwargs))
+                for e in self.state.out_edges(t):
+                    if e.dst not in chain_set and e.memlet.data is None:
+                        continue
+                    v = result[e.src_conn]
+                    if e.dst in chain_set:
+                        vals[(t, e.src_conn)] = v
+                    else:
+                        outs[id(e)] = v
+            return tuple(outs[id(e)] for e in out_edges)
+
+        if kept_gsizes:
+            pvals2 = self._lattice_param_values(kept_groups, kept_gsizes)
+            red_flat = tuple(r.reshape((-1,) + r.shape[len(kept):])
+                             for r in reduced)
+            outs2 = jax.vmap(body2)(red_flat,
+                                    *[pvals2[p] for p in kept_plist])
+            stacked2 = tuple(o.reshape(tuple(kept_gsizes) + o.shape[1:])
+                             for o in outs2)
         else:
-            stacked = body()
+            stacked2 = body2(reduced)
+        self._scatter_map_outputs(m, kept_groups, kept_gsizes,
+                                  out_edges, stacked2)
 
+    def _scatter_map_outputs(self, m, groups, gsizes, out_edges,
+                             stacked):
+        """Write the stacked per-lattice-point results of a vmapped scope
+        through their exit memlets (index scatter, wcr reduce/combine,
+        scalar targets)."""
         static = self._static_syms()
         group_params = [set(g[0]) for g in groups]
         for e, val in zip(out_edges, stacked):

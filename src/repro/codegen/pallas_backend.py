@@ -85,6 +85,19 @@ class EdgeSpec:
 
 
 @dataclass(frozen=True)
+class WcrValueSpec:
+    """One in-kernel reduction value (MapFusion's wcr mode): a
+    tasklet->tasklet edge carrying ``wcr`` accumulates into a VMEM scratch
+    across the ``reduction`` grid steps; the consumer side of the chain
+    runs once, on the last step, with the finished value."""
+    key: Tuple[int, str]            # (producer chain index, src connector)
+    wcr: str
+    dtype: str                      # numpy dtype name for the scratch
+    reduction: Tuple[str, ...]      # grid params accumulated across steps
+    kept_intra: Tuple[str, ...]     # intra-tile params addressing the value
+
+
+@dataclass(frozen=True)
 class GridSpec:
     """Complete derived grid-kernel description for one map scope."""
     kernel_name: str
@@ -98,6 +111,10 @@ class GridSpec:
     #: tasklet->tasklet edges inside the scope (fused-DAG intermediates
     #: threaded as in-kernel values; the cost model charges VMEM for them)
     internal_edges: int = 0
+    #: in-kernel wcr edges (two-phase accumulate+consume kernels)
+    internal_wcr: Tuple[WcrValueSpec, ...] = ()
+    #: chain indices of the consumer phase (run on the last reduction step)
+    phase2_nodes: Tuple[int, ...] = ()
 
 
 def _scalar_fact() -> SubsetFactorization:
@@ -293,16 +310,17 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
     inputs = []
     out_edge_list = []  # (chain index, edge)
     internal_vals = set()  # distinct in-kernel values: a fan-out producer
+    wcr_edge_list = []  # (producer chain index, edge) for in-kernel wcr
     for ti, t in enumerate(chain):    # value is stored once, not per reader
         for e in state.in_edges(t):
             if e.dst_conn is None or e.memlet.data is None:
                 continue
             if e.src in chain_index:
-                # per-iteration intermediate, threaded as a local value
+                # per-iteration intermediate, threaded as a local value;
+                # wcr edges additionally accumulate across the reduction
+                # steps (two-phase kernel, analyzed below)
                 if e.memlet.wcr is not None:
-                    raise BlockFactorError(
-                        f"map {m.label!r}: wcr on in-kernel intermediate "
-                        f"{e.memlet.data!r}")
+                    wcr_edge_list.append((chain_index[e.src], e))
                 internal_vals.add((chain_index[e.src], e.src_conn))
                 continue
             fact, scalar, _ = _factor(e.memlet)
@@ -310,10 +328,6 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
                                    node=ti))
         for e in state.out_edges(t):
             if e.dst in chain_index:
-                if e.memlet.wcr is not None:
-                    raise BlockFactorError(
-                        f"map {m.label!r}: wcr on in-kernel intermediate "
-                        f"{e.memlet.data!r}")
                 continue
             if e.memlet.data is None:
                 continue
@@ -373,6 +387,13 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         outputs.append(EdgeSpec(e.src_conn, e.memlet.data, fact, scalar,
                                 e.memlet.wcr, reduction, box, node=ti))
 
+    internal_wcr: Tuple[WcrValueSpec, ...] = ()
+    phase2_nodes: Tuple[int, ...] = ()
+    if wcr_edge_list:
+        internal_wcr, phase2_nodes = _analyze_internal_wcr(
+            sdfg, state, m, chain, chain_index, wcr_edge_list, grid_params,
+            block_params, order, used_any, inputs, outputs, out_edge_list)
+
     return GridSpec(
         kernel_name=m.label,
         grid=tuple((p, grid_params[p][1]) for p in order),
@@ -381,7 +402,120 @@ def analyze_map_scope(sdfg: SDFG, state: State, entry: MapEntry,
         inputs=tuple(inputs), outputs=tuple(outputs),
         tasklet_labels=tuple(t.label for t in chain),
         partial_tiles=tuple(partials),
-        internal_edges=len(internal_vals))
+        internal_edges=len(internal_vals),
+        internal_wcr=internal_wcr, phase2_nodes=phase2_nodes)
+
+
+def _analyze_internal_wcr(sdfg, state, m, chain, chain_index, wcr_edge_list,
+                          grid_params, block_params, order, used_any,
+                          inputs, outputs, out_edge_list
+                          ) -> Tuple[Tuple[WcrValueSpec, ...],
+                                     Tuple[int, ...]]:
+    """Legality analysis for in-kernel wcr edges (MapFusion's reduction
+    mode) and derivation of the two-phase kernel structure; raises
+    :class:`BlockFactorError` when the shape cannot be expressed, falling
+    back to the structural interpreter (whose sequential/phased-vmap
+    lowerings are always correct for these scopes)."""
+    pset = set(m.params)
+    used_sets = []
+    for src_ti, e in wcr_edge_list:
+        if e.memlet.wcr not in WCR_MODES:
+            raise BlockFactorError(
+                f"map {m.label!r}: in-kernel wcr {e.memlet.wcr!r} "
+                f"unsupported")
+        if e.memlet.subset is None:
+            raise BlockFactorError(
+                f"map {m.label!r}: in-kernel wcr edge without a subset")
+        used = set()
+        for r in e.memlet.subset:
+            used |= ((r.start.free_symbols | r.stop.free_symbols) & pset)
+        used_sets.append(used)
+    kept = used_sets[0]
+    if any(u != kept for u in used_sets):
+        raise BlockFactorError(
+            f"map {m.label!r}: in-kernel wcr edges disagree on reduction "
+            f"parameters")
+    kept_grid = kept & set(grid_params)
+    kept_intra = kept & set(block_params)
+    reduction = tuple(p for p in order if p not in kept)
+    red_intra = {q for q in block_params if q not in kept_intra}
+    if not reduction:
+        raise BlockFactorError(
+            f"map {m.label!r}: in-kernel wcr with no grid reduction step")
+    if kept_grid - set(used_any):
+        raise BlockFactorError(
+            f"map {m.label!r}: reduction-addressing params "
+            f"{sorted(kept_grid - set(used_any))} absent from every output")
+
+    # consumer phase: everything downstream of a wcr edge
+    phase2 = set()
+    work = [chain_index[e.dst] for _, e in wcr_edge_list]
+    while work:
+        ti = work.pop()
+        if ti in phase2:
+            continue
+        phase2.add(ti)
+        for e in state.out_edges(chain[ti]):
+            if e.dst in chain_index:
+                work.append(chain_index[e.dst])
+    for ti, t in enumerate(chain):
+        if ti in phase2:
+            continue
+        for e in state.out_edges(t):
+            if (e.dst in chain_index and chain_index[e.dst] in phase2
+                    and e.memlet.wcr is None):
+                raise BlockFactorError(
+                    f"map {m.label!r}: plain producer->consumer edge "
+                    f"alongside an in-kernel wcr edge")
+    for ti, e in out_edge_list:
+        if ti not in phase2:
+            raise BlockFactorError(
+                f"map {m.label!r}: reduction producer also writes through "
+                f"the exit")
+    red_syms = set(reduction) | red_intra
+    for es in outputs:
+        if es.wcr is not None:
+            raise BlockFactorError(
+                f"map {m.label!r}: wcr output downstream of an in-kernel "
+                f"reduction")
+        _check_phase_free(m, es, red_syms, red_intra, "output")
+    for es in inputs:
+        if es.node in phase2:
+            _check_phase_free(m, es, red_syms, red_intra, "consumer input")
+
+    specs, seen = [], set()
+    for src_ti, e in wcr_edge_list:
+        key = (src_ti, e.src_conn)
+        if key in seen:
+            continue
+        seen.add(key)
+        desc = sdfg.arrays.get(e.memlet.data)
+        if desc is None:
+            raise BlockFactorError(
+                f"map {m.label!r}: no descriptor for in-kernel wcr "
+                f"intermediate {e.memlet.data!r}")
+        specs.append(WcrValueSpec(
+            key=key, wcr=e.memlet.wcr,
+            dtype=str(desc.dtype.np_dtype.__name__
+                      if hasattr(desc.dtype.np_dtype, "__name__")
+                      else desc.dtype.np_dtype),
+            reduction=reduction,
+            kept_intra=tuple(q for q in block_params if q in kept_intra)))
+    return tuple(specs), tuple(sorted(phase2))
+
+
+def _check_phase_free(m, es: EdgeSpec, red_syms, red_intra, what: str):
+    """A consumer-phase memlet must not address a reduction parameter —
+    the consumer runs only on the last reduction step."""
+    syms = set()
+    for ex in es.fact.index_exprs:
+        syms |= ex.free_symbols
+    for _, wexpr, _ in es.fact.windows:
+        syms |= wexpr.free_symbols
+    if syms & red_syms or {q for q, _ in es.fact.param_dims} & red_intra:
+        raise BlockFactorError(
+            f"map {m.label!r}: {what} {es.data!r} addresses a reduction "
+            f"parameter")
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +550,10 @@ class PallasStateLowering(StateLowering):
         labels = tuple(t.label for t in chain)
         if spec.tasklet_labels and labels != spec.tasklet_labels:
             return False  # stale annotation: graph changed under the spec
-        self._emit_grid_kernel(entry, chain, spec)
+        if spec.internal_wcr:
+            self._emit_two_phase(entry, chain, spec)
+        else:
+            self._emit_grid_kernel(entry, chain, spec)
         return True
 
     # ------------------------------------------------------------------
@@ -590,23 +727,8 @@ class PallasStateLowering(StateLowering):
             scratch = refs[n_ops + n_out:]
             ids = [pl.program_id(k) for k in range(len(grid_names))]
             id_env = dict(zip(grid_names, ids))
-
-            raw = [ref[...] for ref in ins]
-            opvals = {}
-            for i, es in enumerate(spec.inputs):
-                v = raw[op_of_edge[i]]
-                for d, expr, ln in es.fact.windows:
-                    v = jax.lax.dynamic_slice_in_dim(
-                        v, eval_affine(expr, id_env), ln, axis=d)
-                if es.fact.squeeze_dims:
-                    v = jnp.squeeze(v, axis=es.fact.squeeze_dims)
-                pd = dict(es.fact.param_dims)
-                present = [q for q in block_order if q in pd]
-                if present:  # tile axes to the front, in block-param order
-                    src = [_squeeze_adjusted_axis(es.fact, pd[q])
-                           for q in present]
-                    v = jnp.moveaxis(v, src, list(range(len(src))))
-                opvals[i] = v
+            opvals = self._load_operands(spec, ins, op_of_edge, block_order,
+                                         id_env)
 
             if whole_block:
                 # one array-level application over the whole tile: pad
@@ -680,11 +802,225 @@ class PallasStateLowering(StateLowering):
             interpret=interpret)(*in_vals)
         if not isinstance(results, (list, tuple)):
             results = (results,)
+        self._stitch_results(spec, results)
 
+    @staticmethod
+    def _load_operands(spec: GridSpec, ins, op_of_edge, block_order, id_env):
+        """Per-input-edge kernel values: dedup'd VMEM block, window slice,
+        squeeze, tile axes moved to the front in block-param order."""
+        raw = [ref[...] for ref in ins]
+        opvals = {}
+        for i, es in enumerate(spec.inputs):
+            v = raw[op_of_edge[i]]
+            for d, expr, ln in es.fact.windows:
+                v = jax.lax.dynamic_slice_in_dim(
+                    v, eval_affine(expr, id_env), ln, axis=d)
+            if es.fact.squeeze_dims:
+                v = jnp.squeeze(v, axis=es.fact.squeeze_dims)
+            pd = dict(es.fact.param_dims)
+            present = [q for q in block_order if q in pd]
+            if present:  # tile axes to the front, in block-param order
+                src = [_squeeze_adjusted_axis(es.fact, pd[q])
+                       for q in present]
+                v = jnp.moveaxis(v, src, list(range(len(src))))
+            opvals[i] = v
+        return opvals
+
+    # ------------------------------------------------------------------
+    def _phased_runners(self, chain: List[Tasklet], spec: GridSpec):
+        """Split :meth:`_chain_runner` for two-phase kernels: phase 1
+        (producer side) returns the per-iteration wcr contributions keyed
+        by ``spec.internal_wcr`` order; phase 2 (consumer side) takes the
+        finished accumulator values and returns the kernel outputs."""
+        chain_index = {t: i for i, t in enumerate(chain)}
+        p2 = set(spec.phase2_nodes)
+        wcr_keys = [w.key for w in spec.internal_wcr]
+        int_in: List[List[Tuple[str, Tuple[int, str]]]] = []
+        int_out: List[List[Tuple[str, Tuple[int, str]]]] = []
+        for ti, t in enumerate(chain):
+            int_in.append([(e.dst_conn, (chain_index[e.src], e.src_conn))
+                           for e in self.state.in_edges(t)
+                           if e.src in chain_index])
+            int_out.append([(e.src_conn, (ti, e.src_conn))
+                            for e in self.state.out_edges(t)
+                            if e.dst in chain_index])
+        res_of = {}
+        for oi, es in enumerate(spec.outputs):
+            res_of.setdefault(es.node, []).append((es.conn, oi))
+        fns = [t.fn for t in chain]
+        decl_outputs = [list(getattr(t, "outputs", ())) for t in chain]
+        n_out = len(spec.outputs)
+
+        def _normalize(ti, r):
+            if isinstance(r, dict):
+                return r
+            conns = [c for c, _ in int_out[ti]]
+            conns += [c for c, _ in res_of.get(ti, ())]
+            if isinstance(r, tuple):
+                return dict(zip(decl_outputs[ti] or conns, r))
+            return {conns[0]: r}
+
+        def _run_phase(tis, opvals, local):
+            results = [None] * n_out
+            for ti in tis:
+                kwargs = {}
+                for i, es in enumerate(spec.inputs):
+                    if es.node == ti:
+                        kwargs[es.conn] = opvals[i]
+                for conn, key in int_in[ti]:
+                    kwargs[conn] = local[key]
+                r = _normalize(ti, fns[ti](**kwargs))
+                for conn, key in int_out[ti]:
+                    if key not in local:  # an acc value stays accumulated
+                        local[key] = r[conn]
+                for conn, oi in res_of.get(ti, ()):
+                    results[oi] = r[conn]
+            return results
+
+        p1_tis = [ti for ti in range(len(chain)) if ti not in p2]
+        p2_tis = [ti for ti in range(len(chain)) if ti in p2]
+
+        def chain1_call(opvals):
+            local = {}
+            _run_phase(p1_tis, opvals, local)
+            return tuple(local[k] for k in wcr_keys)
+
+        def chain2_call(opvals, accs):
+            local = dict(zip(wcr_keys, accs))
+            return tuple(_run_phase(p2_tis, opvals, local))
+
+        return chain1_call, chain2_call
+
+    def _emit_two_phase(self, entry: MapEntry, chain: List[Tasklet],
+                        spec: GridSpec):
+        """Two-phase grid kernel for scopes with in-kernel wcr edges: each
+        grid step runs the producer phase over the whole tile, reduces the
+        contribution over the intra-tile reduction axes, and accumulates it
+        in a VMEM scratch; on the last reduction step the consumer phase
+        runs once over the kept lattice with the finished values (the
+        ``@pl.when`` phase flip of the hand-written reduction kernels)."""
+        import numpy as np
+        interpret = self.sdfg.metadata.get("pallas_interpret", True)
+        grid_names = [p for p, _ in spec.grid]
+        grid_sizes = tuple(n for _, n in spec.grid)
+        block_order = [q for q, _ in spec.block_params]
+        bp = dict(spec.block_params)
+        tile_shape = tuple(n for _, n in spec.block_params)
+
+        op_reps = unique_operands(spec)
+        op_index = {operand_key(es): i for i, es in enumerate(op_reps)}
+        op_of_edge = [op_index[operand_key(es)] for es in spec.inputs]
+
+        in_vals, in_specs = [], []
+        for es in op_reps:
+            v = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                v = jnp.reshape(v, (1,))
+            in_vals.append(v)
+            in_specs.append(pl.BlockSpec(es.fact.block_shape,
+                                         es.fact.index_map(grid_names)))
+
+        out_specs, out_shapes = [], []
+        for es in spec.outputs:
+            pv = jnp.asarray(self.ensure_value(es.data))
+            if es.scalar:
+                pv = jnp.reshape(pv, (1,))
+            out_specs.append(pl.BlockSpec(es.fact.block_shape,
+                                          es.fact.index_map(grid_names)))
+            out_shapes.append(jax.ShapeDtypeStruct(pv.shape, pv.dtype))
+
+        kept_intra = set(spec.internal_wcr[0].kept_intra)
+        kept_order = [q for q in block_order if q in kept_intra]
+        kept_shape = tuple(bp[q] for q in kept_order)
+        red_axes = tuple(i for i, q in enumerate(block_order)
+                         if q not in kept_intra)
+        reduction = spec.internal_wcr[0].reduction
+        scratch_shapes = [pltpu.VMEM(kept_shape or (1,), np.dtype(w.dtype))
+                          for w in spec.internal_wcr]
+
+        chain1_call, chain2_call = self._phased_runners(chain, spec)
+        n_ops, n_out = len(op_reps), len(spec.outputs)
+
+        def kernel(*refs):
+            ins = refs[:n_ops]
+            outs = refs[n_ops:n_ops + n_out]
+            accs = refs[n_ops + n_out:]
+            ids = [pl.program_id(k) for k in range(len(grid_names))]
+            id_env = dict(zip(grid_names, ids))
+            opvals = self._load_operands(spec, ins, op_of_edge, block_order,
+                                         id_env)
+
+            if block_order:
+                f1 = chain1_call
+                for q in reversed(block_order):
+                    axes = {i: (0 if q in dict(es.fact.param_dims) else None)
+                            for i, es in enumerate(spec.inputs)}
+                    f1 = jax.vmap(f1, in_axes=(axes,), out_axes=0)
+                vals1 = f1(opvals)
+            else:
+                vals1 = chain1_call(opvals)
+
+            red_pos = [grid_names.index(p) for p in reduction]
+            first = _conds(ids, red_pos, grid_sizes, at_end=False)
+            last = _conds(ids, red_pos, grid_sizes, at_end=True)
+            for w, acc, v in zip(spec.internal_wcr, accs, vals1):
+                part = wcr_reduce(w.wcr, v, red_axes) if red_axes else v
+                part = jnp.reshape(part, acc.shape)
+
+                @pl.when(first)
+                def _init(acc=acc, w=w):
+                    acc[...] = jnp.full(acc.shape,
+                                        wcr_identity(w.wcr, acc.dtype))
+
+                acc[...] = wcr_combine(w.wcr, acc[...],
+                                       part.astype(acc.dtype))
+
+            @pl.when(last)
+            def _consume():
+                acc_vals = tuple(jnp.reshape(acc[...], kept_shape)
+                                 for acc in accs)
+                if kept_order:
+                    f2 = chain2_call
+                    for q in reversed(kept_order):
+                        axes = {i: (0 if q in dict(es.fact.param_dims)
+                                    else None)
+                                for i, es in enumerate(spec.inputs)}
+                        f2 = jax.vmap(f2, in_axes=(axes, 0), out_axes=0)
+                    results = f2(opvals, acc_vals)
+                else:
+                    results = chain2_call(opvals, acc_vals)
+                for oi, (es, oref) in enumerate(zip(spec.outputs, outs)):
+                    val = jnp.asarray(results[oi])
+                    if block_order:
+                        # kept-lattice result -> full tile lattice (the
+                        # broadcast lanes collapse again in assembly)
+                        trail = val.shape[len(kept_order):]
+                        val = jnp.reshape(
+                            val, tuple(bp[q] if q in kept_intra else 1
+                                       for q in block_order) + trail)
+                        val = jnp.broadcast_to(val, tile_shape + trail)
+                    val = self._assemble_block(val, es, block_order)
+                    if es.fact.windows:
+                        idx = [slice(None)] * len(es.fact.block_shape)
+                        for d, expr, ln in es.fact.windows:
+                            idx[d] = pl.ds(eval_affine(expr, id_env), ln)
+                        oref[tuple(idx)] = val.astype(oref.dtype)
+                    else:
+                        oref[...] = val.astype(oref.dtype)
+
+        results = pl.pallas_call(
+            kernel, grid=grid_sizes, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shapes, scratch_shapes=scratch_shapes,
+            interpret=interpret)(*in_vals)
+        if not isinstance(results, (list, tuple)):
+            results = (results,)
+        self._stitch_results(spec, results)
+
+    def _stitch_results(self, spec: GridSpec, results):
+        """Stitch each written box into the prior container contents:
+        grid kernels only define the blocks their index maps touch.
+        Re-fetch per output: two edges may target the same container."""
         for es, new in zip(spec.outputs, results):
-            # Stitch the written box into the prior container contents:
-            # grid kernels only define the blocks their index maps touch.
-            # Re-fetch per output: two edges may target the same container.
             prev = jnp.asarray(self.ensure_value(es.data))
             if es.scalar:
                 prev = jnp.reshape(prev, (1,))

@@ -126,13 +126,34 @@ class InputToConstantPass(TransformationPass):
 
 @register_pass
 class MapFusionPass(TransformationPass):
-    """Fuse producer->consumer map scopes over matching iteration spaces
-    (transforms/map_fusion.py): the intermediate becomes a per-iteration
-    tasklet->tasklet value instead of an HBM round-trip. Runs after
+    """Fuse producer->consumer map scopes (transforms/map_fusion.py): the
+    intermediate becomes a per-iteration tasklet->tasklet value (exact
+    mode), an in-kernel accumulator (wcr mode), or replicated shifted
+    producers (halo mode) instead of an HBM round-trip. Runs after
     expansion (generic subgraphs expose the map pairs) and before
-    MapTiling (fused single-parameter maps then tile as one)."""
+    MapTiling (fused single-parameter maps then tile as one; halo/wcr
+    legality needs the untiled iteration boxes).
+
+    Producer scopes left fully dead by multi-consumer halo fusion are
+    pruned afterwards, and every refused fusion records its typed reason
+    in ``report["grid_skipped"]`` / ``grid_decisions`` so a pipeline
+    report explains *why* a pair stayed two kernels."""
     transformation = MapFusion
     name = "MapFusion"
+
+    def apply(self, sdfg: SDFG, report: dict) -> int:
+        from ..transforms.map_fusion import prune_dead_scopes
+        t = self._transformation()
+        count = sdfg.apply(t, **self.kwargs)
+        pruned = prune_dead_scopes(sdfg)
+        if pruned:
+            report.setdefault("pruned_scopes", []).extend(pruned)
+        for label, reason in t.explain(sdfg):
+            report.setdefault("grid_skipped", []).append(
+                (label, f"fusion refused: {reason}"))
+            report.setdefault("grid_decisions", []).append(
+                {"map": label, "decision": "unfused", "reason": reason})
+        return count
 
 
 @register_pass
@@ -279,7 +300,10 @@ class GridConversionPass(Pass):
                 vmem += block_bytes(es)   # scratch accumulator
         # fused-DAG in-kernel intermediates: each tasklet->tasklet edge
         # holds one tile-shaped value live in VMEM under the whole-block
-        # body (sized with the first output's element width)
+        # body (sized with the first output's element width). Halo-fused
+        # scopes are charged through the same term — every replicated
+        # producer's value is one more tile — plus the windowed operands'
+        # full-dimension blocks already counted above.
         in_kernel = int(getattr(spec, "internal_edges", 0))
         if in_kernel:
             tile_elems = 1
@@ -289,6 +313,15 @@ class GridConversionPass(Pass):
                 if spec.outputs else None
             elem = desc.dtype.bytes if desc is not None else 4
             vmem += in_kernel * tile_elems * elem
+        # two-phase reduction scratch: one kept-lattice block per
+        # in-kernel wcr value, resident across all reduction steps
+        import numpy as _np
+        bp = dict(spec.block_params)
+        for w in getattr(spec, "internal_wcr", ()):
+            elems = 1
+            for q in w.kept_intra:
+                elems *= bp.get(q, 1)
+            vmem += elems * _np.dtype(w.dtype).itemsize
         block_shape = (list(spec.outputs[0].fact.effective_shape())
                        if spec.outputs else [])
         return {"grid_steps": steps, "vmem_bytes": vmem,

@@ -70,7 +70,9 @@ class Scheduler:
                  cache_dtype="bfloat16",
                  compiler: Optional[DecodeStepCompiler] = None,
                  interpret: bool = True,
-                 dtype_aware_sublanes: bool = False, compile_cache=None):
+                 dtype_aware_sublanes: bool = False, compile_cache=None,
+                 temperature: float = 0.0, top_k: Optional[int] = None,
+                 seed: int = 0):
         if max_model_len % page_size:
             raise ValueError("max_model_len must be a multiple of "
                              f"page_size ({page_size}), got {max_model_len}")
@@ -93,6 +95,13 @@ class Scheduler:
         self.states: Dict[str, jnp.ndarray] = {
             name: jnp.zeros((max_slots,) + shape, dt)
             for name, (li, shape, dt) in self._sspecs.items()}
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        self.temperature = float(temperature)
+        self.top_k = top_k
+        self._rng = np.random.default_rng(seed)
         self.slots: List[Optional[Request]] = [None] * max_slots
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
@@ -169,7 +178,7 @@ class Scheduler:
         req.slot = slot
         req.pos = L
         self.slots[slot] = req
-        first = int(jnp.argmax(logits[0, -1]))
+        first = self._sample(logits[0, -1])
         req.tokens_out.append(first)
         req.first_token_time = time.perf_counter()
         req.token_times.append(req.first_token_time - req.submit_time)
@@ -270,16 +279,33 @@ class Scheduler:
             else:
                 self.states[name] = self.states[name].at[:B].set(out[name])
 
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-        now = time.perf_counter()
+        rows = np.asarray(logits)
         for r in active:
-            t = int(next_tokens[r.slot])
+            t = self._sample(rows[r.slot])
             r.pos += 1
             r.tokens_out.append(t)
             r.token_times.append(dt)
             self._maybe_finish(r, t)
-        del now
         return self.finished[n_done:]
+
+    def _sample(self, row) -> int:
+        """Next token from one request's last-position logits: greedy
+        argmax at ``temperature == 0`` (the default, preserving the
+        token-exact reference tests), otherwise softmax sampling at the
+        given temperature, optionally truncated to the ``top_k`` highest
+        logits, drawn from the scheduler's seeded generator."""
+        row = np.asarray(row, np.float64)
+        row = row.reshape(-1, row.shape[-1])[-1]
+        if self.temperature == 0.0:
+            return int(row.argmax())
+        logits = row / self.temperature
+        if self.top_k is not None and self.top_k < logits.shape[-1]:
+            kth = np.partition(logits, -self.top_k)[-self.top_k]
+            logits = np.where(logits < kth, -np.inf, logits)
+        logits -= logits.max()
+        p = np.exp(logits)
+        p /= p.sum()
+        return int(self._rng.choice(p.shape[-1], p=p))
 
     def run(self, max_steps: int = 100000) -> List[Request]:
         """Drive until every submitted request finishes."""

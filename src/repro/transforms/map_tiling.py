@@ -275,9 +275,13 @@ class MapTiling(Transformation):
     def _shared_dim_params(self, sdfg: SDFG, st, entry: MapEntry,
                           nodes: set) -> set:
         """Parameters that co-index a memlet dimension with another map
-        parameter (e.g. ``x[c*K + l]``): splitting one would put two tile
-        parameters in a single dimension, which BlockSpec factorization
-        cannot express — leave them whole."""
+        parameter (e.g. ``x[c*K + l]``), that index a dimension with a
+        non-unit coefficient (strided access like a pooling read
+        ``t[2*ph + u]``), or that offset a non-unit *range* (a windowed
+        read like a conv's ``x[ow:ow+5]``): splitting any of these would
+        need a block index map BlockSpec factorization cannot express —
+        leave them whole."""
+        from ..core.symbolic import Expr
         pset = set(entry.map.params)
         shared = set()
         for e in st.edges:
@@ -289,6 +293,13 @@ class MapTiling(Transformation):
                 used = (r.start.free_symbols | r.stop.free_symbols) & pset
                 if len(used) > 1:
                     shared |= used
+                if used and not r.is_index():
+                    shared |= used
+                for expr in (r.start, r.stop):
+                    for mono, c in Expr.wrap(expr).terms.items():
+                        for name, _ in mono:
+                            if name in pset and abs(c) != 1:
+                                shared.add(name)
         return shared
 
     def _scope_sublanes(self, sdfg: SDFG, st, entry: MapEntry,

@@ -10,18 +10,153 @@ the producer's write order equals the consumer's read order, removing the
 off-chip round-trip entirely: the container becomes a VMEM stream and its
 2x HBM volume disappears. This is the transformation behind the paper's
 headline Table-1/2/3 gains.
+
+This module also hosts the shared write-order = read-order legality
+front-end (:func:`solve_write_read_sigma`, :func:`sigma_covered`) that
+both StreamingComposition's access-order matching and MapFusion's
+halo-aware grid fusion build on: a producer writing ``t[p + c]`` per
+iteration and a consumer reading ``t[f(q) ]`` are order-compatible
+exactly when the affine renaming sigma(p) = f(q) - c exists and maps the
+consumer's iteration box into the producer's — then the consumer's read
+order IS the producer's write order composed with sigma, and the
+intermediate can ride through the fused scope as shifted in-VMEM reads
+instead of an off-chip round-trip.
 """
 from __future__ import annotations
 
+from fractions import Fraction
 from typing import Dict, List, Optional, Tuple
 
 import networkx as nx
 
 from ..core.dtypes import StorageType
-from ..core.memlet import Memlet
+from ..core.memlet import Memlet, Subset
 from ..core.sdfg import (AccessNode, Array, LibraryNode, MapEntry, MapExit,
                          Scalar, SDFG, State, Stream, Tasklet)
+from ..core.symbolic import Expr
 from .base import Transformation
+
+
+# ---------------------------------------------------------------------------
+# Shared write-order = read-order front-end (consumed by MapFusion's
+# halo path; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def affine_decompose(expr: Expr, params) -> Optional[Tuple[int, Dict[str, int]]]:
+    """Decompose ``expr`` as ``const + sum(coeff_p * p)`` over ``params``.
+    Returns ``(const, {p: coeff})`` with integer values, or None when the
+    expression is non-affine, has fractional coefficients, or references a
+    symbol outside ``params``."""
+    pset = set(params)
+    const = 0
+    coeffs: Dict[str, int] = {}
+    for mono, c in Expr.wrap(expr).terms.items():
+        if isinstance(c, Fraction):
+            if c.denominator != 1:
+                return None
+            c = c.numerator
+        c = int(c)
+        if mono == ():
+            const += c
+            continue
+        if len(mono) != 1 or mono[0][1] != 1:
+            return None
+        name = mono[0][0]
+        if name not in pset:
+            return None
+        coeffs[name] = coeffs.get(name, 0) + c
+    return const, coeffs
+
+
+def solve_write_read_sigma(write_subset: Optional[Subset],
+                           read_subset: Optional[Subset],
+                           prod_params: List[str],
+                           prod_ranges: Dict[str, Tuple[int, int]],
+                           cons_params: List[str]):
+    """Solve the affine renaming sigma that makes the producer's write
+    order equal the consumer's read order for one intermediate edge pair.
+
+    The producer must write ``t[..., p_d + c_d, ...]`` — every dimension an
+    index addressed by exactly one distinct producer parameter with
+    coefficient 1 (plus a constant); producer parameters absent from the
+    write subset must have single-iteration ranges (otherwise the write
+    revisits elements). The consumer read must be all-index with each
+    dimension affine over the consumer parameters; then
+    ``sigma(p_d) = read_d - c_d``.
+
+    Returns ``(sigma, None)`` on success — ``sigma`` maps each producer
+    parameter to an :class:`Expr` over consumer parameters — or
+    ``(None, reason)`` with a typed refusal reason.
+    """
+    if write_subset is None or read_subset is None:
+        return None, "whole-container access to the intermediate"
+    if len(write_subset) != len(read_subset):
+        return None, "read/write rank mismatch on the intermediate"
+    sigma: Dict[str, Expr] = {}
+    for d, (wr, rr) in enumerate(zip(write_subset, read_subset)):
+        if not wr.is_index():
+            return None, "producer writes a slice of the intermediate"
+        if not rr.is_index():
+            return None, ("consumer reads a windowed slice of the "
+                          "intermediate")
+        wdec = affine_decompose(wr.start, prod_params)
+        if wdec is None:
+            return None, f"non-affine write index in dim {d}"
+        wconst, wcoeffs = wdec
+        live = {p: c for p, c in wcoeffs.items() if c != 0}
+        if len(live) != 1 or next(iter(live.values())) != 1:
+            return None, (f"write index in dim {d} is not a unit-coefficient "
+                          f"single-parameter shift")
+        (p,) = live
+        if p in sigma:
+            return None, f"producer parameter {p} indexes two dimensions"
+        rdec = affine_decompose(rr.start, cons_params)
+        if rdec is None:
+            return None, (f"read index in dim {d} is not affine over the "
+                          f"consumer parameters")
+        rconst, rcoeffs = rdec
+        e = Expr.const(rconst - wconst)
+        for q, c in rcoeffs.items():
+            e = e + Expr.sym(q) * c
+        sigma[p] = e
+    for p in prod_params:
+        if p in sigma:
+            continue
+        rng = prod_ranges.get(p)
+        if rng is None or rng[1] != 1:
+            return None, (f"producer parameter {p} does not address the "
+                          f"intermediate (broadcast write revisits elements)")
+        sigma[p] = Expr.const(rng[0])
+    return sigma, None
+
+
+def sigma_covered(sigma: Dict[str, Expr],
+                  prod_ranges: Dict[str, Tuple[int, int]],
+                  cons_ranges: Dict[str, Tuple[int, int]]) -> bool:
+    """True when the image of the consumer's iteration box under ``sigma``
+    lies inside the producer's iteration box (interval arithmetic over the
+    affine shifts) — every shifted read then hits an iteration the
+    producer actually executed. Producer iterations outside the image are
+    dead once the intermediate has no other reader."""
+    for p, expr in sigma.items():
+        dec = affine_decompose(expr, list(cons_ranges))
+        if dec is None:
+            return False
+        c0, coeffs = dec
+        lo = hi = c0
+        for q, (qs, qn) in cons_ranges.items():
+            a = coeffs.get(q, 0)
+            if a >= 0:
+                lo += a * qs
+                hi += a * (qs + qn - 1)
+            else:
+                lo += a * (qs + qn - 1)
+                hi += a * qs
+        ps, pn = prod_ranges[p]
+        if lo < ps or hi > ps + pn - 1:
+            return False
+    return True
 
 
 def _access_order_key(state: State, edge, endpoint: str):

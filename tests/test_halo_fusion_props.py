@@ -1,0 +1,125 @@
+"""Property tests for halo-aware MapFusion (optional hypothesis
+dependency): random stencil-chain depths x offset sets x tile shapes all
+fuse into ONE scope whose grid kernel matches the numpy reference on both
+backends. (The deterministic refusal-reporting counterpart lives in
+``test_map_fusion.py`` so it runs without hypothesis.)"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+                         "dependency (pip install -e .[test])")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.core.memlet import Memlet, Subset  # noqa: E402
+from repro.core.sdfg import SDFG, MapEntry  # noqa: E402
+from repro.core.symbolic import sym  # noqa: E402
+from repro.pipeline import (GridConversionPass, MapTilingPass,  # noqa: E402
+                            PassManager, lower)
+from repro.transforms import MapFusion  # noqa: E402
+
+MARGIN = 4  # stage k computes [MARGIN*(k+1), n - MARGIN*(k+1))
+
+
+def _coef(o):
+    return 0.25 * (o + 2)
+
+
+def _stage_fn(offs):
+    """Weighted sum over the sampled offsets; connector ``v{o+1}`` reads
+    the predecessor at ``i + o`` with a per-offset coefficient so any
+    offset mix-up changes the result."""
+    def fn(**kw):
+        return sum(_coef(int(k[1:]) - 1) * v for k, v in kw.items())
+    return fn
+
+
+def _chain_sdfg(n, stage_offsets):
+    s = SDFG("halo_prop")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    prev_name, prev_node = "x", None
+    for k, offs in enumerate(stage_offsets):
+        last = k == len(stage_offsets) - 1
+        dst = "out" if last else f"t{k}"
+        if not last:
+            s.add_transient(dst, (n,), "float32")
+        lo, hi = MARGIN * (k + 1), n - MARGIN * (k + 1)
+        kw = {} if prev_node is None else {"input_nodes":
+                                           {prev_name: prev_node}}
+        _, _, ex = st.add_mapped_tasklet(
+            f"stage{k}", {"i": (lo, hi)},
+            inputs={f"v{o + 1}": Memlet.simple(
+                        prev_name, Subset.indices([i + o])) for o in offs},
+            outputs={"o": Memlet.simple(dst, Subset.indices([i]))},
+            fn=_stage_fn(offs), **kw)
+        prev_name = dst
+        prev_node = next(e.dst for e in st.out_edges(ex)
+                         if e.memlet.data == dst)
+    return s
+
+
+def _reference(x, stage_offsets):
+    n = x.shape[0]
+    cur = x
+    for k, offs in enumerate(stage_offsets):
+        lo, hi = MARGIN * (k + 1), n - MARGIN * (k + 1)
+        nxt = np.zeros_like(cur)
+        nxt[lo:hi] = sum(_coef(o) * cur[lo + o:hi + o] for o in offs)
+        cur = nxt
+    return cur
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.sampled_from([48, 96, 160]),
+       stage_offsets=hst.lists(
+           hst.lists(hst.sampled_from([-1, 0, 1]),
+                     min_size=1, max_size=3, unique=True),
+           min_size=2, max_size=3),
+       tile=hst.sampled_from([None, 8, 32]),
+       seed=hst.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_random_stencil_chains_fuse_and_match(n, stage_offsets, tile, seed):
+    """Any chain of 2-3 radius-1 stencil stages fuses to a single scope
+    (producers replicated per shifted read) and both backends match the
+    numpy reference. When the fused extent divides the tile the scope
+    must convert to ONE grid kernel; when it does not, windowed operands
+    cannot ride a masked partial tile, so the analysis must record a
+    typed fallback (never silently emit a wrong kernel) — and the vmap
+    path it falls back to must still match."""
+    s = _chain_sdfg(n, stage_offsets)
+    assert s.apply(MapFusion) == len(stage_offsets) - 1
+    entries = [nd for st in s.states for nd in st.nodes
+               if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    ref = _reference(x, stage_offsets)
+
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-4, atol=1e-5)
+
+    extent = n - 2 * MARGIN * len(stage_offsets)
+    if tile is None:
+        cp = lower(s).compile("pallas", cache=None)
+        # the default 1-D tiling always picks a divisor (or leaves the
+        # map whole), so conversion is guaranteed for these extents
+        guaranteed = True
+    else:
+        pm = PassManager([MapTilingPass(tile_sizes={"i": tile}),
+                          GridConversionPass()], name=f"halo_tile{tile}")
+        cp = lower(s).compile("pallas", cache=None, pipeline=pm)
+        guaranteed = extent % tile == 0 and extent // tile >= 2
+    kernels = cp.report["grid_kernels"]
+    assert len(kernels) <= 1, f"chain split into {kernels}"
+    if guaranteed:
+        assert len(kernels) == 1, \
+            f"expected one grid kernel, report={cp.report}"
+    elif not kernels:
+        # a refused conversion must be loud: either the cost model's
+        # typed skip or the analysis's typed fallback, never silence
+        assert (cp.report.get("grid_skipped")
+                or cp.report.get("grid_fallbacks")), cp.report
+    og = np.asarray(cp(x=x)["out"])
+    np.testing.assert_allclose(og, ref, rtol=1e-4, atol=1e-5)

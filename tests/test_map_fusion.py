@@ -67,22 +67,120 @@ def test_fusion_applies_on_matching_pair():
     assert s.arrays["t"].storage is StorageType.REG
 
 
-def test_fusion_refuses_non_matching_ranges():
-    assert _pair_sdfg(cons_params={"j": (0, 32)}).apply(MapFusion) == 0
-    assert _pair_sdfg(cons_params={"j": (1, 64)}).apply(MapFusion) == 0
+def test_fusion_subset_ranges_fuse_via_sigma():
+    """A consumer iterating a SUBSET of the producer's box fuses through
+    the write-order = read-order rule: sigma maps the consumer's box into
+    the producer's, and producer iterations outside the image are dead
+    once the intermediate loses its last reader."""
+    for params in ({"j": (0, 32)}, {"j": (1, 64)}):
+        s = _pair_sdfg(cons_params=dict(params))
+        assert s.apply(MapFusion) == 1
+        x = np.random.default_rng(21).standard_normal(64).astype(np.float32)
+        out = np.asarray(lower(s).compile("jnp", cache=None)(x=x)["out"])
+        (start, stop), = params.values()
+        ref = np.zeros(64, np.float32)
+        ref[start:stop] = (x[start:stop] + 1) * 2
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
 
 
-def test_fusion_refuses_multi_reader_intermediate():
-    assert _pair_sdfg(extra_reader=True).apply(MapFusion) == 0
+def test_fusion_multi_reader_intermediate_replicates():
+    """TWO consumers of one intermediate: the first fuses by replicating
+    the producer (kept alive for the other reader), the second then owns
+    the intermediate exclusively and fuses exactly."""
+    s = _pair_sdfg(extra_reader=True)
+    assert s.apply(MapFusion) == 2
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 2
+    x = np.random.default_rng(22).standard_normal(64).astype(np.float32)
+    for backend in ("jnp", "pallas"):
+        out = lower(s).compile(backend, cache=None)(x=x)
+        np.testing.assert_allclose(np.asarray(out["out"]), (x + 1) * 2,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(out["out2"]), x, rtol=1e-5,
+                                   atol=1e-6)
 
 
 def test_fusion_refuses_wcr_intermediate():
-    assert _pair_sdfg(wcr="add").apply(MapFusion) == 0
+    """wcr write revisiting nothing (every param indexes the output) is
+    not a reduction at all — refused with a typed reason."""
+    s = _pair_sdfg(wcr="add")
+    assert s.apply(MapFusion) == 0
+    reasons = dict(MapFusion().explain(s))
+    assert "no reduction parameters" in reasons["cons"]
 
 
-def test_fusion_refuses_offset_reads():
-    # stencil-style halo read: consumer wants t[i+1], producer wrote t[i]
-    assert _pair_sdfg(n=8, offset=1).apply(MapFusion) == 0
+def test_fusion_refuses_uncovered_offset_reads():
+    # halo read past the producer's box: consumer wants t[i+1] up to
+    # t[n], producer only wrote t[0..n-1] — sigma's image is not covered
+    s = _pair_sdfg(n=8, offset=1)
+    assert s.apply(MapFusion) == 0
+    reasons = dict(MapFusion().explain(s))
+    assert "outside the producer's iteration box" in reasons["cons"]
+
+
+def test_fusion_halo_offset_reads_fuse():
+    """The standing refusal lifted: a shifted consumer read t[j+1] whose
+    image stays inside the producer's box fuses, with the producer
+    replicated at the shifted index."""
+    n = 64
+    s = _pair_sdfg(n=n, cons_params={"j": (0, n - 1)}, offset=1)
+    assert s.apply(MapFusion) == 1
+    labels = [nd.map.label for st in s.states for nd in st.nodes
+              if isinstance(nd, MapEntry)]
+    assert labels == ["prod+cons"]
+    assert s.arrays["t"].storage is StorageType.REG
+    x = np.random.default_rng(23).standard_normal(n).astype(np.float32)
+    ref = np.zeros(n, np.float32)
+    ref[:-1] = (x[1:] + 1) * 2
+    for backend in ("jnp", "pallas"):
+        out = np.asarray(lower(s).compile(backend, cache=None)(x=x)["out"])
+        np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_fusion_stencil_chain_single_scope():
+    """A 3-stage radius-1 stencil chain collapses into ONE scope whose
+    replica count grows linearly (1+3+5, content-deduplicated), matching
+    numpy on both backends."""
+    n = 256
+    s = SDFG("stchain")
+    s.add_array("x", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    s.add_transient("t1", (n,), "float32")
+    s.add_transient("t2", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+
+    def stage(name, src, dst, lo, hi, node=None):
+        _, _, ex = st.add_mapped_tasklet(
+            name, {"i": (lo, hi)},
+            inputs={"a": Memlet.simple(src, Subset.indices([i - 1])),
+                    "b": Memlet.simple(src, Subset.indices([i])),
+                    "c": Memlet.simple(src, Subset.indices([i + 1]))},
+            outputs={"w": Memlet.simple(dst, Subset.indices([i]))},
+            fn=lambda a, b, c: (a + b + c) / 3.0,
+            input_nodes={src: node} if node is not None else None)
+        return next(e.dst for e in st.out_edges(ex) if e.memlet.data == dst)
+
+    t1n = stage("s1", "x", "t1", 1, n - 1)
+    t2n = stage("s2", "t1", "t2", 2, n - 2, t1n)
+    stage("s3", "t2", "out", 3, n - 3, t2n)
+    assert s.apply(MapFusion) == 2
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+    from repro.core.sdfg import Tasklet
+    tasklets = [nd for nd in s.states[0].nodes if isinstance(nd, Tasklet)]
+    assert len(tasklets) == 1 + 3 + 5
+    x = np.random.default_rng(24).standard_normal(n).astype(np.float32)
+    ref = np.zeros(n, np.float64)
+    a = np.zeros(n, np.float64)
+    a[1:n - 1] = (x[:n - 2] + x[1:n - 1] + x[2:]) / 3.0
+    b = np.zeros(n, np.float64)
+    b[2:n - 2] = (a[1:n - 3] + a[2:n - 2] + a[3:n - 1]) / 3.0
+    ref[3:n - 3] = (b[2:n - 4] + b[3:n - 3] + b[4:n - 2]) / 3.0
+    for backend in ("jnp", "pallas"):
+        out = np.asarray(lower(s).compile(backend, cache=None)(x=x)["out"])
+        np.testing.assert_allclose(out, ref.astype(np.float32), rtol=1e-4,
+                                   atol=1e-5)
 
 
 def test_fusion_refuses_broadcast_intermediate_write():
@@ -655,3 +753,155 @@ def test_axpydot_two_producer_dot_single_kernel():
     got = float(np.asarray(
         cp(a=a, b=b, x=x, y=y, u=u, v=v)["result"]).ravel()[0])
     np.testing.assert_allclose(got, ref, rtol=1e-4)
+
+
+def test_gemver_b2_multi_consumer_fuses_into_both_gemvs():
+    """gemver's B2 -> two-gemv shape: one produced matrix feeds TWO
+    reductions (x = B2^T @ y reads it transposed, w = B2 @ x straight).
+    The transposed reader fuses by replicating the producer (kept for the
+    other), the straight reader then fuses exactly — B2 never round-trips
+    through HBM."""
+    n = 48
+    s = SDFG("b2gemvs")
+    s.add_array("A", (n, n), "float32")
+    for nm in ("u2", "v2", "xw", "yv"):
+        s.add_array(nm, (n,), "float32")
+    s.add_array("x_out", (n,), "float32")
+    s.add_array("w_out", (n,), "float32")
+    s.add_transient("B2", (n, n), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j = sym("i"), sym("j")
+    _, _, px = st.add_mapped_tasklet(
+        "ger", {"i": (0, n), "j": (0, n)},
+        inputs={"a": Memlet.simple("A", Subset.indices([i, j])),
+                "u": Memlet.simple("u2", Subset.indices([i])),
+                "v": Memlet.simple("v2", Subset.indices([j]))},
+        outputs={"w": Memlet.simple("B2", Subset.indices([i, j]))},
+        fn=lambda a, u, v: a + u * v)
+    b2n = next(e.dst for e in st.out_edges(px) if e.memlet.data == "B2")
+    st.add_mapped_tasklet(
+        "gemv_t", {"i": (0, n), "j": (0, n)},
+        inputs={"m": Memlet.simple("B2", Subset.indices([j, i])),
+                "z": Memlet.simple("yv", Subset.indices([j]))},
+        outputs={"o": Memlet.simple("x_out", Subset.indices([i]),
+                                    wcr="add")},
+        fn=lambda m, z: m * z, input_nodes={"B2": b2n})
+    st.add_mapped_tasklet(
+        "gemv", {"i": (0, n), "j": (0, n)},
+        inputs={"m": Memlet.simple("B2", Subset.indices([i, j])),
+                "z": Memlet.simple("xw", Subset.indices([j]))},
+        outputs={"o": Memlet.simple("w_out", Subset.indices([i]),
+                                    wcr="add")},
+        fn=lambda m, z: m * z, input_nodes={"B2": b2n})
+    assert s.apply(MapFusion) == 2
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 2
+    b2_nodes = [nd for stt in s.states for nd in stt.data_nodes()
+                if nd.data == "B2"]
+    assert not b2_nodes                   # fully consumed in-kernel
+    rng = np.random.default_rng(25)
+    d = {"A": rng.standard_normal((n, n)).astype(np.float32)}
+    for nm in ("u2", "v2", "xw", "yv"):
+        d[nm] = rng.standard_normal(n).astype(np.float32)
+    B2 = d["A"] + np.outer(d["u2"], d["v2"])
+    for backend in ("jnp", "pallas"):
+        out = lower(s).compile(backend, cache=None)(**d)
+        np.testing.assert_allclose(np.asarray(out["x_out"]), B2.T @ d["yv"],
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(out["w_out"]), B2 @ d["xw"],
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# wcr-producing scope feeding a consumer: two-phase accumulate+consume
+# ---------------------------------------------------------------------------
+def _wcr_chain_sdfg(n, m):
+    """Row-sum reduction (wcr=add over j) feeding an elementwise consumer
+    through the transient ``t`` — the fused scope carries an internal wcr
+    edge and must lower as accumulate-then-consume."""
+    s = SDFG("wcr_chain")
+    s.add_array("A", (n, m), "float32")
+    s.add_array("y", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    s.add_transient("t", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i, j, k = sym("i"), sym("j"), sym("k")
+    _, _, ex = st.add_mapped_tasklet(
+        "rowsum", {"i": (0, n), "j": (0, m)},
+        inputs={"a": Memlet.simple("A", Subset.indices([i, j]))},
+        outputs={"o": Memlet.simple("t", Subset.indices([i]), wcr="add")},
+        fn=lambda a: a * 2.0)
+    t_node = next(e.dst for e in st.out_edges(ex) if e.memlet.data == "t")
+    st.add_mapped_tasklet(
+        "shift", {"k": (0, n)},
+        inputs={"v": Memlet.simple("t", Subset.indices([k])),
+                "z": Memlet.simple("y", Subset.indices([k]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([k]))},
+        fn=lambda v, z: v + z, input_nodes={"t": t_node})
+    return s
+
+
+@pytest.mark.parametrize("tiled", [False, True])
+def test_fusion_wcr_reduction_into_consumer_two_phase(tiled):
+    """The standing wcr refusal lifted: a reduction-producing scope fuses
+    with its consumer; both backends lower the internal wcr edge as a
+    two-phase accumulate+consume (tiled: scratch accumulators per kept
+    tile param, phase flip on the reduction grid dim)."""
+    n, m = (128, 96) if tiled else (48, 32)
+    s = _wcr_chain_sdfg(n, m)
+    assert s.apply(MapFusion) == 1
+    entries = [nd for nd in s.states[0].nodes if isinstance(nd, MapEntry)]
+    assert len(entries) == 1
+    t_nodes = [nd for stt in s.states for nd in stt.data_nodes()
+               if nd.data == "t"]
+    assert not t_nodes                    # reduction held in-kernel
+    rng = np.random.default_rng(31)
+    A = rng.standard_normal((n, m)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    ref = 2.0 * A.sum(axis=1) + y
+    oj = np.asarray(lower(s).compile("jnp", cache=None)(A=A, y=y)["out"])
+    np.testing.assert_allclose(oj, ref, rtol=1e-4, atol=1e-4)
+    if tiled:
+        cp = lower(s).compile("pallas", cache=None)  # default tiled pipeline
+    else:
+        cp = lower(s).compile(
+            "pallas", cache=None,
+            pipeline=PassManager([GridConversionPass()], name="wcr_untiled"))
+    assert len(cp.report["grid_kernels"]) == 1, cp.report
+    og = np.asarray(cp(A=A, y=y)["out"])
+    np.testing.assert_allclose(og, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_refused_fusion_reports_typed_reason_through_pipeline():
+    """A refused fusion (consumer read leaving the producer's box) must
+    surface its typed reason in ``grid_skipped``/``grid_decisions``
+    through the default pallas pipeline, not silently fall back."""
+    n = 64
+    s = SDFG("refused")
+    s.add_array("x", (n,), "float32")
+    s.add_transient("t", (n,), "float32")
+    s.add_array("out", (n,), "float32")
+    st = s.add_state("main", is_start=True)
+    i = sym("i")
+    _, _, ex = st.add_mapped_tasklet(
+        "prod", {"i": (8, n - 8)},
+        inputs={"v": Memlet.simple("x", Subset.indices([i]))},
+        outputs={"o": Memlet.simple("t", Subset.indices([i]))},
+        fn=lambda v: v * 2.0)
+    t_node = next(e.dst for e in st.out_edges(ex) if e.memlet.data == "t")
+    st.add_mapped_tasklet(
+        "cons", {"i": (8, n - 8)},
+        inputs={"a": Memlet.simple("t", Subset.indices([i - 8])),
+                "b": Memlet.simple("t", Subset.indices([i]))},
+        outputs={"o": Memlet.simple("out", Subset.indices([i]))},
+        fn=lambda a, b: a + b, input_nodes={"t": t_node})
+    cp = lower(s).compile("pallas", cache=None)
+    assert len(cp.report["grid_kernels"]) == 2    # per-stage fallback
+    refusals = [r for r in cp.report.get("grid_skipped", [])
+                if r[1].startswith("fusion refused:")]
+    assert refusals, cp.report.get("grid_skipped")
+    assert any("outside the producer" in r[1] for r in refusals)
+    unfused = [d for d in cp.report.get("grid_decisions", [])
+               if d.get("decision") == "unfused"]
+    assert any("outside the producer" in (d.get("reason") or "")
+               for d in unfused)

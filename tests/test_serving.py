@@ -250,6 +250,51 @@ class TestCompiledStep:
 
 
 # ---------------------------------------------------------------------------
+# Sampling beyond greedy argmax
+# ---------------------------------------------------------------------------
+class TestSampling:
+    def test_invalid_sampling_args_rejected(self):
+        model, params = _model("starcoder2-3b", f32=False)
+        with pytest.raises(ValueError):
+            Scheduler(model, params, temperature=-0.1)
+        with pytest.raises(ValueError):
+            Scheduler(model, params, top_k=0)
+
+    def test_sample_respects_temperature_and_top_k(self):
+        model, params = _model("starcoder2-3b", f32=False)
+        row = np.asarray([0.0, 3.0, 2.5, -1.0, 2.9], np.float32)
+        greedy = Scheduler(model, params, compile_cache=CompilationCache())
+        assert greedy._sample(row) == 1  # temperature 0 == argmax
+        sched = Scheduler(model, params, temperature=1.0, top_k=2, seed=11,
+                          compile_cache=CompilationCache())
+        draws = {sched._sample(row) for _ in range(200)}
+        assert draws <= {1, 4}  # support truncated to the top-2 logits
+        assert draws == {1, 4}  # both survivors actually drawn
+
+    def test_seeded_sampling_deterministic(self):
+        """Same seed -> identical token streams through the full
+        scheduler (prefill sample + batched decode samples); greedy
+        remains the temperature=0 default."""
+        model, params = _model("starcoder2-3b", f32=False)
+        rng = np.random.RandomState(5)
+        prompts = [list(rng.randint(1, model.cfg.vocab, size=6))
+                   for _ in range(3)]
+
+        def decode(seed):
+            sched = Scheduler(model, params, max_slots=3, page_size=8,
+                              n_pages=24, max_model_len=64, prefill_chunk=4,
+                              compile_cache=CompilationCache(),
+                              temperature=0.8, top_k=8, seed=seed)
+            for p in prompts:
+                sched.submit(p, 6)
+            return [r.tokens_out for r in sched.run()]
+
+        first = decode(seed=3)
+        assert first == decode(seed=3)
+        assert any(len(set(t)) > 1 for t in first)  # it did sample tokens
+
+
+# ---------------------------------------------------------------------------
 # Compilation-cache behavior
 # ---------------------------------------------------------------------------
 class TestServingCompileCache:
