@@ -44,8 +44,12 @@ REQUIRED = {
     "serve": tuple(f"serve_{a}_b{b}_{kind}_tps"
                    for a in ("starcoder2_3b", "gemma3_4b", "rwkv6_7b")
                    for b in (1, 8)
-                   for kind in ("baseline", "compiled")),
+                   for kind in ("baseline", "compiled"))
+    + ("serve_starcoder2_3b_faulted_tps",),
 }
+#: faulted serving throughput must stay within this factor of the
+#: fault-free run recorded alongside it (the ISSUE-8 recovery budget)
+FAULT_OVERHEAD_BUDGET = 1.5
 #: (tiled entry, 1-element-block entry) measured at the same size
 TILED_BEATS_UNTILED = (
     ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
@@ -152,6 +156,23 @@ def main() -> int:
             errors.append("serve: no entry records grid_kernels >= 1 — "
                           "the compiled decode step converted no "
                           "attention grid kernels")
+        # fault-injected rows: recovery overhead within budget vs the
+        # fault-free throughput measured in the same run
+        for name, e in cur["serve"].items():
+            if not name.endswith("_faulted_tps"):
+                continue
+            ff = e.get("fault_free_tps")
+            if ff is None:
+                errors.append(f"{name}: no fault_free_tps extra — the "
+                              f"faulted run has no in-run comparator")
+            elif ff / e["value"] > FAULT_OVERHEAD_BUDGET:
+                errors.append(
+                    f"{name}: {e['value']:.0f} tok/s under faults vs "
+                    f"{ff:.0f} tok/s fault-free is a {ff / e['value']:.2f}x"
+                    f" recovery overhead (> {FAULT_OVERHEAD_BUDGET}x)")
+            if not e.get("preemptions"):
+                errors.append(f"{name}: fault plan caused no preemption — "
+                              f"the page-pressure path was not exercised")
 
     if args.baseline:
         pairs = []

@@ -19,6 +19,13 @@ The ``*_bf16_tps`` row compiles with dtype-aware sublane tiling
 (``second_size=None``) so the grid blocks show the bf16 16-row packing in
 their ``derived`` record; ``--small`` swaps it for a fp32 row at B=16
 (8-row sublanes) so the smoke run still converts a grid kernel.
+
+The ``*_faulted_tps`` row (ISSUE 8) reruns the compiled path under a
+combined fault plan — one injected step exception, a forced page-pressure
+window (>= 1 preemption + re-prefill), one NaN-logits step — and records
+recovery overhead: the run asserts faulted throughput stays within 1.5x
+of the fault-free run at the same batch (the ``fault_free_tps`` extra,
+gated again by check_bench against the committed baseline).
 """
 from __future__ import annotations
 
@@ -155,6 +162,68 @@ def run(report, small: bool = False):
     report(f"serve_{_slug(arch)}_b{B}_{tag}_tps", tps,
            derived=_grid_derived(rep), backend="pallas",
            p50_ms=p50, p99_ms=p99, grid_kernels=nk)
+
+    _faulted_row(report, small, new_tokens, max_model_len)
+
+
+def _faulted_row(report, small: bool, new_tokens: int, max_model_len: int):
+    """Recovery overhead: the combined ISSUE-8 fault plan vs fault-free
+    at the same batch, wall-clock tokens/sec over the whole run."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+    from repro.serving import FaultInjector, Scheduler, ServeFaultPlan
+
+    arch = "starcoder2-3b"
+    B = 8 if small else 64
+    cfg = get_config(arch).reduced()
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(1)
+    # staggered one-page prompts: lanes cross their first page boundary
+    # at different steps, so the pressure window hits a live crossing
+    plens = rng.randint(8, PAGE + 1, size=B)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab, size=p)))
+               for p in plens]
+    n_pages = B * ((PAGE + new_tokens) // PAGE + 1) + 1
+
+    def one(injector=None):
+        sched = Scheduler(model, params, max_slots=B, page_size=PAGE,
+                          n_pages=n_pages, max_model_len=max_model_len,
+                          prefill_chunk=PAGE, injector=injector)
+        if injector is not None:
+            # compile time is a one-off; the row measures steady-state
+            # recovery overhead, so warm the fallback rung off-clock
+            for ctx in (2 * PAGE, 4 * PAGE):
+                if ctx <= max_model_len:
+                    sched.compiler.fallback_for(B, ctx)
+        for p in prompts:
+            sched.submit(p, new_tokens)
+        t0 = time.perf_counter()
+        reqs = sched.run()
+        wall = time.perf_counter() - t0
+        sched.check_invariants()
+        total = sum(len(r.tokens_out) for r in reqs)
+        return total / wall, sched
+
+    clean_tps, _ = one()
+    plan = ServeFaultPlan(step_exception_at=1, page_pressure_at=2,
+                          page_pressure_release_at=6, nan_logits_at=4)
+    tps, sched = one(FaultInjector(plan))
+    st = sched.stats()
+    assert st["preemptions"] >= 1, "pressure window caused no preemption"
+    assert st["fallback_steps"] >= 1, "no fallback re-run happened"
+    assert all(r.finish_reason == "max_tokens" for r in sched.finished)
+    overhead = clean_tps / tps
+    assert overhead <= 1.5, (
+        f"faulted run {tps:.0f} tok/s is {overhead:.2f}x slower than "
+        f"fault-free {clean_tps:.0f} tok/s (budget 1.5x)")
+    report(f"serve_{_slug(arch)}_faulted_tps", tps, backend="pallas",
+           derived=(f"preemptions={st['preemptions']} "
+                    f"fallback_steps={st['fallback_steps']}"),
+           fault_free_tps=clean_tps, batch=B,
+           preemptions=st["preemptions"],
+           fallback_steps=st["fallback_steps"])
 
 
 if __name__ == "__main__":

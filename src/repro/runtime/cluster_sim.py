@@ -53,12 +53,16 @@ class SimulatedCluster:
         cluster behavior around it."""
         step = 0
         alive = set(range(self.n_hosts))
+        done = set()  # step indices already executed once
+        wasted = 0    # replayed (post-restore) step executions
         while step < n_steps:
             durations = {h: self.host_step_duration(h, step) for h in alive}
             slowest = max(durations.values())
             if slowest == float("inf"):
                 # failure detected via missed heartbeat -> restart cycle
                 dead = [h for h, d in durations.items() if d == float("inf")]
+                for h in dead:
+                    self.monitor.record(h, durations[h])
                 restart_from = restore_ckpt()
                 self.restarts.append({"step": step, "dead_hosts": dead,
                                       "resumed_from": restart_from,
@@ -68,7 +72,10 @@ class SimulatedCluster:
                 step = restart_from
                 continue
             for h, d in durations.items():
-                status = self.monitor.record(h, d)
+                self.monitor.record(h, d)
+            if step in done:
+                wasted += 1  # work between the checkpoint and the failure
+            done.add(step)
             do_step(step)
             self.step_log.append({"step": step, "t": slowest})
             step += 1
@@ -77,4 +84,6 @@ class SimulatedCluster:
         return {"restarts": self.restarts,
                 "straggler_events": [e for e in self.monitor.events
                                      if e[0] == "straggler"],
-                "steps_run": len(self.step_log)}
+                "steps_run": len(self.step_log),
+                "wasted_steps": wasted,
+                "host_status": dict(self.monitor.host_status)}

@@ -53,16 +53,20 @@ class HeartbeatMonitor:
         self.straggler_factor = straggler_factor
         self.durations = []
         self.events = []
+        self.host_status = {}  # host -> last status ("ok|straggler|dead")
 
     def record(self, host: int, duration: float):
         self.durations.append(duration)
         if duration > self.deadline_s:
             self.events.append(("dead", host, duration))
+            self.host_status[host] = "dead"
             return "dead"
         med = float(np.median(self.durations[-32:]))
         if len(self.durations) >= 4 and duration > self.straggler_factor * med:
             self.events.append(("straggler", host, duration))
+            self.host_status[host] = "straggler"
             return "straggler"
+        self.host_status[host] = "ok"
         return "ok"
 
 

@@ -398,16 +398,25 @@ class CompiledDecodeStep:
     wrapper pins the argument order (``Compiled.argument_names()``) and
     donates the page/state containers — the step consumes last step's
     pages and returns this step's without a copy.
+
+    ``donate=False`` keeps the inputs alive (the fault-tolerant mode: a
+    failed step can be re-run from the same inputs), and ``rung`` names
+    the degradation-ladder level this step was compiled at (``"grid"``
+    for the Pallas pipeline, ``"jit"`` for the jnp fallback).
     """
 
-    def __init__(self, compiled, donate_names):
+    def __init__(self, compiled, donate_names, donate: bool = True,
+                 rung: str = "grid"):
         from ..codegen.jnp_backend import classify_arguments
         self.compiled = compiled
         self.report = compiled.report
+        self.donate = donate
+        self.rung = rung
         self.arg_names, self.output_names = classify_arguments(compiled.sdfg)
         names = self.arg_names
         fn = compiled.fn
-        donate = tuple(i for i, n in enumerate(names) if n in donate_names)
+        donate = tuple(i for i, n in enumerate(names) if n in donate_names) \
+            if donate else ()
 
         def positional(*args):
             return fn(**dict(zip(names, args)))
@@ -425,12 +434,24 @@ class DecodeStepCompiler:
     per (B, ctx) bucket. Lowered SDFGs are served by the (shared, LRU)
     ``CompilationCache``: identical buckets — across scheduler restarts or
     separate compiler instances sharing a cache — hit without re-lowering.
+
+    Graceful degradation: a bucket whose Pallas grid compile raises is
+    served by the jnp-jit fallback (same SDFG, ``backend="jnp"`` — token
+    for token the same step) instead of killing the server. Every
+    degradation is a typed entry in ``events`` (``compile_fallback`` /
+    ``compile_retry_failed`` / ``compile_recovered``), and subsequent
+    hits on the bucket retry the grid compile with capped exponential
+    backoff (1, 2, 4, ... ``max_compile_backoff`` bucket hits between
+    attempts). ``compile_fault`` is the injection seam: a callable
+    ``(B, ctx) -> None`` invoked before each grid compile (the
+    fault-injection harness installs one that raises).
     """
 
     def __init__(self, model, params, *, page_size: int, n_pages: int,
                  cache_dtype="bfloat16", interpret: bool = True,
                  dtype_aware_sublanes: bool = False,
-                 cache: Optional[CompilationCache] = None):
+                 cache: Optional[CompilationCache] = None,
+                 donate: bool = True, max_compile_backoff: int = 32):
         self.model = model
         self.page_size = page_size
         self.n_pages = n_pages
@@ -438,30 +459,92 @@ class DecodeStepCompiler:
         self.interpret = interpret
         self.dtype_aware_sublanes = dtype_aware_sublanes
         self.cache = COMPILATION_CACHE if cache is None else cache
+        self.donate = donate
+        self.max_compile_backoff = max_compile_backoff
+        self.compile_fault = None  # optional fn(B, ctx) raising to inject
+        self.events: List[dict] = []
         self.flat_weights = flatten_params(model, params)
         self._wspecs = {n: (tuple(int(s) for s in a.shape), str(a.dtype))
                         for n, a in self.flat_weights.items()}
         self._steps: Dict[Tuple[int, int], CompiledDecodeStep] = {}
+        self._fallbacks: Dict[Tuple[int, int], CompiledDecodeStep] = {}
+        #: per-bucket grid-compile failure state for the backoff retry
+        self._fail: Dict[Tuple[int, int], dict] = {}
         self._donate = (
             {f"kp{li}" for li in attention_layer_shapes(model)} |
             {f"vp{li}" for li in attention_layer_shapes(model)} |
             set(state_specs(model)))
 
+    def _lowered(self, B: int, ctx: int):
+        return serving_decode_step.lower(
+            model=self.model, wspecs=self._wspecs, B=B, ctx=ctx,
+            page_size=self.page_size, n_pages=self.n_pages,
+            cache_dtype=self.cache_dtype)
+
+    def _compile_grid(self, B: int, ctx: int) -> CompiledDecodeStep:
+        if self.compile_fault is not None:
+            self.compile_fault(B, ctx)
+        compiled = self._lowered(B, ctx).compile(
+            backend="pallas", interpret=self.interpret,
+            pipeline=decode_pipeline(self.interpret,
+                                     self.dtype_aware_sublanes),
+            cache=self.cache)
+        return CompiledDecodeStep(compiled, self._donate,
+                                  donate=self.donate, rung="grid")
+
+    def _compile_jit(self, B: int, ctx: int,
+                     donate: bool) -> CompiledDecodeStep:
+        compiled = self._lowered(B, ctx).compile(backend="jnp",
+                                                 cache=self.cache)
+        return CompiledDecodeStep(compiled, self._donate, donate=donate,
+                                  rung="jit")
+
+    def fallback_for(self, B: int, ctx: int) -> CompiledDecodeStep:
+        """The jnp-jit rung for a bucket, never donating — a failed grid
+        step is re-run through it from the still-live inputs."""
+        fb = self._fallbacks.get((B, ctx))
+        if fb is None:
+            fb = self._compile_jit(B, ctx, donate=False)
+            self._fallbacks[(B, ctx)] = fb
+        return fb
+
     def step_for(self, B: int, ctx: int) -> CompiledDecodeStep:
         if ctx % self.page_size:
             raise ValueError(f"ctx bucket {ctx} not a multiple of the "
                              f"page size {self.page_size}")
-        step = self._steps.get((B, ctx))
+        key = (B, ctx)
+        step = self._steps.get(key)
+        fail = self._fail.get(key)
+        if step is not None and fail is not None:
+            # degraded bucket: retry the grid compile with capped backoff
+            fail["hits_since"] += 1
+            if fail["hits_since"] >= fail["backoff"]:
+                try:
+                    step = self._compile_grid(B, ctx)
+                    self._steps[key] = step
+                    self.events.append({
+                        "kind": "compile_recovered", "bucket": key,
+                        "after_failures": fail["failures"]})
+                    del self._fail[key]
+                except Exception as e:  # noqa: BLE001 - stays degraded
+                    fail["failures"] += 1
+                    fail["hits_since"] = 0
+                    fail["backoff"] = min(fail["backoff"] * 2,
+                                          self.max_compile_backoff)
+                    self.events.append({
+                        "kind": "compile_retry_failed", "bucket": key,
+                        "error": repr(e),
+                        "next_retry_after": fail["backoff"]})
+            return self._steps[key]
         if step is None:
-            lowered = serving_decode_step.lower(
-                model=self.model, wspecs=self._wspecs, B=B, ctx=ctx,
-                page_size=self.page_size, n_pages=self.n_pages,
-                cache_dtype=self.cache_dtype)
-            compiled = lowered.compile(
-                backend="pallas", interpret=self.interpret,
-                pipeline=decode_pipeline(self.interpret,
-                                         self.dtype_aware_sublanes),
-                cache=self.cache)
-            step = CompiledDecodeStep(compiled, self._donate)
-            self._steps[(B, ctx)] = step
+            try:
+                step = self._compile_grid(B, ctx)
+            except Exception as e:  # noqa: BLE001 - degrade, don't die
+                self.events.append({"kind": "compile_fallback",
+                                    "bucket": key, "error": repr(e),
+                                    "rung": "jit"})
+                self._fail[key] = {"failures": 1, "hits_since": 0,
+                                   "backoff": 1}
+                step = self._compile_jit(B, ctx, donate=self.donate)
+            self._steps[key] = step
         return step

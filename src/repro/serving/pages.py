@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Dict, List, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 NULL_PAGE = 0
 
@@ -44,15 +45,14 @@ class KVPagePool:
         self.n_pages = n_pages
         self.page_size = page_size
         self.dtype = jnp.dtype(dtype)
+        self._layers = dict(layers)
         # page 0 is the null page and is never handed out
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._reserved = 0
+        self._seized = 0
         self.k_pages: Dict[int, jnp.ndarray] = {}
         self.v_pages: Dict[int, jnp.ndarray] = {}
-        for li, (hkv, dh) in layers.items():
-            shape = (n_pages, page_size, hkv, dh)
-            self.k_pages[li] = jnp.zeros(shape, self.dtype)
-            self.v_pages[li] = jnp.zeros(shape, self.dtype)
+        self.reset_storage()
 
     # -- accounting -----------------------------------------------------
     @property
@@ -105,7 +105,59 @@ class KVPagePool:
     def stats(self) -> dict:
         return {"n_pages": self.n_pages, "free": len(self._free),
                 "reserved": self._reserved, "available": self.available,
-                "page_size": self.page_size}
+                "seized": self._seized, "page_size": self.page_size}
+
+    # -- fault injection / recovery -------------------------------------
+    def seize(self, n: int = 0) -> List[int]:
+        """Remove up to ``n`` free pages (all of them for ``n <= 0``)
+        from circulation WITHOUT reservation accounting — the
+        fault-injection hook for forced page pressure. Seized pages may
+        leave ``available`` negative; the scheduler's preemption path is
+        what absorbs that hazard. Return them with :meth:`release`."""
+        if n <= 0 or n > len(self._free):
+            n = len(self._free)
+        self._seized += n
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, pages: List[int]):
+        """Return pages taken by :meth:`seize` to the free list."""
+        if len(pages) > self._seized:
+            raise PageError(f"releasing {len(pages)} pages but only "
+                            f"{self._seized} are seized")
+        for p in pages:
+            if not (0 < p < self.n_pages) or p in self._free:
+                raise PageError(f"releasing bad/free page {p}")
+        self._seized -= len(pages)
+        self._free.extend(pages)
+
+    def reset_storage(self):
+        """(Re)allocate zeroed page arrays. Used at construction and by
+        recompute recovery, where a failed donating step has consumed
+        the live arrays and every sequence will be re-prefilled."""
+        for li, (hkv, dh) in self._layers.items():
+            shape = (self.n_pages, self.page_size, hkv, dh)
+            self.k_pages[li] = jnp.zeros(shape, self.dtype)
+            self.v_pages[li] = jnp.zeros(shape, self.dtype)
+
+    # -- snapshot --------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Host-side copy of accounting + page storage (numpy-backed)."""
+        return {"free": list(self._free), "reserved": self._reserved,
+                "seized": self._seized,
+                "k_pages": {li: np.asarray(a)
+                            for li, a in self.k_pages.items()},
+                "v_pages": {li: np.asarray(a)
+                            for li, a in self.v_pages.items()}}
+
+    def restore(self, snap: dict):
+        if set(snap["k_pages"]) != set(self.k_pages):
+            raise PageError("snapshot layer set does not match this pool")
+        self._free = list(snap["free"])
+        self._reserved = int(snap["reserved"])
+        self._seized = int(snap.get("seized", 0))
+        for li in self.k_pages:
+            self.k_pages[li] = jnp.asarray(snap["k_pages"][li], self.dtype)
+            self.v_pages[li] = jnp.asarray(snap["v_pages"][li], self.dtype)
 
     # -- storage --------------------------------------------------------
     def write_prefill(self, li: int, pages: List[int], k, v):

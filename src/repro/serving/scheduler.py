@@ -18,21 +18,58 @@ position 0; their logits are never sampled. Eviction frees the request's
 pages, returns its unused reservation, zeroes its block-table row, and
 the next admission reuses both the slot and the pages — no live batch
 array is ever reshaped.
+
+Fault tolerance (ISSUE 8) is layered around the compiled step, not into
+user code:
+
+* **Recompute preemption** — if binding a page at a boundary crossing
+  raises :class:`PageError` (pool pressure, injected or real), the
+  youngest admitted request is evicted with its generated tokens kept,
+  re-queued at the front, and re-prefilled over prompt + generated
+  tokens on readmission; the re-prefill does not re-sample, so greedy
+  streams are byte-identical to an unpreempted run. A request preempted
+  more than ``max_preemptions`` times finishes ``preempted_limit``.
+* **Typed finish reasons** — every request ends with
+  ``Request.finish_reason`` in :data:`FINISH_REASONS`; per-request
+  ``deadline_s`` and the scheduler-wide ``queue_ttl_s`` expire requests
+  (queued or active) with ``timeout``.
+* **Degradation ladder** — a step that raises or produces non-finite
+  logits on an active lane is (1) re-run through the never-donating
+  jnp-jit fallback bucket when the inputs are still alive
+  (``donate=False``, the default once an injector is armed), else
+  (2) recovered by *recompute*: every active request is preempted with
+  its tokens, the page/state arrays are re-zeroed (a donating step may
+  have consumed them), and readmission re-prefills. Lanes that stay
+  non-finite and steps that keep failing increment per-request
+  ``n_failures``; at ``max_failures`` the request finishes ``failed``
+  instead of retrying forever. Detection and the event log live in the
+  :class:`~repro.serving.faults.StepWatchdog` (HeartbeatMonitor-backed).
+* **Snapshot/restore** — :meth:`Scheduler.snapshot` serializes the whole
+  in-flight state (queue, slots, block tables, KV pages, recurrent
+  states, RNG) host-side; :meth:`Scheduler.restore` resumes token-exact
+  in a fresh scheduler over the same model/config.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from collections import Counter, deque
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .compile import (DecodeStepCompiler, attention_layer_shapes,
-                      flat_layer_specs, state_specs)
+                      state_specs)
+from .faults import StepWatchdog
 from .pages import KVPagePool, PageError
+
+#: the typed ways a request can end
+FINISH_REASONS = ("eos", "max_tokens", "timeout", "preempted_limit",
+                  "failed")
+
+SNAPSHOT_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -41,6 +78,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None  # wall budget from submit time
     # -- scheduler-owned runtime state --
     slot: int = -1
     pos: int = 0                      # next KV write position
@@ -51,6 +89,10 @@ class Request:
     first_token_time: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None  # one of FINISH_REASONS when done
+    n_preemptions: int = 0
+    n_failures: int = 0
+    admit_seq: int = -1               # admission order; youngest = max
 
     @property
     def ttft(self) -> float:
@@ -72,7 +114,12 @@ class Scheduler:
                  interpret: bool = True,
                  dtype_aware_sublanes: bool = False, compile_cache=None,
                  temperature: float = 0.0, top_k: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 queue_ttl_s: Optional[float] = None,
+                 max_preemptions: int = 3, max_failures: int = 3,
+                 injector=None, watchdog: Optional[StepWatchdog] = None,
+                 donate: Optional[bool] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         if max_model_len % page_size:
             raise ValueError("max_model_len must be a multiple of "
                              f"page_size ({page_size}), got {max_model_len}")
@@ -83,18 +130,28 @@ class Scheduler:
         self.page_size = page_size
         self.max_model_len = max_model_len
         self.prefill_chunk = prefill_chunk
+        self.queue_ttl_s = queue_ttl_s
+        self.max_preemptions = max_preemptions
+        self.max_failures = max_failures
+        self.injector = injector
+        self._clock = clock
         self.pool = KVPagePool(attention_layer_shapes(model), n_pages,
                                page_size, dtype=cache_dtype)
+        if donate is None:
+            # donation consumes the step inputs, which forecloses the
+            # re-run-from-same-inputs recovery rung; an armed injector
+            # implies fault-tolerant mode, so default donation off there
+            donate = injector is None
         self.compiler = compiler or DecodeStepCompiler(
             model, params, page_size=page_size, n_pages=n_pages,
             cache_dtype=cache_dtype, interpret=interpret,
-            dtype_aware_sublanes=dtype_aware_sublanes, cache=compile_cache)
+            dtype_aware_sublanes=dtype_aware_sublanes, cache=compile_cache,
+            donate=donate)
+        self.watchdog = watchdog or StepWatchdog()
         self.block_table = np.zeros(
             (max_slots, max_model_len // page_size), np.int32)
         self._sspecs = state_specs(model)
-        self.states: Dict[str, jnp.ndarray] = {
-            name: jnp.zeros((max_slots,) + shape, dt)
-            for name, (li, shape, dt) in self._sspecs.items()}
+        self.states: Dict[str, jnp.ndarray] = self._zero_states()
         if temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {temperature}")
         if top_k is not None and top_k < 1:
@@ -106,13 +163,26 @@ class Scheduler:
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.last_logits = None
+        self.events: List[dict] = []
+        self.n_preemptions = 0
+        self.n_fallback_steps = 0
+        self.n_recomputes = 0
         self._next_rid = 0
+        self._admit_seq = 0
         self._prefill_step = jax.jit(model.decode_step)
-        self.n_steps = 0
+        self.n_steps = 0         # scheduler iterations — the fault clock
+        self.n_decode_steps = 0  # compiled decode steps actually executed
+        if injector is not None:
+            injector.attach(self)
+
+    def _zero_states(self) -> Dict[str, jnp.ndarray]:
+        return {name: jnp.zeros((self.max_slots,) + shape, dt)
+                for name, (li, shape, dt) in self._sspecs.items()}
 
     # -- submission / admission -----------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_model_len:
@@ -121,7 +191,7 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, list(prompt), max_new_tokens, eos_id,
-                      submit_time=time.perf_counter())
+                      deadline_s=deadline_s, submit_time=self._clock())
         self.queue.append(req)
         return rid
 
@@ -148,10 +218,17 @@ class Scheduler:
 
     def _admit(self, req: Request, slot: int, total_pages: int):
         """Chunked prefill into a dense scratch cache, then scatter the
-        K/V slab into pages and install the request in its slot."""
+        K/V slab into pages and install the request in its slot.
+
+        A *re*-admission (a preempted request carrying generated tokens)
+        prefills prompt + tokens_out[:-1] — everything whose K/V the
+        evicted pages held — and does NOT sample: the last generated
+        token is still waiting to be fed to the next decode step, so the
+        resumed stream is exactly the unpreempted one."""
         model, params = self.model, self.params
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        L = len(req.prompt)
+        seq = req.prompt + req.tokens_out[:-1]
+        prompt = jnp.asarray(seq, jnp.int32)[None]
+        L = len(seq)
         cache = model.init_cache(1, L, dtype=self.pool.dtype)
         logits = None
         i = 0
@@ -177,12 +254,15 @@ class Scheduler:
 
         req.slot = slot
         req.pos = L
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
         self.slots[slot] = req
-        first = self._sample(logits[0, -1])
-        req.tokens_out.append(first)
-        req.first_token_time = time.perf_counter()
-        req.token_times.append(req.first_token_time - req.submit_time)
-        self._maybe_finish(req, first)
+        if not req.tokens_out:  # fresh request: sample its first token
+            first = self._sample(logits[0, -1])
+            req.tokens_out.append(first)
+            req.first_token_time = self._clock()
+            req.token_times.append(req.first_token_time - req.submit_time)
+            self._maybe_finish(req, first)
 
     def _iter_layer_caches(self, cache):
         """(flat layer index, per-layer cache dict) in execution order."""
@@ -196,25 +276,74 @@ class Scheduler:
             yield li, c
             li += 1
 
-    # -- eviction ---------------------------------------------------------
+    # -- finishing / eviction / preemption --------------------------------
     def _maybe_finish(self, req: Request, last_token: int):
-        if (len(req.tokens_out) >= req.max_new_tokens
-                or (req.eos_id is not None and last_token == req.eos_id)
-                or req.pos >= self.max_model_len - 1):
-            self._finish(req)
+        if req.eos_id is not None and last_token == req.eos_id:
+            self._finish(req, "eos")
+        elif (len(req.tokens_out) >= req.max_new_tokens
+              or req.pos >= self.max_model_len - 1):
+            self._finish(req, "max_tokens")
 
-    def _finish(self, req: Request):
+    def _strip(self, req: Request, touch_state: bool = True):
+        """Return the request's pool/slot resources. ``touch_state=False``
+        skips zeroing the jnp state rows (recompute recovery replaces the
+        whole arrays — the old ones may be donated-dead)."""
         if req.pages:
             self.pool.free(req.pages)
-        self.pool.unreserve(req.reserved_left)
-        req.reserved_left = 0
+            req.pages = []
+        if req.reserved_left:
+            self.pool.unreserve(req.reserved_left)
+            req.reserved_left = 0
         if req.slot >= 0:
             self.block_table[req.slot, :] = 0
-            for name in self.states:
-                self.states[name] = self.states[name].at[req.slot].set(0)
+            if touch_state:
+                for name in self.states:
+                    self.states[name] = self.states[name].at[req.slot].set(0)
             self.slots[req.slot] = None
+            req.slot = -1
+
+    def _finish(self, req: Request, reason: str):
+        assert reason in FINISH_REASONS, reason
+        self._strip(req)
+        req.finish_reason = reason
         req.done = True
         self.finished.append(req)
+
+    def _preempt(self, req: Request):
+        """Evict keeping generated tokens; re-queue at the front for
+        recompute-readmission (or finish ``preempted_limit``)."""
+        self.n_preemptions += 1
+        req.n_preemptions += 1
+        self._strip(req)
+        if req.n_preemptions > self.max_preemptions:
+            req.finish_reason = "preempted_limit"
+            req.done = True
+            self.finished.append(req)
+            self.events.append({"kind": "preempted_limit", "rid": req.rid,
+                                "step": self.n_steps})
+        else:
+            self.queue.appendleft(req)
+            self.events.append({"kind": "preempt", "rid": req.rid,
+                                "step": self.n_steps,
+                                "kept_tokens": len(req.tokens_out)})
+
+    def _expire(self):
+        """Finish queued/active requests past their deadline or TTL."""
+        now = self._clock()
+        for r in list(self.queue):
+            limit = r.deadline_s if r.deadline_s is not None \
+                else self.queue_ttl_s
+            if limit is not None and now - r.submit_time > limit:
+                self.queue.remove(r)
+                self._finish(r, "timeout")
+                self.events.append({"kind": "timeout", "rid": r.rid,
+                                    "where": "queue", "step": self.n_steps})
+        for r in list(self.slots):
+            if (r is not None and r.deadline_s is not None
+                    and now - r.submit_time > r.deadline_s):
+                self._finish(r, "timeout")
+                self.events.append({"kind": "timeout", "rid": r.rid,
+                                    "where": "active", "step": self.n_steps})
 
     # -- decode ----------------------------------------------------------
     def _buckets(self, active: List[Request]) -> tuple:
@@ -225,31 +354,38 @@ class Scheduler:
         ctx = min(pages * self.page_size, self.max_model_len)
         return B, ctx
 
-    def step(self) -> List[Request]:
-        """Admit waiting requests, run one compiled decode step over all
-        active slots, sample, and evict finished requests. Returns the
-        requests that finished during this step."""
-        self._try_admit()
-        n_done = len(self.finished)
-        active = [r for r in self.slots if r is not None]
-        if not active:
-            return self.finished[n_done:]
-
-        for r in active:  # bind a fresh page when crossing a boundary
+    def _bind_pages(self, active: List[Request]):
+        """Bind a fresh page to each request crossing a page boundary.
+        Pool pressure (PageError) preempts the youngest admitted request
+        instead of killing the server — the ISSUE-8 crash-path fix."""
+        for r in list(active):
+            if r.done or r.slot < 0:
+                continue  # evicted while a victim for an earlier request
             while len(r.pages) < self.pool.pages_for(r.pos + 1):
-                pg = self.pool.alloc(1)[0]
-                r.reserved_left -= 1
+                reserved = r.reserved_left > 0
+                try:
+                    pg = self.pool.alloc(1, reserved=reserved)[0]
+                except PageError:
+                    victim = max(
+                        (a for a in self.slots if a is not None),
+                        key=lambda a: a.admit_seq)
+                    self._preempt(victim)
+                    if victim is r:
+                        break
+                    continue
+                if reserved:
+                    r.reserved_left -= 1
                 self.block_table[r.slot, len(r.pages)] = pg
                 r.pages.append(pg)
 
-        B, ctx = self._buckets(active)
+    def _step_kwargs(self, B: int, ctx: int) -> Dict[str, jnp.ndarray]:
+        active = [r for r in self.slots if r is not None]
         tokens = np.zeros((B, 1), np.int32)
         positions = np.zeros((B,), np.int32)
         for r in active:
             tokens[r.slot, 0] = r.tokens_out[-1]
             positions[r.slot] = r.pos
         n_bt = ctx // self.page_size
-
         kwargs = dict(self.compiler.flat_weights)
         kwargs["tokens"] = jnp.asarray(tokens)
         kwargs["positions"] = jnp.asarray(positions)
@@ -259,15 +395,117 @@ class Scheduler:
             kwargs[f"vp{li}"] = self.pool.v_pages[li]
         for name in self._sspecs:
             kwargs[name] = self.states[name][:B]
+        return kwargs
 
+    def _execute(self, step_fn, kwargs, active, B, ctx):
+        """Run one decode step through the degradation ladder.
+
+        Returns ``(out, rows, dt, bad)`` on success — ``bad`` the active
+        requests whose logits stayed non-finite after the ladder — or
+        ``None`` when no usable output was produced (recompute recovery
+        has already re-queued the active requests)."""
+
+        def attempt(fn, retry):
+            if self.injector is not None:
+                self.injector.on_execute(self.n_steps, retry=retry)
+            t0 = time.perf_counter()
+            out = fn(kwargs)
+            out["logits"].block_until_ready()
+            dt = time.perf_counter() - t0
+            rows = np.asarray(out["logits"])
+            if self.injector is not None:
+                rows = self.injector.corrupt_logits(self.n_steps, rows)
+            return out, rows, dt
+
+        def bad_lanes(rows):
+            return [r for r in active
+                    if not np.isfinite(rows[r.slot]).all()]
+
+        try:
+            out, rows, dt = attempt(step_fn, retry=False)
+            bad = bad_lanes(rows)
+            if not bad:
+                return out, rows, dt, []
+            self.watchdog.fault(self.n_steps, "nan_logits",
+                                f"slots {[r.slot for r in bad]}")
+        except Exception as e:  # noqa: BLE001 - every step fault recovers
+            self.watchdog.fault(self.n_steps, "step_exception", repr(e))
+        # rung 2: re-run from the same inputs — possible only when the
+        # primary step did not donate (inputs still alive)
+        if not self.compiler.donate:
+            try:
+                fb = self.compiler.fallback_for(B, ctx)
+                out, rows, dt = attempt(fb, retry=True)
+                self.n_fallback_steps += 1
+                bad = bad_lanes(rows)
+                if bad:
+                    self.watchdog.fault(self.n_steps,
+                                        "nan_logits_persistent",
+                                        f"slots {[r.slot for r in bad]}")
+                return out, rows, dt, bad
+            except Exception as e:  # noqa: BLE001 - drop to rung 3
+                self.watchdog.fault(self.n_steps, "fallback_failed",
+                                    repr(e))
+        # rung 3: recompute — preempt everyone with tokens kept, rebuild
+        # the (possibly donated-dead) device arrays, re-prefill on admit
+        self._recover_recompute(active)
+        return None
+
+    def _recover_recompute(self, active: List[Request]):
+        self.n_recomputes += 1
+        self.watchdog.fault(self.n_steps, "recompute_recovery",
+                            f"rids {[r.rid for r in active]}")
+        for r in sorted(active, key=lambda a: a.admit_seq, reverse=True):
+            r.n_failures += 1
+            self._strip(r, touch_state=False)
+            if r.n_failures >= self.max_failures:
+                r.finish_reason = "failed"
+                r.done = True
+                self.finished.append(r)
+            else:
+                self.queue.appendleft(r)
+        self.block_table[:] = 0
+        self.pool.reset_storage()
+        self.states = self._zero_states()
+
+    def step(self) -> List[Request]:
+        """Admit waiting requests, run one compiled decode step over all
+        active slots, sample, and evict finished requests. Returns the
+        requests that finished during this step.
+
+        ``n_steps`` ticks on every call — including iterations where
+        recovery preempted everyone and no decode ran — so it is the
+        clock fault plans key on: a stalled scheduler still advances
+        toward e.g. a scheduled pressure release. ``n_decode_steps``
+        counts compiled steps actually executed."""
+        try:
+            return self._step_inner()
+        finally:
+            self.n_steps += 1
+
+    def _step_inner(self) -> List[Request]:
+        n_done = len(self.finished)
+        self._expire()
+        if self.injector is not None:
+            self.injector.on_step_begin(self.n_steps, self)
+        self._try_admit()
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return self.finished[n_done:]
+
+        self._bind_pages(active)
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return self.finished[n_done:]
+
+        B, ctx = self._buckets(active)
+        kwargs = self._step_kwargs(B, ctx)
         step_fn = self.compiler.step_for(B, ctx)
-        t0 = time.perf_counter()
-        out = step_fn(kwargs)
-        logits = out["logits"]
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
-        self.n_steps += 1
-        self.last_logits = logits
+        result = self._execute(step_fn, kwargs, active, B, ctx)
+        if result is None:  # recompute recovery: no tokens this step
+            return self.finished[n_done:]
+        out, rows, dt, bad = result
+        self.last_logits = out["logits"]
 
         for li in attention_layer_shapes(self.model):
             self.pool.k_pages[li] = out[f"kp{li}"]
@@ -279,8 +517,20 @@ class Scheduler:
             else:
                 self.states[name] = self.states[name].at[:B].set(out[name])
 
-        rows = np.asarray(logits)
+        slow = (self.injector.slow_factor_for(self.n_steps)
+                if self.injector is not None else 1.0)
+        self.watchdog.record(self.n_steps, dt * slow)
+        self.n_decode_steps += 1
+
+        skip = set()
+        for r in bad:  # lanes still non-finite after the ladder
+            skip.add(r.rid)
+            r.n_failures += 1
+            if r.n_failures >= self.max_failures:
+                self._finish(r, "failed")
         for r in active:
+            if r.done or r.rid in skip:
+                continue  # failed lanes retry (or are done) — no token
             t = self._sample(rows[r.slot])
             r.pos += 1
             r.tokens_out.append(t)
@@ -317,6 +567,100 @@ class Scheduler:
             raise RuntimeError(f"did not drain within {max_steps} steps")
         return sorted(self.finished, key=lambda r: r.rid)
 
+    # -- observability ----------------------------------------------------
+    def stats(self) -> dict:
+        """One typed view of the run: finish reasons, recovery counters,
+        watchdog/compiler event logs, pool accounting."""
+        reasons = Counter(r.finish_reason for r in self.finished)
+        return {"n_steps": self.n_steps,
+                "n_decode_steps": self.n_decode_steps,
+                "finished": len(self.finished),
+                "queued": len(self.queue),
+                "active": sum(r is not None for r in self.slots),
+                "finish_reasons": dict(reasons),
+                "preemptions": self.n_preemptions,
+                "fallback_steps": self.n_fallback_steps,
+                "recomputes": self.n_recomputes,
+                "watchdog_events": list(self.watchdog.events),
+                "compiler_events": list(self.compiler.events),
+                "events": list(self.events),
+                "pool": self.pool.stats()}
+
+    # -- snapshot / restore -----------------------------------------------
+    def _snapshot_config(self) -> dict:
+        return {"max_slots": self.max_slots, "page_size": self.page_size,
+                "n_pages": self.pool.n_pages,
+                "max_model_len": self.max_model_len,
+                "cache_dtype": str(self.pool.dtype)}
+
+    def snapshot(self) -> dict:
+        """Serialize the whole in-flight state host-side (numpy-backed).
+
+        Call between steps (after :meth:`step` returns). The snapshot is
+        a deep copy: continuing this scheduler afterwards does not
+        disturb it. Restoring into a fresh scheduler over the same
+        model/params/config resumes token-exact — the compiled step is a
+        pure function of exactly what the snapshot captures (tokens,
+        block tables, pages, recurrent states, RNG)."""
+        def req(r):
+            return None if r is None else dataclasses.asdict(r)
+
+        return {"version": SNAPSHOT_VERSION,
+                "config": self._snapshot_config(),
+                "now": self._clock(),
+                "queue": [req(r) for r in self.queue],
+                "slots": [req(r) for r in self.slots],
+                "finished": [req(r) for r in self.finished],
+                "block_table": self.block_table.copy(),
+                "pool": self.pool.snapshot(),
+                "states": {name: np.asarray(a)
+                           for name, a in self.states.items()},
+                "rng": self._rng.bit_generator.state,
+                "next_rid": self._next_rid,
+                "admit_seq": self._admit_seq,
+                "n_steps": self.n_steps,
+                "n_decode_steps": self.n_decode_steps}
+
+    def restore(self, snap: dict) -> "Scheduler":
+        """Load a :meth:`snapshot` into this (fresh) scheduler.
+
+        The scheduler must be built over the same model geometry
+        (slots/pages/model-len/dtype); wall-clock request timestamps are
+        rebased onto this scheduler's clock so deadlines keep meaning
+        'time since submission'."""
+        if snap.get("version") != SNAPSHOT_VERSION:
+            raise ValueError(f"unknown snapshot version "
+                             f"{snap.get('version')!r}")
+        if snap["config"] != self._snapshot_config():
+            raise ValueError(f"snapshot config {snap['config']} does not "
+                             f"match scheduler {self._snapshot_config()}")
+        shift = self._clock() - snap["now"]
+
+        def req(d):
+            if d is None:
+                return None
+            r = Request(**d)
+            r.submit_time += shift
+            if r.first_token_time:
+                r.first_token_time += shift
+            return r
+
+        self.queue = deque(req(d) for d in snap["queue"])
+        self.slots = [req(d) for d in snap["slots"]]
+        self.finished = [req(d) for d in snap["finished"]]
+        self.block_table = np.array(snap["block_table"], np.int32)
+        self.pool.restore(snap["pool"])
+        self.states = {name: jnp.asarray(snap["states"][name],
+                                         self.states[name].dtype)
+                       for name in self.states}
+        self._rng.bit_generator.state = snap["rng"]
+        self._next_rid = int(snap["next_rid"])
+        self._admit_seq = int(snap["admit_seq"])
+        self.n_steps = int(snap["n_steps"])
+        self.n_decode_steps = int(snap["n_decode_steps"])
+        self.last_logits = None
+        return self
+
     # -- invariants -------------------------------------------------------
     def check_invariants(self):
         """Page accounting + block-table consistency; raises PageError."""
@@ -337,10 +681,11 @@ class Scheduler:
             raise PageError("null page bound to a live request")
         if len(set(live)) != len(live):
             raise PageError(f"page bound to two live requests: {live}")
-        n_accounted = self.pool.num_free + len(live)
+        n_accounted = self.pool.num_free + len(live) + self.pool._seized
         if n_accounted != self.pool.n_pages - 1:
             raise PageError(f"page leak: {self.pool.num_free} free + "
-                            f"{len(live)} live != {self.pool.n_pages - 1}")
+                            f"{len(live)} live + {self.pool._seized} "
+                            f"seized != {self.pool.n_pages - 1}")
         reserved = sum(r.reserved_left for r in self.slots if r is not None)
         if reserved != self.pool._reserved:
             raise PageError(f"reservation drift: pool {self.pool._reserved}"
@@ -349,3 +694,7 @@ class Scheduler:
             if r is None and any(self.block_table[i]):
                 raise PageError(f"free slot {i} has a non-zero "
                                 "block-table row")
+        for r in self.finished:
+            if not r.done or r.finish_reason not in FINISH_REASONS:
+                raise PageError(f"request {r.rid} finished without a "
+                                f"typed reason: {r.finish_reason!r}")

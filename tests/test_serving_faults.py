@@ -1,0 +1,342 @@
+"""Fault-tolerant serving (ISSUE 8): preemption, deadlines, degradation
+ladder, fault injection, and snapshot-exact recovery.
+
+The acceptance bar is *token-exactness under faults*: for every recovery
+path — preemption + re-prefill, fallback re-run after an injected step
+exception or NaN logits, recompute recovery under buffer donation,
+snapshot/restore mid-decode — the greedy token streams of non-faulted
+requests must be byte-identical to a fault-free run, and every request
+must terminate with a typed ``finish_reason``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.pipeline.cache import CompilationCache
+from repro.runtime.cluster_sim import FaultPlan, SimulatedCluster
+from repro.serving import (FINISH_REASONS, FaultInjector, Scheduler,
+                           ServeFaultPlan, StepWatchdog)
+
+# one cache for the whole module: every test uses the same scheduler
+# geometry, so each (B, ctx) bucket lowers exactly once
+CACHE = CompilationCache()
+
+PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2]]
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              activation_dtype="float32")
+    model = TransformerLM(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def mk(model_params, max_slots=4, **kw):
+    model, params = model_params
+    return Scheduler(model, params, max_slots=max_slots, page_size=4,
+                     n_pages=32, max_model_len=32, prefill_chunk=4,
+                     cache_dtype="float32", compile_cache=CACHE, **kw)
+
+
+def streams(reqs):
+    return {r.rid: list(r.tokens_out) for r in reqs}
+
+
+@pytest.fixture(scope="module")
+def baseline(model_params):
+    """Fault-free greedy streams for PROMPTS."""
+    s = mk(model_params)
+    for p in PROMPTS:
+        s.submit(p, 8)
+    out = streams(s.run())
+    s.check_invariants()
+    return out
+
+
+def run_plan(model_params, plan, **kw):
+    s = mk(model_params, injector=FaultInjector(plan), **kw)
+    for p in PROMPTS:
+        s.submit(p, 8)
+    out = streams(s.run())
+    s.check_invariants()
+    return s, out
+
+
+# ---------------------------------------------------------------------------
+# Preemption (and the page-boundary crash regression)
+# ---------------------------------------------------------------------------
+class TestPreemption:
+    def test_page_pressure_preempts_instead_of_crashing(self, model_params,
+                                                        baseline):
+        """Regression: Scheduler.step() used an unguarded pool.alloc(1)
+        at page-boundary crossings — pool pressure killed the server.
+        Now it preempts the youngest request and the run completes."""
+        plan = ServeFaultPlan(page_pressure_at=1,
+                              page_pressure_release_at=8)
+        s, out = run_plan(model_params, plan)
+        assert s.n_preemptions >= 1
+        assert out == baseline  # preempted streams resume token-exact
+        assert all(r.finish_reason in FINISH_REASONS for r in s.finished)
+
+    def test_direct_seize_mid_run(self, model_params, baseline):
+        """Same regression without the injector: seize the pool by hand
+        between steps."""
+        s = mk(model_params)
+        for p in PROMPTS:
+            s.submit(p, 8)
+        s.step()
+        seized = s.pool.seize()
+        for _ in range(4):
+            s.step()  # crossings preempt, never raise
+            s.check_invariants()
+        s.pool.release(seized)
+        out = streams(s.run())
+        s.check_invariants()
+        assert out == baseline
+
+    def test_preempted_request_keeps_tokens(self, model_params):
+        plan = ServeFaultPlan(page_pressure_at=1,
+                              page_pressure_release_at=10)
+        s, _ = run_plan(model_params, plan)
+        evs = [e for e in s.events if e["kind"] == "preempt"]
+        assert evs and all(e["kept_tokens"] > 0 for e in evs)
+
+    def test_preemption_limit_finishes_typed(self, model_params):
+        """A request evicted more than max_preemptions times stops
+        thrashing and finishes ``preempted_limit``."""
+        plan = ServeFaultPlan(page_pressure_at=1,
+                              page_pressure_release_at=200)
+        s = mk(model_params, max_slots=1, max_preemptions=0,
+               injector=FaultInjector(plan))
+        s.submit([1, 2, 3, 4, 5, 6, 7], 12)  # crosses a page boundary
+        s.run()
+        s.check_invariants()
+        assert [r.finish_reason for r in s.finished] == ["preempted_limit"]
+
+
+# ---------------------------------------------------------------------------
+# Deadlines and TTLs
+# ---------------------------------------------------------------------------
+class TestDeadlines:
+    def test_queue_ttl_and_active_deadline(self, model_params):
+        clk = [0.0]
+        s = mk(model_params, max_slots=1, clock=lambda: clk[0],
+               queue_ttl_s=5.0)
+        s.submit(PROMPTS[0], 20, deadline_s=2.0)   # active, tight deadline
+        s.submit(PROMPTS[1], 8)                    # queued, TTL 5
+        s.submit(PROMPTS[2], 8)                    # queued, TTL 5
+        for _ in range(3):
+            s.step()
+            clk[0] += 1.5
+        clk[0] += 10.0  # everything still waiting is now past its limit
+        s.run()
+        s.check_invariants()
+        reasons = {r.rid: r.finish_reason for r in s.finished}
+        assert reasons[0] == "timeout"          # active past deadline
+        assert "timeout" in (reasons[1], reasons[2])  # queue TTL
+        assert all(v in FINISH_REASONS for v in reasons.values())
+
+    def test_no_deadline_never_times_out(self, model_params, baseline):
+        clk = [0.0]
+        s = mk(model_params, clock=lambda: clk[0])
+        for p in PROMPTS:
+            s.submit(p, 8)
+        clk[0] += 1e9
+        out = streams(s.run())
+        assert out == baseline
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder
+# ---------------------------------------------------------------------------
+class TestDegradationLadder:
+    def test_injected_exception_falls_back_token_exact(self, model_params,
+                                                       baseline):
+        plan = ServeFaultPlan(step_exception_at=1)
+        s, out = run_plan(model_params, plan)
+        assert s.n_fallback_steps >= 1
+        assert s.watchdog.faults_of("step_exception")
+        assert out == baseline
+
+    def test_nan_logits_rerun_token_exact(self, model_params, baseline):
+        plan = ServeFaultPlan(nan_logits_at=2)
+        s, out = run_plan(model_params, plan)
+        assert s.watchdog.faults_of("nan_logits")
+        assert out == baseline
+
+    def test_persistent_nan_lane_fails_only_that_request(self, model_params,
+                                                         baseline):
+        """One lane's logits stay NaN: that request finishes ``failed``
+        after max_failures; the other lanes stream on untouched."""
+        plan = ServeFaultPlan(nan_logits_at=1, nan_slots=(0,),
+                              nan_persistent=True)
+        s, out = run_plan(model_params, plan, max_failures=2)
+        reasons = {r.rid: r.finish_reason for r in s.finished}
+        assert reasons[0] == "failed"
+        for rid in (1, 2, 3):
+            assert out[rid] == baseline[rid]
+
+    def test_persistent_exception_fails_everyone_typed(self, model_params):
+        plan = ServeFaultPlan(step_exception_at=0,
+                              exception_persistent=True)
+        s, _ = run_plan(model_params, plan, max_failures=2)
+        assert {r.finish_reason for r in s.finished} == {"failed"}
+        assert len(s.finished) == len(PROMPTS)
+
+    def test_recompute_recovery_under_donation(self, model_params,
+                                               baseline):
+        """With buffer donation on, a failed step's inputs are consumed —
+        recovery must recompute from tokens (preempt-all + re-prefill)
+        and still produce byte-identical streams."""
+        plan = ServeFaultPlan(step_exception_at=1)
+        s, out = run_plan(model_params, plan, donate=True)
+        assert s.n_recomputes >= 1
+        assert s.n_fallback_steps == 0  # rung 2 impossible when donating
+        assert out == baseline
+
+    def test_compile_failure_degrades_then_recovers(self, model_params,
+                                                    baseline):
+        """A failing grid compile serves the jnp-jit rung and retries
+        with capped backoff until the compile succeeds again."""
+        plan = ServeFaultPlan(compile_fail_buckets="all",
+                              compile_fail_times=2)
+        s, out = run_plan(model_params, plan)
+        kinds = [e["kind"] for e in s.compiler.events]
+        assert "compile_fallback" in kinds
+        assert "compile_retry_failed" in kinds
+        assert "compile_recovered" in kinds
+        assert out == baseline
+
+    def test_slow_step_trips_watchdog(self, model_params):
+        plan = ServeFaultPlan(slow_step_at=6, slow_factor=1e6)
+        wd = StepWatchdog(deadline_s=3600.0, straggler_factor=4.0)
+        s = mk(model_params, injector=FaultInjector(plan), watchdog=wd)
+        for p in PROMPTS:
+            s.submit(p, 8)
+        s.run()
+        assert any(e["kind"] in ("straggler", "dead")
+                   for e in wd.events)
+
+
+# ---------------------------------------------------------------------------
+# Combined acceptance plan
+# ---------------------------------------------------------------------------
+def test_combined_fault_plan_token_exact(model_params, baseline):
+    """ISSUE-8 acceptance: one step failure + forced page pressure
+    (>= 1 preemption) + one NaN-logits step in a single run — every
+    request finishes with a typed reason and the greedy streams are
+    byte-identical to the fault-free run."""
+    plan = ServeFaultPlan(step_exception_at=1, page_pressure_at=2,
+                          page_pressure_release_at=8, nan_logits_at=5)
+    s, out = run_plan(model_params, plan)
+    st = s.stats()
+    assert st["preemptions"] >= 1
+    assert st["fallback_steps"] >= 2  # exception + NaN re-runs
+    assert all(r.finish_reason in FINISH_REASONS for r in s.finished)
+    assert out == baseline
+    # the whole timeline is observable
+    kinds = [e["kind"] for e in st["watchdog_events"]]
+    assert "step_exception" in kinds and "nan_logits" in kinds
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore
+# ---------------------------------------------------------------------------
+class TestSnapshot:
+    def test_mid_decode_restore_token_exact(self, model_params, baseline):
+        s = mk(model_params)
+        for p in PROMPTS:
+            s.submit(p, 8)
+        for _ in range(3):
+            s.step()
+        snap = s.snapshot()
+        restored = mk(model_params).restore(snap)
+        out_orig = streams(s.run())
+        out_rest = streams(restored.run())
+        restored.check_invariants()
+        assert out_orig == baseline
+        assert out_rest == baseline
+
+    def test_snapshot_is_deep_copy(self, model_params):
+        s = mk(model_params)
+        for p in PROMPTS:
+            s.submit(p, 8)
+        s.step()
+        snap = s.snapshot()
+        live = {r.rid: list(r.tokens_out)
+                for r in s.slots if r is not None}
+        s.run()  # keep generating: must not disturb the snapshot
+        for d in snap["slots"]:
+            if d is not None:
+                assert d["tokens_out"] == live[d["rid"]]
+
+    def test_restore_preserves_sampling_rng(self, model_params):
+        """Non-greedy sampling resumes identically because the numpy
+        generator state rides in the snapshot."""
+        def build():
+            return mk(model_params, temperature=0.8, top_k=8, seed=7)
+
+        s = build()
+        for p in PROMPTS:
+            s.submit(p, 8)
+        for _ in range(3):
+            s.step()
+        snap = s.snapshot()
+        out_orig = streams(s.run())
+        out_rest = streams(build().restore(snap).run())
+        assert out_orig == out_rest
+
+    def test_restore_rejects_config_mismatch(self, model_params):
+        s = mk(model_params)
+        s.submit(PROMPTS[0], 4)
+        s.step()
+        snap = s.snapshot()
+        other = mk(model_params, max_slots=2)
+        with pytest.raises(ValueError, match="config"):
+            other.restore(snap)
+
+    def test_snapshot_under_simulated_cluster_faults(self, model_params,
+                                                     baseline):
+        """Drive the scheduler as a SimulatedCluster workload: host death
+        restores the latest scheduler snapshot and the decode replays
+        token-exact (the serving analogue of trainer restart-resume)."""
+        s = mk(model_params)
+        for p in PROMPTS:
+            s.submit(p, 8)
+        saved = {}
+
+        def save_ckpt(step):
+            saved["snap"] = s.snapshot()
+            saved["step"] = step
+
+        def restore_ckpt():
+            s.restore(saved["snap"])
+            return saved["step"]
+
+        save_ckpt(0)
+        sim = SimulatedCluster(n_hosts=2,
+                               plan=FaultPlan(die_at_step=5, die_host=1))
+        out = sim.run(14, lambda step: s.step(), save_ckpt, restore_ckpt,
+                      checkpoint_every=3)
+        assert out["restarts"] and out["wasted_steps"] >= 1
+        assert out["host_status"][1] == "dead"
+        final = streams(s.run())
+        s.check_invariants()
+        assert final == baseline
+
+
+def test_stats_shape(model_params):
+    s = mk(model_params)
+    s.submit(PROMPTS[0], 4)
+    s.run()
+    st = s.stats()
+    for key in ("n_steps", "n_decode_steps", "finish_reasons",
+                "preemptions", "fallback_steps", "recomputes",
+                "watchdog_events", "compiler_events", "pool"):
+        assert key in st
+    assert st["finish_reasons"] == {"max_tokens": 1}

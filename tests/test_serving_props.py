@@ -1,0 +1,129 @@
+"""Property test: scheduler churn preserves pool invariants.
+
+Random interleavings of submit / step / pool seizure / clock advance —
+whatever the order, the KVPagePool accounting must stay exact
+(free + live + seized == capacity, zero reservation drift, no null or
+duplicated live pages; all checked by ``Scheduler.check_invariants``)
+and, once pressure lifts, every request must terminate with a typed
+finish reason.
+
+The property is stated once (:func:`churn_property`) and driven two
+ways: by Hypothesis when it is installed (shrinking on failure), and by
+a seeded numpy fuzzer otherwise, so the invariant check always runs even
+on machines without the optional dependency.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import TransformerLM
+from repro.pipeline.cache import CompilationCache
+from repro.serving import FINISH_REASONS, Scheduler
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+CACHE = CompilationCache()
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              activation_dtype="float32")
+    model = TransformerLM(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def churn_property(model_params, ops, seed):
+    """ops: list of ("submit", plen, new, deadline) | ("step",) |
+    ("seize", n) | ("release",) | ("tick", dt)."""
+    model, params = model_params
+    rng = np.random.default_rng(seed)
+    clk = [0.0]
+    sched = Scheduler(model, params, max_slots=3, page_size=4, n_pages=24,
+                      max_model_len=32, prefill_chunk=4,
+                      cache_dtype="float32", compile_cache=CACHE,
+                      queue_ttl_s=60.0, clock=lambda: clk[0])
+    seized = []
+    n_submitted = 0
+    for op in ops:
+        if op[0] == "submit":
+            _, plen, new, deadline = op
+            sched.submit(list(rng.integers(0, model.cfg.vocab, plen)),
+                         new, deadline_s=deadline)
+            n_submitted += 1
+        elif op[0] == "step":
+            sched.step()
+        elif op[0] == "seize":
+            seized.extend(sched.pool.seize(op[1]))
+        elif op[0] == "release":
+            if seized:
+                sched.pool.release(seized)
+                seized = []
+        else:  # tick
+            clk[0] += op[1]
+        sched.check_invariants()
+
+    # lift the pressure and drain: every request must terminate
+    if seized:
+        sched.pool.release(seized)
+    sched.run()
+    sched.check_invariants()
+    assert not sched.queue
+    assert all(r is None for r in sched.slots)
+    assert len(sched.finished) == n_submitted
+    for r in sched.finished:
+        assert r.done and r.finish_reason in FINISH_REASONS
+
+
+def _random_ops(rng) -> list:
+    ops = []
+    for _ in range(int(rng.integers(4, 20))):
+        k = int(rng.integers(0, 5))
+        if k == 0:
+            deadline = [None, 3.0, 30.0][int(rng.integers(0, 3))]
+            ops.append(("submit", int(rng.integers(1, 11)),
+                        int(rng.integers(1, 9)), deadline))
+        elif k == 1:
+            ops.append(("step",))
+        elif k == 2:
+            ops.append(("seize", int(rng.integers(0, 9))))
+        elif k == 3:
+            ops.append(("release",))
+        else:
+            ops.append(("tick", float(rng.uniform(0.1, 4.0))))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_churn_preserves_invariants_fuzz(model_params, seed):
+    rng = np.random.default_rng(1000 + seed)
+    churn_property(model_params, _random_ops(rng), seed)
+
+
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.one_of(
+            st.tuples(st.just("submit"), st.integers(1, 10),
+                      st.integers(1, 8),
+                      st.sampled_from([None, 3.0, 30.0])),
+            st.tuples(st.just("step")),
+            st.tuples(st.just("seize"), st.integers(0, 8)),
+            st.tuples(st.just("release")),
+            st.tuples(st.just("tick"), st.floats(0.1, 4.0)),
+        ),
+        min_size=4, max_size=20)
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture,
+                                     HealthCheck.too_slow])
+    @given(ops=OPS, seed=st.integers(0, 2**31 - 1))
+    def test_churn_preserves_invariants_hypothesis(model_params, ops, seed):
+        churn_property(model_params, list(ops), seed)

@@ -140,3 +140,29 @@ def test_simulated_cluster_straggler_detection():
     sim = SimulatedCluster(n_hosts=4, plan=plan, straggler_factor=2.0)
     sim.run(10, lambda s: None, lambda s: None, lambda: 0)
     assert any(e[1] == 1 for e in sim.monitor.events if e[0] == "straggler")
+
+
+def test_simulated_cluster_wasted_steps_and_host_status():
+    """The summary separates replayed work (checkpoint..failure) from
+    total executed steps and surfaces per-host monitor statuses."""
+    saved = {}
+
+    def save_ckpt(step):
+        saved["latest"] = step
+
+    plan = FaultPlan(die_at_step=7, die_host=2)
+    sim = SimulatedCluster(n_hosts=4, plan=plan)
+    out = sim.run(12, lambda s: None, save_ckpt,
+                  lambda: saved.get("latest", 0), checkpoint_every=5)
+    # died at 7, restored from 5 -> steps 5 and 6 ran twice
+    assert out["wasted_steps"] == 2
+    assert out["steps_run"] == 12 + out["wasted_steps"]
+    assert out["host_status"][2] == "dead"
+    assert all(out["host_status"][h] == "ok" for h in (0, 1, 3))
+
+
+def test_simulated_cluster_fault_free_has_no_waste():
+    sim = SimulatedCluster(n_hosts=2)
+    out = sim.run(6, lambda s: None, lambda s: None, lambda: 0)
+    assert out["wasted_steps"] == 0
+    assert set(out["host_status"].values()) == {"ok"}
