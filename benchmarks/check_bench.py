@@ -45,11 +45,20 @@ REQUIRED = {
                    for a in ("starcoder2_3b", "gemma3_4b", "rwkv6_7b")
                    for b in (1, 8)
                    for kind in ("baseline", "compiled"))
-    + ("serve_starcoder2_3b_faulted_tps",),
+    + ("serve_starcoder2_3b_faulted_tps",
+       # ISSUE-9 elastic rows (CI runs serving with >= 2 simulated hosts)
+       "serve_starcoder2_3b_sharded_tps",
+       "serve_starcoder2_3b_shrink_recovery_tps"),
 }
 #: faulted serving throughput must stay within this factor of the
 #: fault-free run recorded alongside it (the ISSUE-8 recovery budget)
 FAULT_OVERHEAD_BUDGET = 1.5
+#: sharded/shrink-recovery throughput must stay within this factor of the
+#: in-run unsharded comparator (the ISSUE-9 scale-out overhead budget —
+#: simulated hosts on one CPU pay the collective + dispatch cost without
+#: any parallel speedup, and the shrink row pays the shrunken mesh's
+#: recompile on the clock, so the bound is loose by design)
+SHARD_OVERHEAD_BUDGET = 4.0
 #: (tiled entry, 1-element-block entry) measured at the same size
 TILED_BEATS_UNTILED = (
     ("gemver_grid_fused_ms", "gemver_grid_untiled_ms"),
@@ -173,6 +182,25 @@ def main() -> int:
             if not e.get("preemptions"):
                 errors.append(f"{name}: fault plan caused no preemption — "
                               f"the page-pressure path was not exercised")
+        # elastic rows: sharding overhead bounded vs the in-run unsharded
+        # comparator; the shrink row must record a real resharding event
+        for name, e in cur["serve"].items():
+            if not (name.endswith("_sharded_tps")
+                    or name.endswith("_shrink_recovery_tps")):
+                continue
+            us = e.get("unsharded_tps")
+            if us is None:
+                errors.append(f"{name}: no unsharded_tps extra — the "
+                              f"sharded run has no in-run comparator")
+            elif us / e["value"] > SHARD_OVERHEAD_BUDGET:
+                errors.append(
+                    f"{name}: {e['value']:.0f} tok/s sharded vs {us:.0f} "
+                    f"tok/s unsharded is a {us / e['value']:.2f}x overhead "
+                    f"(> {SHARD_OVERHEAD_BUDGET}x)")
+            if (name.endswith("_shrink_recovery_tps")
+                    and not e.get("resharding_events")):
+                errors.append(f"{name}: no resharding_events recorded — "
+                              f"the mesh never shrank")
 
     if args.baseline:
         pairs = []

@@ -26,6 +26,15 @@ window (>= 1 preemption + re-prefill), one NaN-logits step — and records
 recovery overhead: the run asserts faulted throughput stays within 1.5x
 of the fault-free run at the same batch (the ``fault_free_tps`` extra,
 gated again by check_bench against the committed baseline).
+
+The ``*_sharded_tps`` and ``*_shrink_recovery_tps`` rows (ISSUE 9) run
+the scheduler with the decode step partitioned across a 2-host mesh
+(``shard_map`` over the ShardMapPass-partitioned SDFG). Both record the
+in-run unsharded throughput (``unsharded_tps`` extra) so check_bench can
+bound the sharding overhead; the shrink row kills a host mid-decode
+(``Scheduler.shrink``), records ``resharding_events``, and asserts the
+streams stay byte-identical. Requires >= 2 jax devices — CI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``.
 """
 from __future__ import annotations
 
@@ -164,6 +173,76 @@ def run(report, small: bool = False):
            p50_ms=p50, p99_ms=p99, grid_kernels=nk)
 
     _faulted_row(report, small, new_tokens, max_model_len)
+    _sharded_rows(report, small, new_tokens)
+
+
+def _sharded_rows(report, small: bool, new_tokens: int):
+    """2-host sharded decode throughput + live-shrink recovery, each with
+    the unsharded throughput of the same workload as in-run comparator."""
+    import dataclasses as dc
+    import jax
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+    from repro.serving import Scheduler
+
+    if jax.device_count() < 2:
+        print("serve: < 2 devices — skipping sharded rows (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=2 before running)")
+        return
+
+    arch = "starcoder2-3b"
+    B = 8 if small else 16
+    mml = 64 if small else 128
+    # sharded exactness is byte-level only without cross-batch reductions;
+    # keep activations f32 so the comparator is exact, not approximate
+    cfg = dc.replace(get_config(arch).reduced(),
+                     activation_dtype="float32")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    prompts = [list(map(int, rng.randint(0, cfg.vocab, size=PROMPT)))
+               for _ in range(B)]
+    ppr = (PROMPT + new_tokens) // PAGE + 1
+    n_pages = B * ppr + 2  # one null page per shard
+
+    def one(n_shards=1, shrink_at=None):
+        sched = Scheduler(model, params, max_slots=B, page_size=PAGE,
+                          n_pages=n_pages, max_model_len=mml,
+                          prefill_chunk=PROMPT, cache_dtype="float32",
+                          n_shards=n_shards)
+        for p in prompts:
+            sched.submit(p, new_tokens)
+        t0 = time.perf_counter()
+        if shrink_at is not None:
+            for _ in range(shrink_at):
+                sched.step()
+            sched.shrink(1)
+        reqs = sched.run()
+        wall = time.perf_counter() - t0
+        sched.check_invariants()
+        total = sum(len(r.tokens_out) for r in reqs)
+        return (total / wall, {r.rid: list(r.tokens_out) for r in reqs},
+                sched)
+
+    base_tps, base_streams, _ = one()
+    tps, got, sched = one(n_shards=2)
+    assert got == base_streams, "sharded streams diverged from unsharded"
+    sm = sched.compiler._steps[max(sched.compiler._steps)].report.get(
+        "shard_map") or {}
+    report(f"serve_{_slug(arch)}_sharded_tps", tps, backend="pallas",
+           derived=f"n_shards=2 sharded={sm.get('sharded')}",
+           unsharded_tps=base_tps, batch=B, n_shards=2)
+
+    tps, got, sched = one(n_shards=2, shrink_at=3)
+    assert got == base_streams, "streams diverged after mesh shrink"
+    evs = [e for e in sched.events if e["kind"] == "mesh_shrink"]
+    pre = [e for e in sched.events if e["kind"] == "shrink_preempt"]
+    assert evs, "shrink produced no mesh_shrink event"
+    report(f"serve_{_slug(arch)}_shrink_recovery_tps", tps,
+           backend="pallas",
+           derived=f"2->1 hosts, {len(pre)} preempted",
+           unsharded_tps=base_tps, batch=B,
+           resharding_events=len(evs), preempted=len(pre))
 
 
 def _faulted_row(report, small: bool, new_tokens: int, max_model_len: int):

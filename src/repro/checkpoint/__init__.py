@@ -1,3 +1,5 @@
-from .store import latest_step, restore, save
+from .store import (CheckpointError, latest_step, manifest_for, restore,
+                    save, save_sharded)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["CheckpointError", "latest_step", "manifest_for", "restore",
+           "save", "save_sharded"]

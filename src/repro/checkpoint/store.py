@@ -4,11 +4,23 @@ Leaves are saved as individual ``.npy`` files under a step directory with
 a JSON manifest of the tree structure. Restore rebuilds the pytree and
 ``jax.device_put``s each leaf with the *target* sharding — which may belong
 to a different mesh than the one that saved it (elastic scaling: restart on
-more or fewer chips re-shards transparently; on real multi-host pods the
-same layout maps onto per-host array-shard files).
+more or fewer chips re-shards transparently).
 
-Atomicity: writes go to ``<dir>.tmp`` then rename; a crash mid-save leaves
-the previous checkpoint intact (checkpoint/restart fault tolerance).
+Multi-host layout (``save_sharded``): leaves that are sharded jax Arrays
+are written as one file **per addressable shard** (`leaf_00003.s001.npy`),
+the way a real pod writes per-host shard files, with the shard's global
+index slices and the saving mesh's signature recorded in the manifest.
+``restore`` reassembles the global array from the shard files before
+resharding onto the target mesh, so a restore onto a smaller mesh is just
+a different ``shardings`` argument. A missing shard file (the dead host's
+piece) raises :class:`CheckpointError` naming it, so callers can fall back
+to an older full checkpoint or recompute.
+
+Atomicity: writes go to ``<dir>.tmp``; commit renames the previous step
+directory aside, moves the tmp dir in, then deletes the old one — at every
+instant there is a complete checkpoint on disk (the old one until the
+rename, the new one after). A bare ``rmtree(live); rename(tmp)`` sequence
+would leave *no* valid checkpoint if the process died between the calls.
 """
 from __future__ import annotations
 
@@ -22,6 +34,10 @@ import jax
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """Typed checkpoint failure: manifest/tree mismatch or missing shard."""
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -29,6 +45,19 @@ def _flatten(tree) -> Dict[str, Any]:
                        for p in path)
         flat[key] = leaf
     return flat
+
+
+def _commit(d: Path, tmp: Path) -> None:
+    """Atomically replace ``d`` with ``tmp``: rename the live dir aside,
+    move tmp in, then delete — never a window with no valid checkpoint."""
+    old = Path(str(d) + ".old")
+    if old.exists():
+        shutil.rmtree(old)
+    if d.exists():
+        os.rename(d, old)
+    os.rename(tmp, d)
+    if old.exists():
+        shutil.rmtree(old)
 
 
 def save(ckpt_dir: str, step: int, state) -> str:
@@ -46,9 +75,61 @@ def save(ckpt_dir: str, step: int, state) -> str:
         manifest["leaves"][key] = {"file": fname, "dtype": str(arr.dtype),
                                    "shape": list(arr.shape)}
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-    if d.exists():
-        shutil.rmtree(d)
-    os.rename(tmp, d)
+    _commit(d, tmp)
+    return str(d)
+
+
+def _shard_entries(leaf):
+    """Unique (index, data) pairs for a sharded jax Array, deduplicated by
+    global index so replicated axes write one copy, like one host would."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if not shards:
+        return None
+    seen = {}
+    for s in shards:
+        key = tuple((sl.start, sl.stop) for sl in s.index)
+        if key not in seen:
+            seen[key] = (s.index, np.asarray(s.data))
+    return list(seen.values())
+
+
+def save_sharded(ckpt_dir: str, step: int, state, mesh_sig=None) -> str:
+    """Per-host shard-file checkpoint: each addressable shard of each leaf
+    goes to its own file; the manifest records the saving mesh signature
+    and each shard's global index, so restore can reassemble (and a shrink
+    restore is just new target shardings)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    tmp = Path(str(d) + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(state)
+    manifest = {"step": step, "leaves": {}, "sharded": True,
+                "mesh_signature": repr(mesh_sig) if mesh_sig else None}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        entries = _shard_entries(leaf)
+        if entries is None or len(entries) == 1:
+            # replicated (one unique shard index covers the whole array)
+            # or host-local leaf: one full file
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {
+                "file": fname, "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+            continue
+        files = []
+        for j, (index, data) in enumerate(entries):
+            fname = f"leaf_{i:05d}.s{j:03d}.npy"
+            np.save(tmp / fname, data)
+            files.append({"file": fname,
+                          "index": [[sl.start, sl.stop] for sl in index]})
+        manifest["leaves"][key] = {
+            "shards": files, "dtype": str(entries[0][1].dtype),
+            "shape": list(shape)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    _commit(d, tmp)
     return str(d)
 
 
@@ -57,21 +138,54 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     if not d.exists():
         return None
     steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")
-             if not p.name.endswith(".tmp")]
+             if not (p.name.endswith(".tmp") or p.name.endswith(".old"))]
     return max(steps) if steps else None
+
+
+def _load_leaf(d: Path, key: str, meta: Dict) -> np.ndarray:
+    if "shards" not in meta:
+        f = d / meta["file"]
+        if not f.exists():
+            raise CheckpointError(
+                f"checkpoint leaf {key!r}: file {meta['file']} missing "
+                f"from {d}")
+        return np.load(f)
+    out = np.zeros(tuple(meta["shape"]), dtype=np.dtype(meta["dtype"]))
+    for sh in meta["shards"]:
+        f = d / sh["file"]
+        if not f.exists():
+            raise CheckpointError(
+                f"checkpoint leaf {key!r}: shard file {sh['file']} "
+                f"(global index {sh['index']}) missing from {d} — the "
+                f"host that wrote it is gone; restore an older full "
+                f"checkpoint or recompute")
+        idx = tuple(slice(a, b) for a, b in sh["index"])
+        out[idx] = np.load(f)
+    return out
 
 
 def restore(ckpt_dir: str, step: int, like, shardings=None):
     """Rebuild ``like``-structured state; reshard onto ``shardings``
-    (a matching pytree of NamedSharding, possibly for a different mesh)."""
+    (a matching pytree of NamedSharding, possibly for a different mesh).
+
+    Raises :class:`CheckpointError` naming the leaf when the manifest and
+    the ``like`` tree disagree (optimizer or architecture changed between
+    save and restore) or when a shard file is missing.
+    """
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
     flat_like = _flatten(like)
     flat_sh = _flatten(shardings) if shardings is not None else {}
     out = {}
     for key in flat_like:
-        meta = manifest["leaves"][key]
-        arr = np.load(d / meta["file"])
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise CheckpointError(
+                f"checkpoint step {step} has no leaf {key!r}: the saved "
+                f"manifest ({len(manifest['leaves'])} leaves) does not "
+                f"match the restore target tree — optimizer or model "
+                f"architecture changed between save and restore")
+        arr = _load_leaf(d, key, meta)
         sh = flat_sh.get(key)
         out[key] = jax.device_put(arr, sh) if sh is not None else arr
     # unflatten back into like's structure
@@ -83,3 +197,8 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
                        for p in path)
         ordered.append(out[key])
     return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def manifest_for(ckpt_dir: str, step: int) -> Dict:
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())

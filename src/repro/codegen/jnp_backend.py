@@ -788,4 +788,10 @@ def build_callable(sdfg: SDFG, lowering=None):
         return {k: env[k] for k in sorted(written)}
 
     fn.__name__ = f"sdfg_{sdfg.name}"
+    shard_spec = sdfg.metadata.get("shard_map")
+    if shard_spec and int(shard_spec.get("n_shards", 1)) > 1:
+        # ShardMapPass divided the shapes; the per-shard body runs under
+        # shard_map over the mesh axis (codegen/shard.py)
+        from .shard import wrap_shard_map
+        return wrap_shard_map(fn, shard_spec, written)
     return fn

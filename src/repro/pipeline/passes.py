@@ -395,6 +395,62 @@ class GridConversionPass(Pass):
 
 
 @register_pass
+class ShardMapPass(Pass):
+    """Partition an eligible DEVICE/PIPELINED map scope's outermost
+    dimension across a 1-D mesh axis (transforms/shard_map.py): memlet
+    analysis classifies every container as shard-local, replicated, or
+    collective (wcr over the partition -> ``psum``); halo reads across
+    the shard boundary are a typed refusal recorded in
+    ``report["grid_decisions"]``. The SDFG's shapes and ranges divide by
+    ``n_shards`` in place and the backend wraps the built callable in
+    ``shard_map`` (codegen/shard.py). Runs after MapFusion (fused scopes
+    partition as one) and before Vectorization/MapTiling, so tiling and
+    grid derivation happen on the shard-local shapes.
+
+    ``n_shards`` and ``mesh_sig`` are part of ``options()`` — a mesh
+    shrink (or the same shard count over a different device set) changes
+    the pipeline signature, so recompiling onto a changed mesh is a
+    compilation-cache miss, never a stale kernel."""
+
+    name = "ShardMap"
+
+    def __init__(self, n_shards: int = 1, axis: str = "shard",
+                 mesh_sig: Optional[str] = None):
+        self.n_shards = int(n_shards)
+        self.axis = axis
+        self.mesh_sig = mesh_sig
+
+    def should_skip(self, sdfg: SDFG) -> bool:
+        return self.n_shards <= 1
+
+    def options(self) -> Dict[str, Any]:
+        return {"n_shards": self.n_shards, "axis": self.axis,
+                "mesh_sig": self.mesh_sig}
+
+    def apply(self, sdfg: SDFG, report: dict):
+        from ..transforms.shard_map import partition_sdfg
+        res = partition_sdfg(sdfg, self.n_shards, self.axis)
+        for d in res["decisions"]:
+            entry = {"map": d.get("map"), "decision": d["decision"],
+                     "reason": d.get("reason")}
+            entry.update({k: v for k, v in d.items()
+                          if k in ("container", "dim", "how", "op",
+                                   "extent")})
+            report.setdefault("grid_decisions", []).append(entry)
+            if d["decision"] in ("unsharded", "shard_refused"):
+                report.setdefault("grid_skipped", []).append(
+                    (d.get("map") or d.get("container") or "<sdfg>",
+                     f"shard refused: {d.get('reason')}"))
+        report["shard_map"] = {"sharded": res["sharded"],
+                               "n_shards": self.n_shards,
+                               "axis": self.axis,
+                               "specs": res.get("specs", {}),
+                               "psum": res.get("psum", [])}
+        return ("sharded" if res["sharded"] else "refused",
+                len(res.get("specs", {})))
+
+
+@register_pass
 class ExpandLibraryNodesPass(Pass):
     """Multi-level Library-Node expansion (paper §3): lower every abstract
     node to its implementation subgraph, honoring the SDFG's expansion
@@ -517,7 +573,10 @@ def _summarize(result) -> Any:
 
 
 def default_pipeline(backend: str, interpret: bool = True,
-                     expansion_level: Optional[str] = None) -> PassManager:
+                     expansion_level: Optional[str] = None,
+                     n_shards: int = 1,
+                     shard_axis: str = "shard",
+                     mesh_sig: Optional[str] = None) -> PassManager:
     """Backend-specific default lowering pipeline (paper §2.1 vendor split).
 
     ``jnp``     -- XLA-auto: prefer (xla, generic) expansions; XLA fuses.
@@ -532,6 +591,9 @@ def default_pipeline(backend: str, interpret: bool = True,
                    crossover table (``GridConversionPass.default_tiles``)
                    overrides both preferred widths.
     """
+    shard = [ShardMapPass(n_shards=n_shards, axis=shard_axis,
+                          mesh_sig=mesh_sig)] \
+        if n_shards > 1 else []
     if backend == "pallas":
         tiles = GridConversionPass.default_tiles("pallas", interpret)
         return PassManager([
@@ -539,12 +601,16 @@ def default_pipeline(backend: str, interpret: bool = True,
             PipelineFusionPass(interpret=interpret),
             ExpandLibraryNodesPass(level=expansion_level),
             MapFusionPass(),
+            # ShardMap before Vectorization/MapTiling: tiles and grids
+            # derive from the shard-local shapes
+            *shard,
             VectorizationPass(),
             MapTilingPass(tile_size=tiles.get("minor"),
                           second_size=tiles.get("second")),
             GridConversionPass(),
-        ], name="pallas_default")
+        ], name="pallas_default" if not shard else "pallas_sharded")
     return PassManager([
         SetExpansionPreferencePass(("xla", "generic")),
         ExpandLibraryNodesPass(level=expansion_level),
-    ], name="jnp_default")
+        *shard,
+    ], name="jnp_default" if not shard else "jnp_sharded")

@@ -1,5 +1,10 @@
 from .cluster_sim import FaultPlan, SimulatedCluster
+from .elastic import (ElasticTrainer, ElasticTrainerConfig,
+                      data_parallel_grad_sdfg, run_elastic_training,
+                      usable_shards)
 from .trainer import HeartbeatMonitor, Trainer, TrainerConfig
 
 __all__ = ["FaultPlan", "SimulatedCluster", "HeartbeatMonitor", "Trainer",
-           "TrainerConfig"]
+           "TrainerConfig", "ElasticTrainer", "ElasticTrainerConfig",
+           "data_parallel_grad_sdfg", "run_elastic_training",
+           "usable_shards"]

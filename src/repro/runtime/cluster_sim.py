@@ -30,7 +30,9 @@ class SimulatedCluster:
                  deadline_s: float = 1.0, straggler_factor: float = 2.0):
         self.n_hosts = n_hosts
         self.step_time_s = step_time_s
-        self.plan = plan or FaultPlan()
+        # run() clears die_at_step once the fault fires; copy so reusing
+        # one plan across clusters does not silently drop the fault
+        self.plan = dataclasses.replace(plan) if plan else FaultPlan()
         self.monitor = HeartbeatMonitor(deadline_s, straggler_factor)
         self.restarts: List[Dict] = []
         self.step_log: List[Dict] = []

@@ -1,0 +1,269 @@
+"""Elastic multi-host training over a ShardMapPass-partitioned step.
+
+The training step here is not hand-sharded: it is an ordinary
+data-parallel SDFG — a map over the batch dimension whose tasklet
+computes one example's loss gradient, accumulated with wcr("add") —
+and ``ShardMapPass`` (transforms/shard_map.py) partitions it across the
+host mesh entirely from memlet analysis: ``tokens`` indexes the mapped
+dim exactly (shard-local), the weights are whole-read (replicated), and
+the wcr gradient accumulators reduce over the partitioned dim
+(collective -> ``lax.psum``). No ``shard_declared`` hints needed.
+
+Elasticity: the shard count is a pass option and the mesh signature is
+part of the pipeline signature, so a restart on fewer hosts is a
+compilation-cache miss that recompiles the step for the smaller mesh.
+Checkpoints are written with :func:`repro.checkpoint.save_sharded`
+(per-host shard files + mesh signature in the manifest); restore
+reassembles the global arrays, so restoring onto any mesh size just
+works — ``run_elastic_training`` wires this into
+:class:`~repro.runtime.cluster_sim.SimulatedCluster` so a simulated
+host death restores the latest sharded checkpoint onto the shrunken
+mesh and continues with the recompiled step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import checkpoint as ckpt_lib
+from ..configs.base import ModelConfig
+from ..core.memlet import Memlet, Range, Subset
+from ..core.sdfg import SDFG
+from ..core.symbolic import sym
+from ..data import DataConfig, make_global_batch
+from ..models.registry import build_model
+from ..optim import clip_by_global_norm, get_optimizer
+from ..pipeline import lower
+from ..pipeline.cache import COMPILATION_CACHE
+from ..pipeline.passes import default_pipeline
+
+
+def _stored_shape(shape) -> tuple:
+    """0-d leaves ride in (1,) containers (SDFG arrays are >= 1-D)."""
+    return tuple(int(d) for d in shape) if len(shape) else (1,)
+
+
+def data_parallel_grad_sdfg(model, a_params, B: int, seq_len: int) -> SDFG:
+    """The data-parallel gradient SDFG: ``loss``/``g{i}`` = mean over the
+    batch of per-example loss/grads, built as a wcr("add") map over the
+    batch dim so ShardMapPass can partition it by analysis alone."""
+    leaves, treedef = jax.tree_util.tree_flatten(a_params)
+    n = len(leaves)
+    shapes = [tuple(int(d) for d in leaf.shape) for leaf in leaves]
+    inv_b = float(1.0 / B)
+
+    s = SDFG(f"dp_grad_b{B}_s{seq_len}")
+    s.add_array("tokens", (B, seq_len), "int32")
+    for i, leaf in enumerate(leaves):
+        s.add_array(f"w{i}", _stored_shape(leaf.shape), str(leaf.dtype))
+        s.add_array(f"g{i}", _stored_shape(leaf.shape), str(leaf.dtype))
+    s.add_array("loss", (1,), "float32")
+
+    def body(tok, **w):
+        vals = [w[f"w{i}"].reshape(shapes[i]) for i in range(n)]
+        params = jax.tree_util.tree_unflatten(treedef, vals)
+        loss, grads = jax.value_and_grad(model.loss)(
+            params, {"tokens": tok[None]})
+        gl = jax.tree_util.tree_leaves(grads)
+        out = {f"g{i}": (gl[i] * inv_b).reshape(_stored_shape(shapes[i]))
+               .astype(leaves[i].dtype) for i in range(n)}
+        out["loss_o"] = (loss * inv_b).reshape(1).astype(jnp.float32)
+        return out
+
+    st = s.add_state("main", is_start=True)
+    ins = {"tok": Memlet.simple("tokens", Subset([
+        Range.index(sym("b")), Range.make(0, seq_len)]))}
+    ins.update({f"w{i}": Memlet.simple(f"w{i}") for i in range(n)})
+    outs = {f"g{i}": Memlet.simple(f"g{i}", wcr="add") for i in range(n)}
+    outs["loss_o"] = Memlet.simple("loss", wcr="add")
+    st.add_mapped_tasklet("dp_grad", {"b": (0, B)}, inputs=ins,
+                          outputs=outs, fn=body)
+    return s
+
+
+@dataclasses.dataclass
+class ElasticTrainerConfig:
+    steps: int = 8
+    checkpoint_every: int = 2
+    ckpt_dir: Optional[str] = None
+    clip_norm: float = 1.0
+
+
+class ElasticTrainer:
+    """Data-parallel trainer whose step is a sharded compiled SDFG.
+
+    ``n_shards > 1`` requires that many visible devices (set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+    importing jax to simulate hosts on CPU) and a divisible global
+    batch. The compiled step's cache key includes the shard count and
+    mesh signature, so two trainers over the same mesh share one
+    compile and a shrink never reuses a stale step.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_shards: int = 1,
+                 tcfg: Optional[ElasticTrainerConfig] = None,
+                 seq_len: int = 32, global_batch: int = 8,
+                 shard_axis: str = "shard", cache=None):
+        if n_shards > 1 and global_batch % n_shards:
+            raise ValueError(f"global_batch {global_batch} not divisible "
+                             f"by n_shards {n_shards}")
+        self.cfg = cfg
+        self.n_shards = int(n_shards)
+        self.shard_axis = shard_axis
+        self.tcfg = tcfg or ElasticTrainerConfig()
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.model = build_model(cfg)
+        self.opt = get_optimizer(cfg.optimizer)
+        self.data_cfg = DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                                   global_batch=global_batch)
+        self.cache = COMPILATION_CACHE if cache is None else cache
+        self.mesh_sig = None
+        if self.n_shards > 1:
+            from ..codegen.shard import make_shard_mesh
+            from ..launch.steps import mesh_signature
+            self.mesh_sig = repr(mesh_signature(
+                make_shard_mesh(self.n_shards, shard_axis)))
+        self._a_params = jax.eval_shape(lambda k: self.model.init(k),
+                                        jax.random.PRNGKey(0))
+        self._leaves, self._treedef = jax.tree_util.tree_flatten(
+            self._a_params)
+        self._compiled = None
+
+    # -- compiled step ----------------------------------------------------
+    def compiled_step(self):
+        if self._compiled is None:
+            sdfg = data_parallel_grad_sdfg(
+                self.model, self._a_params, self.global_batch, self.seq_len)
+            self._compiled = lower(sdfg).compile(
+                backend="jnp", cache=self.cache,
+                pipeline=default_pipeline(
+                    "jnp", n_shards=self.n_shards,
+                    shard_axis=self.shard_axis, mesh_sig=self.mesh_sig))
+        return self._compiled
+
+    @property
+    def report(self) -> Optional[dict]:
+        return self._compiled.report if self._compiled else None
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, seed: int = 0) -> Dict:
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return {"params": params, "opt": self.opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def restore_or_init(self, seed: int = 0) -> Dict:
+        if self.tcfg.ckpt_dir:
+            last = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+            if last is not None:
+                a_state = {"params": self._a_params,
+                           "opt": jax.eval_shape(self.opt.init,
+                                                 self._a_params),
+                           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+                return ckpt_lib.restore(self.tcfg.ckpt_dir, last, a_state)
+        return self.init_state(seed)
+
+    def save(self, step: int, state: Dict):
+        if self.tcfg.ckpt_dir:
+            ckpt_lib.save_sharded(self.tcfg.ckpt_dir, step, state,
+                                  mesh_sig=self.mesh_sig)
+
+    # -- stepping ---------------------------------------------------------
+    def train_step(self, state: Dict, tokens) -> tuple:
+        fn = self.compiled_step()
+        kw = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(
+                state["params"])):
+            kw[f"w{i}"] = jnp.asarray(leaf).reshape(
+                _stored_shape(self._leaves[i].shape))
+        out = fn(**kw)
+        gl = [out[f"g{i}"].reshape(self._leaves[i].shape)
+              for i in range(len(self._leaves))]
+        grads = jax.tree_util.tree_unflatten(self._treedef, gl)
+        grads, gnorm = clip_by_global_norm(grads, self.tcfg.clip_norm)
+        new_params, new_opt = self.opt.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": float(out["loss"][0]),
+                           "grad_norm": float(gnorm)}
+
+    def run_step(self, state: Dict, step: int) -> tuple:
+        batch = make_global_batch(self.data_cfg, step, self.cfg)
+        return self.train_step(state, batch["tokens"])
+
+    def run(self) -> Dict:
+        state = self.restore_or_init()
+        log: List[dict] = []
+        for step in range(int(state["step"]), self.tcfg.steps):
+            state, metrics = self.run_step(state, step)
+            log.append({"step": step, **metrics})
+            if (step + 1) % self.tcfg.checkpoint_every == 0:
+                self.save(step + 1, state)
+        return {"state": state, "log": log}
+
+
+def usable_shards(global_batch: int, n_hosts: int) -> int:
+    """Largest shard count <= n_hosts dividing the global batch."""
+    for k in range(max(1, n_hosts), 0, -1):
+        if global_batch % k == 0:
+            return k
+    return 1
+
+
+def run_elastic_training(cfg: ModelConfig, n_hosts: int, n_steps: int,
+                         ckpt_dir: str, plan=None, seq_len: int = 16,
+                         global_batch: int = 8, seed: int = 0,
+                         checkpoint_every: int = 2, cache=None) -> Dict:
+    """Drive the REAL sharded compiled step through SimulatedCluster.
+
+    A simulated host death restores the latest sharded checkpoint onto
+    the shrunken mesh — a new trainer with fewer shards, whose step is
+    a compilation-cache miss recompile — and training continues. The
+    returned ``losses`` maps step -> the last loss computed at that
+    step, so callers can assert loss-curve-identical continuation
+    against an uninterrupted run.
+    """
+    from .cluster_sim import SimulatedCluster
+
+    box = {"trainer": None, "state": None, "hosts": n_hosts}
+    losses: Dict[int, float] = {}
+    reshard_log: List[dict] = []
+
+    def make_trainer():
+        k = usable_shards(global_batch, box["hosts"])
+        t = ElasticTrainer(
+            cfg, n_shards=k,
+            tcfg=ElasticTrainerConfig(steps=n_steps,
+                                      checkpoint_every=checkpoint_every,
+                                      ckpt_dir=ckpt_dir),
+            seq_len=seq_len, global_batch=global_batch, cache=cache)
+        reshard_log.append({"n_hosts": box["hosts"], "n_shards": k,
+                            "mesh_sig": t.mesh_sig})
+        return t
+
+    box["trainer"] = make_trainer()
+    box["state"] = box["trainer"].restore_or_init(seed)
+
+    def do_step(step):
+        box["state"], metrics = box["trainer"].run_step(box["state"], step)
+        losses[step] = metrics["loss"]
+
+    def save_ckpt(step):
+        box["trainer"].save(step, box["state"])
+
+    def restore_ckpt():
+        # the sim has detected the death; rebuild on the surviving hosts
+        box["hosts"] -= 1
+        box["trainer"] = make_trainer()
+        box["state"] = box["trainer"].restore_or_init(seed)
+        return int(box["state"]["step"])
+
+    sim = SimulatedCluster(n_hosts, plan=plan)
+    result = sim.run(n_steps, do_step, save_ckpt, restore_ckpt,
+                     checkpoint_every=checkpoint_every)
+    return {"losses": losses, "sim": result, "reshards": reshard_log,
+            "final_state": box["state"], "trainer": box["trainer"]}

@@ -61,8 +61,11 @@ class HeartbeatMonitor:
             self.events.append(("dead", host, duration))
             self.host_status[host] = "dead"
             return "dead"
-        med = float(np.median(self.durations[-32:]))
-        if len(self.durations) >= 4 and duration > self.straggler_factor * med:
+        # dead hosts record inf/NaN durations; those must not enter the
+        # straggler median or one death inflates the threshold forever
+        finite = [d for d in self.durations[-32:] if np.isfinite(d)]
+        med = float(np.median(finite)) if finite else duration
+        if len(finite) >= 4 and duration > self.straggler_factor * med:
             self.events.append(("straggler", host, duration))
             self.host_status[host] = "straggler"
             return "straggler"

@@ -225,6 +225,21 @@ def serving_decode_step(p: Program, model=None, wspecs=None, B=None,
                   {"logits": ((B, vocab_padded), adt)}, head_fn)["logits"]
     p.output("logits", lg)
 
+    # Builder-declared partition hints for ShardMapPass (inert unless the
+    # lowering pipeline actually shards): per-slot containers split on the
+    # batch/slot dim, page arrays on the page dim (each host owns one
+    # contiguous page block and the block table it receives is localized
+    # to it), weights replicate. The tasklet closures above are all
+    # batch-row-wise (``reshape(-1, ...)``), so they run unchanged on the
+    # shard-local row blocks.
+    declared = {"tokens": 0, "positions": 0, "block_table": 0, "logits": 0}
+    declared.update({name: None for name in wspecs})
+    for li in kph:
+        declared[f"kp{li}"] = 0
+        declared[f"vp{li}"] = 0
+    declared.update({name: 0 for name in sspecs})
+    p.sdfg.metadata["shard_declared"] = declared
+
 
 def _attn_layer(p, cfg, li, spec, x, positions, bt, w, kp, vp, B, ctx, ps):
     """QKV -> paged KV write -> page gather -> PagedAttnDecode -> proj.
@@ -368,27 +383,39 @@ def _recurrent_layer(p, cfg, li, kind, apply_fn, x, w, sth, sspecs, B, D):
 # Pipelines + bucketed compile wrapper
 # ---------------------------------------------------------------------------
 def decode_pipeline(interpret: bool = True,
-                    dtype_aware_sublanes: bool = False) -> PassManager:
+                    dtype_aware_sublanes: bool = False,
+                    n_shards: int = 1, shard_axis: str = "shard",
+                    mesh_sig: Optional[str] = None) -> PassManager:
     """The serving lowering pipeline.
 
     Default: ``default_pipeline("pallas")`` (calibrated CPU-interpret
     tiles). With ``dtype_aware_sublanes`` the second-minor tile falls back
     to MapTiling's per-scope dtype-aware sublane packing (bf16 -> 16-row
     blocks, fp32 -> 8), exercising the per-dtype block shapes instead of
-    the calibrated crossover table.
+    the calibrated crossover table. ``n_shards > 1`` inserts
+    ``ShardMapPass`` (after MapFusion, before tiling) so the step's slot
+    and page containers partition across a 1-D mesh — tiles and grids
+    then derive from the shard-local shapes.
     """
     if not dtype_aware_sublanes:
-        return default_pipeline("pallas", interpret=interpret)
+        return default_pipeline("pallas", interpret=interpret,
+                                n_shards=n_shards, shard_axis=shard_axis,
+                                mesh_sig=mesh_sig)
+    from ..pipeline.passes import ShardMapPass
+    shard = [ShardMapPass(n_shards=n_shards, axis=shard_axis,
+                          mesh_sig=mesh_sig)] if n_shards > 1 else []
     tiles = GridConversionPass.default_tiles("pallas", interpret)
     return PassManager([
         SetExpansionPreferencePass(("pallas", "xla", "generic")),
         PipelineFusionPass(interpret=interpret),
         ExpandLibraryNodesPass(),
         MapFusionPass(),
+        *shard,
         VectorizationPass(),
         MapTilingPass(tile_size=tiles.get("minor"), second_size=None),
         GridConversionPass(),
-    ], name="pallas_serve_dtype")
+    ], name="pallas_serve_dtype" if not shard
+        else "pallas_serve_dtype_sharded")
 
 
 class CompiledDecodeStep:
@@ -451,7 +478,9 @@ class DecodeStepCompiler:
                  cache_dtype="bfloat16", interpret: bool = True,
                  dtype_aware_sublanes: bool = False,
                  cache: Optional[CompilationCache] = None,
-                 donate: bool = True, max_compile_backoff: int = 32):
+                 donate: bool = True, max_compile_backoff: int = 32,
+                 n_shards: int = 1, shard_axis: str = "shard",
+                 mesh_sig: Optional[str] = None):
         self.model = model
         self.page_size = page_size
         self.n_pages = n_pages
@@ -461,6 +490,12 @@ class DecodeStepCompiler:
         self.cache = COMPILATION_CACHE if cache is None else cache
         self.donate = donate
         self.max_compile_backoff = max_compile_backoff
+        if n_shards > 1 and n_pages % n_shards:
+            raise ValueError(f"n_pages {n_pages} not divisible by "
+                             f"n_shards {n_shards}")
+        self.n_shards = int(n_shards)
+        self.shard_axis = shard_axis
+        self.mesh_sig = mesh_sig
         self.compile_fault = None  # optional fn(B, ctx) raising to inject
         self.events: List[dict] = []
         self.flat_weights = flatten_params(model, params)
@@ -481,21 +516,41 @@ class DecodeStepCompiler:
             page_size=self.page_size, n_pages=self.n_pages,
             cache_dtype=self.cache_dtype)
 
+    def _check_sharded(self, compiled, B: int, ctx: int):
+        """A sharded compiler must never silently serve an unsharded
+        step: a ShardMapPass refusal here is a hard, typed error."""
+        if self.n_shards <= 1:
+            return compiled
+        info = compiled.report.get("shard_map") or {}
+        if not info.get("sharded"):
+            reasons = [d for d in compiled.report.get("grid_decisions", ())
+                       if d.get("decision") in ("unsharded", "shard_refused")]
+            raise RuntimeError(
+                f"decode step bucket (B={B}, ctx={ctx}) did not shard "
+                f"across {self.n_shards} hosts: {reasons}")
+        return compiled
+
     def _compile_grid(self, B: int, ctx: int) -> CompiledDecodeStep:
         if self.compile_fault is not None:
             self.compile_fault(B, ctx)
-        compiled = self._lowered(B, ctx).compile(
+        compiled = self._check_sharded(self._lowered(B, ctx).compile(
             backend="pallas", interpret=self.interpret,
             pipeline=decode_pipeline(self.interpret,
-                                     self.dtype_aware_sublanes),
-            cache=self.cache)
+                                     self.dtype_aware_sublanes,
+                                     n_shards=self.n_shards,
+                                     shard_axis=self.shard_axis,
+                                     mesh_sig=self.mesh_sig),
+            cache=self.cache), B, ctx)
         return CompiledDecodeStep(compiled, self._donate,
                                   donate=self.donate, rung="grid")
 
     def _compile_jit(self, B: int, ctx: int,
                      donate: bool) -> CompiledDecodeStep:
-        compiled = self._lowered(B, ctx).compile(backend="jnp",
-                                                 cache=self.cache)
+        compiled = self._check_sharded(self._lowered(B, ctx).compile(
+            backend="jnp", cache=self.cache,
+            pipeline=default_pipeline("jnp", n_shards=self.n_shards,
+                                      shard_axis=self.shard_axis,
+                                      mesh_sig=self.mesh_sig)), B, ctx)
         return CompiledDecodeStep(compiled, self._donate, donate=donate,
                                   rung="jit")
 

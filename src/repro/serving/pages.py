@@ -15,6 +15,17 @@ Allocation is two-phase so admission can never strand a running request:
 page identities), and ``alloc`` later binds concrete pages as the
 sequence actually crosses page boundaries. ``available`` is
 free-minus-reserved; the scheduler admits against it.
+
+Multi-host sharding (``n_shards > 1``): the page id space splits into
+``n_shards`` contiguous blocks of ``pages_per_shard`` pages — block
+``h`` lives on host ``h``'s device shard of the page arrays, and its
+first page (global id ``h * pages_per_shard``) is that shard's null
+page. Accounting (free lists, reservations) is per shard, because a
+slot hosted on shard ``h`` can only ever reference shard-``h`` pages:
+inside the compiled ``shard_map`` step each host sees only its own page
+block, addressed by local ids. ``shrink`` drops the trailing shards —
+host loss — once the scheduler has preempted every request living on
+them; capacity reshrinks and the surviving shards keep their pages.
 """
 from __future__ import annotations
 
@@ -38,17 +49,28 @@ class KVPagePool:
     """
 
     def __init__(self, layers: Dict[int, Tuple[int, int]], n_pages: int,
-                 page_size: int, dtype=jnp.bfloat16):
-        if n_pages < 2:
-            raise ValueError(f"need >= 2 pages (1 null + data), "
-                             f"got {n_pages}")
+                 page_size: int, dtype=jnp.bfloat16, n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if n_pages % n_shards:
+            raise ValueError(f"n_pages {n_pages} not divisible by "
+                             f"n_shards {n_shards}")
+        if n_pages // n_shards < 2:
+            raise ValueError(f"need >= 2 pages per shard (1 null + data), "
+                             f"got {n_pages} over {n_shards} shards")
         self.n_pages = n_pages
+        self.n_shards = n_shards
+        self.pages_per_shard = n_pages // n_shards
         self.page_size = page_size
         self.dtype = jnp.dtype(dtype)
         self._layers = dict(layers)
-        # page 0 is the null page and is never handed out
-        self._free: List[int] = list(range(n_pages - 1, 0, -1))
-        self._reserved = 0
+        # the first page of each shard block is that shard's null page
+        # and is never handed out (shard 0's is the global NULL_PAGE)
+        pps = self.pages_per_shard
+        self._shard_free: List[List[int]] = [
+            list(range((h + 1) * pps - 1, h * pps, -1))
+            for h in range(n_shards)]
+        self._shard_reserved: List[int] = [0] * n_shards
         self._seized = 0
         self.k_pages: Dict[int, jnp.ndarray] = {}
         self.v_pages: Dict[int, jnp.ndarray] = {}
@@ -57,55 +79,77 @@ class KVPagePool:
     # -- accounting -----------------------------------------------------
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._shard_free)
+
+    @property
+    def _reserved(self) -> int:
+        return sum(self._shard_reserved)
 
     @property
     def available(self) -> int:
         """Pages that can still be *reserved* by a new admission."""
-        return len(self._free) - self._reserved
+        return self.num_free - self._reserved
+
+    def available_in(self, shard: int) -> int:
+        """Reservable pages on one shard (admission checks the shard the
+        request's slot lives on)."""
+        return len(self._shard_free[shard]) - self._shard_reserved[shard]
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    def null_page(self, shard: int) -> int:
+        return shard * self.pages_per_shard
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.page_size) if n_tokens > 0 else 0
 
-    def reserve(self, n: int):
-        if n > self.available:
-            raise PageError(f"cannot reserve {n} pages: only "
-                            f"{self.available} available")
-        self._reserved += n
+    def reserve(self, n: int, shard: int = 0):
+        if n > self.available_in(shard):
+            raise PageError(f"cannot reserve {n} pages on shard {shard}: "
+                            f"only {self.available_in(shard)} available")
+        self._shard_reserved[shard] += n
 
-    def unreserve(self, n: int):
-        if n > self._reserved:
-            raise PageError(f"unreserve({n}) exceeds reservation "
-                            f"{self._reserved}")
-        self._reserved -= n
+    def unreserve(self, n: int, shard: int = 0):
+        if n > self._shard_reserved[shard]:
+            raise PageError(f"unreserve({n}) exceeds shard {shard} "
+                            f"reservation {self._shard_reserved[shard]}")
+        self._shard_reserved[shard] -= n
 
-    def alloc(self, n: int = 1, reserved: bool = True) -> List[int]:
-        """Bind ``n`` concrete pages. With ``reserved`` (the scheduler
-        path) the pages come out of this request's prior reservation."""
-        if n > len(self._free):
+    def alloc(self, n: int = 1, reserved: bool = True,
+              shard: int = 0) -> List[int]:
+        """Bind ``n`` concrete pages on one shard. With ``reserved`` (the
+        scheduler path) the pages come out of this request's prior
+        reservation."""
+        free = self._shard_free[shard]
+        if n > len(free):
             raise PageError(f"out of pages: want {n}, free "
-                            f"{len(self._free)}")
+                            f"{len(free)} on shard {shard}")
         if reserved:
-            self.unreserve(n)
-        elif n > self.available:
+            self.unreserve(n, shard)
+        elif n > self.available_in(shard):
             raise PageError(f"alloc({n}) would eat into reservations: "
-                            f"available {self.available}")
-        return [self._free.pop() for _ in range(n)]
+                            f"available {self.available_in(shard)} on "
+                            f"shard {shard}")
+        return [free.pop() for _ in range(n)]
 
     def free(self, pages: List[int]):
         for p in pages:
-            if p == NULL_PAGE:
-                raise PageError("freeing the null page")
-            if not (0 < p < self.n_pages):
+            if not (0 <= p < self.n_pages):
                 raise PageError(f"freeing unknown page {p}")
-            if p in self._free:
+            if p % self.pages_per_shard == 0:
+                raise PageError("freeing the null page")
+            sh = self.shard_of(p)
+            if p in self._shard_free[sh]:
                 raise PageError(f"double free of page {p}")
-            self._free.append(p)
+            self._shard_free[sh].append(p)
 
     def stats(self) -> dict:
-        return {"n_pages": self.n_pages, "free": len(self._free),
+        return {"n_pages": self.n_pages, "free": self.num_free,
                 "reserved": self._reserved, "available": self.available,
-                "seized": self._seized, "page_size": self.page_size}
+                "seized": self._seized, "page_size": self.page_size,
+                "n_shards": self.n_shards,
+                "free_by_shard": [len(f) for f in self._shard_free]}
 
     # -- fault injection / recovery -------------------------------------
     def seize(self, n: int = 0) -> List[int]:
@@ -114,10 +158,16 @@ class KVPagePool:
         fault-injection hook for forced page pressure. Seized pages may
         leave ``available`` negative; the scheduler's preemption path is
         what absorbs that hazard. Return them with :meth:`release`."""
-        if n <= 0 or n > len(self._free):
-            n = len(self._free)
-        self._seized += n
-        return [self._free.pop() for _ in range(n)]
+        if n <= 0 or n > self.num_free:
+            n = self.num_free
+        out: List[int] = []
+        h = 0
+        while len(out) < n:
+            if self._shard_free[h]:
+                out.append(self._shard_free[h].pop())
+            h = (h + 1) % self.n_shards
+        self._seized += len(out)
+        return out
 
     def release(self, pages: List[int]):
         """Return pages taken by :meth:`seize` to the free list."""
@@ -125,10 +175,13 @@ class KVPagePool:
             raise PageError(f"releasing {len(pages)} pages but only "
                             f"{self._seized} are seized")
         for p in pages:
-            if not (0 < p < self.n_pages) or p in self._free:
+            sh = self.shard_of(p) if 0 <= p < self.n_pages else -1
+            if (sh < 0 or p % self.pages_per_shard == 0
+                    or p in self._shard_free[sh]):
                 raise PageError(f"releasing bad/free page {p}")
         self._seized -= len(pages)
-        self._free.extend(pages)
+        for p in pages:
+            self._shard_free[self.shard_of(p)].append(p)
 
     def reset_storage(self):
         """(Re)allocate zeroed page arrays. Used at construction and by
@@ -139,10 +192,41 @@ class KVPagePool:
             self.k_pages[li] = jnp.zeros(shape, self.dtype)
             self.v_pages[li] = jnp.zeros(shape, self.dtype)
 
+    def shrink(self, n_shards: int):
+        """Drop the trailing shards (host loss): capacity reshrinks to
+        ``n_shards * pages_per_shard`` pages, surviving shards keep
+        their pages and free lists. Every page of a dropped shard must
+        already be free — the scheduler preempts the requests living
+        there first ("preempt to fit")."""
+        if not (1 <= n_shards < self.n_shards):
+            raise PageError(f"shrink to {n_shards} shards from "
+                            f"{self.n_shards} is not a shrink")
+        if self._seized:
+            raise PageError(f"cannot shrink with {self._seized} seized "
+                            f"pages in flight")
+        pps = self.pages_per_shard
+        for h in range(n_shards, self.n_shards):
+            if len(self._shard_free[h]) != pps - 1 or self._shard_reserved[h]:
+                raise PageError(
+                    f"shard {h} still has live/reserved pages "
+                    f"({pps - 1 - len(self._shard_free[h])} live, "
+                    f"{self._shard_reserved[h]} reserved); preempt its "
+                    f"requests before shrinking")
+        self.n_shards = n_shards
+        self.n_pages = n_shards * pps
+        self._shard_free = self._shard_free[:n_shards]
+        self._shard_reserved = self._shard_reserved[:n_shards]
+        for li in self.k_pages:
+            self.k_pages[li] = self.k_pages[li][:self.n_pages]
+            self.v_pages[li] = self.v_pages[li][:self.n_pages]
+
     # -- snapshot --------------------------------------------------------
     def snapshot(self) -> dict:
         """Host-side copy of accounting + page storage (numpy-backed)."""
-        return {"free": list(self._free), "reserved": self._reserved,
+        return {"free": [p for f in self._shard_free for p in f],
+                "reserved": self._reserved,
+                "reserved_by": list(self._shard_reserved),
+                "n_shards": self.n_shards,
                 "seized": self._seized,
                 "k_pages": {li: np.asarray(a)
                             for li, a in self.k_pages.items()},
@@ -152,8 +236,18 @@ class KVPagePool:
     def restore(self, snap: dict):
         if set(snap["k_pages"]) != set(self.k_pages):
             raise PageError("snapshot layer set does not match this pool")
-        self._free = list(snap["free"])
-        self._reserved = int(snap["reserved"])
+        if snap.get("n_shards", 1) != self.n_shards:
+            raise PageError(f"snapshot has {snap.get('n_shards', 1)} "
+                            f"shards, pool has {self.n_shards}")
+        flat = list(snap["free"])
+        self._shard_free = [[p for p in flat if self.shard_of(p) == h]
+                            for h in range(self.n_shards)]
+        rby = snap.get("reserved_by")
+        if rby is not None:
+            self._shard_reserved = [int(r) for r in rby]
+        else:
+            self._shard_reserved = [int(snap["reserved"])] + \
+                [0] * (self.n_shards - 1)
         self._seized = int(snap.get("seized", 0))
         for li in self.k_pages:
             self.k_pages[li] = jnp.asarray(snap["k_pages"][li], self.dtype)

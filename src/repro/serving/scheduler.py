@@ -119,10 +119,18 @@ class Scheduler:
                  max_preemptions: int = 3, max_failures: int = 3,
                  injector=None, watchdog: Optional[StepWatchdog] = None,
                  donate: Optional[bool] = None,
+                 n_shards: int = 1, shard_axis: str = "shard",
                  clock: Callable[[], float] = time.perf_counter):
         if max_model_len % page_size:
             raise ValueError("max_model_len must be a multiple of "
                              f"page_size ({page_size}), got {max_model_len}")
+        if n_shards > 1:
+            if max_slots % n_shards:
+                raise ValueError(f"max_slots {max_slots} not divisible by "
+                                 f"n_shards {n_shards}")
+            if n_pages % n_shards:
+                raise ValueError(f"n_pages {n_pages} not divisible by "
+                                 f"n_shards {n_shards}")
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -135,8 +143,15 @@ class Scheduler:
         self.max_failures = max_failures
         self.injector = injector
         self._clock = clock
+        self.n_shards = int(n_shards)
+        self.shard_axis = shard_axis
+        self._spb = max_slots // self.n_shards  # slots per host shard
+        self.mesh_sig = self._mesh_sig(self.n_shards)
+        self.interpret = interpret
+        self.dtype_aware_sublanes = dtype_aware_sublanes
         self.pool = KVPagePool(attention_layer_shapes(model), n_pages,
-                               page_size, dtype=cache_dtype)
+                               page_size, dtype=cache_dtype,
+                               n_shards=self.n_shards)
         if donate is None:
             # donation consumes the step inputs, which forecloses the
             # re-run-from-same-inputs recovery rung; an armed injector
@@ -146,7 +161,8 @@ class Scheduler:
             model, params, page_size=page_size, n_pages=n_pages,
             cache_dtype=cache_dtype, interpret=interpret,
             dtype_aware_sublanes=dtype_aware_sublanes, cache=compile_cache,
-            donate=donate)
+            donate=donate, n_shards=self.n_shards, shard_axis=shard_axis,
+            mesh_sig=self.mesh_sig)
         self.watchdog = watchdog or StepWatchdog()
         self.block_table = np.zeros(
             (max_slots, max_model_len // page_size), np.int32)
@@ -179,6 +195,21 @@ class Scheduler:
         return {name: jnp.zeros((self.max_slots,) + shape, dt)
                 for name, (li, shape, dt) in self._sspecs.items()}
 
+    def _mesh_sig(self, n_shards: int) -> Optional[str]:
+        """Canonical signature of the device mesh this scheduler shards
+        over — part of every compiled step's cache key, so a changed
+        mesh (shrink, or same count over different devices) can never
+        hit a stale compiled step."""
+        if n_shards <= 1:
+            return None
+        from ..codegen.shard import make_shard_mesh
+        from ..launch.steps import mesh_signature
+        return repr(mesh_signature(make_shard_mesh(n_shards,
+                                                   self.shard_axis)))
+
+    def _shard_of(self, slot: int) -> int:
+        return slot // self._spb
+
     # -- submission / admission -----------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int,
                eos_id: Optional[int] = None,
@@ -195,25 +226,28 @@ class Scheduler:
         self.queue.append(req)
         return rid
 
-    def _free_slot(self) -> Optional[int]:
+    def _free_slot(self, total_pages: int = 0) -> Optional[int]:
+        """First free slot whose host shard can still reserve
+        ``total_pages`` (with one shard this is just first-free)."""
         for i, r in enumerate(self.slots):
-            if r is None:
+            if (r is None and self.pool.available_in(self._shard_of(i))
+                    >= total_pages):
                 return i
         return None
 
     def _try_admit(self):
         while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
             req = self.queue[0]
             total_tokens = min(len(req.prompt) + req.max_new_tokens,
                                self.max_model_len)
             total_pages = self.pool.pages_for(total_tokens)
-            if total_pages > self.pool.available:
+            if self._free_slot() is None:
+                return
+            slot = self._free_slot(total_pages)
+            if slot is None:
                 return
             self.queue.popleft()
-            self.pool.reserve(total_pages)
+            self.pool.reserve(total_pages, self._shard_of(slot))
             self._admit(req, slot, total_pages)
 
     def _admit(self, req: Request, slot: int, total_pages: int):
@@ -238,7 +272,7 @@ class Scheduler:
             i += chunk.shape[1]
 
         n_prompt_pages = self.pool.pages_for(L)
-        pages = self.pool.alloc(n_prompt_pages)
+        pages = self.pool.alloc(n_prompt_pages, shard=self._shard_of(slot))
         req.pages = pages
         req.reserved_left = total_pages - n_prompt_pages
         self.block_table[slot, :len(pages)] = pages
@@ -292,7 +326,9 @@ class Scheduler:
             self.pool.free(req.pages)
             req.pages = []
         if req.reserved_left:
-            self.pool.unreserve(req.reserved_left)
+            self.pool.unreserve(req.reserved_left,
+                                self._shard_of(req.slot)
+                                if req.slot >= 0 else 0)
             req.reserved_left = 0
         if req.slot >= 0:
             self.block_table[req.slot, :] = 0
@@ -347,8 +383,15 @@ class Scheduler:
 
     # -- decode ----------------------------------------------------------
     def _buckets(self, active: List[Request]) -> tuple:
-        top_slot = max(r.slot for r in active)
-        B = min(_pow2_at_least(top_slot + 1), self.max_slots)
+        if self.n_shards > 1:
+            # sharded steps always run the full slot range: the static
+            # slot -> host mapping (slot // slots_per_shard) must line
+            # up with shard_map's equal split of the batch dim, which a
+            # shrunken B bucket would shift
+            B = self.max_slots
+        else:
+            top_slot = max(r.slot for r in active)
+            B = min(_pow2_at_least(top_slot + 1), self.max_slots)
         longest = max(r.pos + 1 for r in active)
         pages = _pow2_at_least(self.pool.pages_for(longest))
         ctx = min(pages * self.page_size, self.max_model_len)
@@ -363,11 +406,15 @@ class Scheduler:
                 continue  # evicted while a victim for an earlier request
             while len(r.pages) < self.pool.pages_for(r.pos + 1):
                 reserved = r.reserved_left > 0
+                sh = self._shard_of(r.slot)
                 try:
-                    pg = self.pool.alloc(1, reserved=reserved)[0]
+                    pg = self.pool.alloc(1, reserved=reserved, shard=sh)[0]
                 except PageError:
+                    # pressure is per host shard: evicting a request on
+                    # another shard frees no page this one can use
                     victim = max(
-                        (a for a in self.slots if a is not None),
+                        (a for a in self.slots if a is not None
+                         and self._shard_of(a.slot) == sh),
                         key=lambda a: a.admit_seq)
                     self._preempt(victim)
                     if victim is r:
@@ -389,7 +436,15 @@ class Scheduler:
         kwargs = dict(self.compiler.flat_weights)
         kwargs["tokens"] = jnp.asarray(tokens)
         kwargs["positions"] = jnp.asarray(positions)
-        kwargs["block_table"] = jnp.asarray(self.block_table[:B, :n_bt])
+        bt = self.block_table[:B, :n_bt]
+        if self.n_shards > 1:
+            # the compiled step's shard h sees only its own page block:
+            # global page ids localize to it (the zero entries of
+            # inactive lanes become each shard's own null page, local 0)
+            shard = (np.arange(B) // self._spb)[:, None]
+            bt = np.where(bt != 0,
+                          bt - shard * self.pool.pages_per_shard, 0)
+        kwargs["block_table"] = jnp.asarray(bt, jnp.int32)
         for li in attention_layer_shapes(self.model):
             kwargs[f"kp{li}"] = self.pool.k_pages[li]
             kwargs[f"vp{li}"] = self.pool.v_pages[li]
@@ -572,7 +627,9 @@ class Scheduler:
         """One typed view of the run: finish reasons, recovery counters,
         watchdog/compiler event logs, pool accounting."""
         reasons = Counter(r.finish_reason for r in self.finished)
-        return {"n_steps": self.n_steps,
+        return {"n_shards": self.n_shards,
+                "mesh_signature": self.mesh_sig,
+                "n_steps": self.n_steps,
                 "n_decode_steps": self.n_decode_steps,
                 "finished": len(self.finished),
                 "queued": len(self.queue),
@@ -591,7 +648,8 @@ class Scheduler:
         return {"max_slots": self.max_slots, "page_size": self.page_size,
                 "n_pages": self.pool.n_pages,
                 "max_model_len": self.max_model_len,
-                "cache_dtype": str(self.pool.dtype)}
+                "cache_dtype": str(self.pool.dtype),
+                "n_shards": self.n_shards}
 
     def snapshot(self) -> dict:
         """Serialize the whole in-flight state host-side (numpy-backed).
@@ -661,6 +719,229 @@ class Scheduler:
         self.last_logits = None
         return self
 
+    # -- elastic multi-host: shrink + per-host snapshot shards -------------
+    def shrink(self, n_shards: int):
+        """Live mesh shrink (host loss): drop the trailing host shards.
+
+        Requests on the dropped shards are preempted with their tokens
+        kept (re-queued at the front; readmission re-prefills, so greedy
+        streams stay byte-identical), the pool reshrinks to the
+        surviving page blocks, and the compiled step is rebuilt for the
+        smaller mesh — a different pipeline signature and mesh
+        signature, hence a compilation-cache miss, never a stale
+        kernel. Requests on surviving shards keep running untouched."""
+        if not (1 <= n_shards < self.n_shards):
+            raise ValueError(f"shrink to {n_shards} shards from "
+                             f"{self.n_shards} is not a shrink")
+        new_slots = n_shards * self._spb
+        victims = [r for r in self.slots[new_slots:] if r is not None]
+        for r in sorted(victims, key=lambda a: a.admit_seq, reverse=True):
+            self._strip(r)
+            self.queue.appendleft(r)
+            self.events.append({"kind": "shrink_preempt", "rid": r.rid,
+                                "step": self.n_steps,
+                                "kept_tokens": len(r.tokens_out)})
+        self.pool.shrink(n_shards)
+        self.slots = self.slots[:new_slots]
+        self.block_table = self.block_table[:new_slots].copy()
+        self.states = {name: a[:new_slots]
+                       for name, a in self.states.items()}
+        old = self.n_shards
+        self.n_shards = n_shards
+        self.max_slots = new_slots
+        self.mesh_sig = self._mesh_sig(n_shards)
+        self.compiler = DecodeStepCompiler(
+            self.model, self.params, page_size=self.page_size,
+            n_pages=self.pool.n_pages, cache_dtype=str(self.pool.dtype),
+            interpret=self.interpret,
+            dtype_aware_sublanes=self.dtype_aware_sublanes,
+            cache=self.compiler.cache, donate=self.compiler.donate,
+            n_shards=n_shards, shard_axis=self.shard_axis,
+            mesh_sig=self.mesh_sig)
+        self.events.append({"kind": "mesh_shrink", "from": old,
+                            "to": n_shards, "step": self.n_steps,
+                            "preempted": [r.rid for r in victims]})
+        return self
+
+    def snapshot_to_dir(self, d):
+        """Sharded :meth:`snapshot`: one ``meta.json`` (control state +
+        mesh signature) plus one ``host{h}.npz`` per host shard holding
+        only that host's slot rows and page block — what each host of a
+        real pod can write locally without gathering the cluster. The
+        directory commit is atomic (tmp + rename)."""
+        import json
+        import os
+        import shutil
+
+        d = str(d)
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        def req(r):
+            return None if r is None else dataclasses.asdict(r)
+
+        meta = {"version": SNAPSHOT_VERSION,
+                "config": self._snapshot_config(),
+                "mesh_signature": self.mesh_sig,
+                "now": self._clock(),
+                "queue": [req(r) for r in self.queue],
+                "slots": [req(r) for r in self.slots],
+                "finished": [req(r) for r in self.finished],
+                "pool": {"free": [p for f in self.pool._shard_free
+                                  for p in f],
+                         "reserved_by": list(self.pool._shard_reserved),
+                         "seized": self.pool._seized},
+                "rng": self._rng.bit_generator.state,
+                "next_rid": self._next_rid,
+                "admit_seq": self._admit_seq,
+                "n_steps": self.n_steps,
+                "n_decode_steps": self.n_decode_steps}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        spb, pps = self._spb, self.pool.pages_per_shard
+        for h in range(self.n_shards):
+            arrs = {"block_table":
+                    self.block_table[h * spb:(h + 1) * spb].copy()}
+            for name, a in self.states.items():
+                arrs[f"st::{name}"] = np.asarray(
+                    a[h * spb:(h + 1) * spb])
+            for li in self.pool.k_pages:
+                arrs[f"kp{li}"] = np.asarray(
+                    self.pool.k_pages[li][h * pps:(h + 1) * pps])
+                arrs[f"vp{li}"] = np.asarray(
+                    self.pool.v_pages[li][h * pps:(h + 1) * pps])
+            np.savez(os.path.join(tmp, f"host{h:03d}.npz"), **arrs)
+        from pathlib import Path
+
+        from ..checkpoint.store import _commit
+        _commit(Path(d), Path(tmp))
+        return d
+
+    def restore_from_dir(self, d) -> "Scheduler":
+        """Load a :meth:`snapshot_to_dir` directory into this (fresh)
+        scheduler — possibly over a *different* mesh.
+
+        * Same shard count, all host files present: exact restore
+          (byte-identical continuation, like :meth:`restore`).
+        * Fewer shards here, or a host file missing (that host died
+          with its snapshot shard): the surviving hosts restore
+          exactly; every request whose slot lived on a lost shard is
+          re-queued with its generated tokens kept and a typed
+          ``restore_recompute`` event — its KV pages are gone, so
+          readmission re-prefills from tokens (PR 8's recompute rung),
+          keeping greedy streams byte-identical.
+        * More shards here (grow): all snapshot shards restore, the new
+          hosts start empty.
+
+        Slot-per-host and pages-per-host geometry must match — the
+        snapshot's host shards map 1:1 onto this scheduler's."""
+        import json
+        import os
+
+        d = str(d)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        if meta.get("version") != SNAPSHOT_VERSION:
+            raise ValueError(f"unknown snapshot version "
+                             f"{meta.get('version')!r}")
+        cfg_s = dict(meta["config"])
+        cfg_m = self._snapshot_config()
+        k_snap = int(cfg_s.get("n_shards", 1))
+        spb_s = cfg_s["max_slots"] // k_snap
+        pps_s = cfg_s["n_pages"] // k_snap
+        same = {k: cfg_s[k] for k in ("page_size", "max_model_len",
+                                      "cache_dtype")}
+        if (same != {k: cfg_m[k] for k in same}
+                or spb_s != self._spb
+                or pps_s != self.pool.pages_per_shard):
+            raise ValueError(f"snapshot geometry {cfg_s} does not map "
+                             f"onto scheduler {cfg_m}")
+        shift = self._clock() - meta["now"]
+
+        def req(dd):
+            if dd is None:
+                return None
+            r = Request(**dd)
+            r.submit_time += shift
+            if r.first_token_time:
+                r.first_token_time += shift
+            return r
+
+        host_file = {h: os.path.join(d, f"host{h:03d}.npz")
+                     for h in range(k_snap)}
+        dead = [h for h in range(k_snap)
+                if h >= self.n_shards or not os.path.exists(host_file[h])]
+        alive = [h for h in range(k_snap) if h not in dead]
+
+        self.block_table = np.zeros(
+            (self.max_slots, self.max_model_len // self.page_size),
+            np.int32)
+        self.states = self._zero_states()
+        self.pool.reset_storage()
+        pps = self.pool.pages_per_shard
+        self.pool._shard_free = [
+            list(range((h + 1) * pps - 1, h * pps, -1))
+            for h in range(self.n_shards)]
+        self.pool._shard_reserved = [0] * self.n_shards
+        self.pool._seized = 0
+
+        spb = self._spb
+        for h in alive:
+            with np.load(host_file[h]) as z:
+                self.block_table[h * spb:(h + 1) * spb] = z["block_table"]
+                for name in self.states:
+                    self.states[name] = self.states[name].at[
+                        h * spb:(h + 1) * spb].set(
+                            jnp.asarray(z[f"st::{name}"],
+                                        self.states[name].dtype))
+                for li in self.pool.k_pages:
+                    self.pool.k_pages[li] = self.pool.k_pages[li].at[
+                        h * pps:(h + 1) * pps].set(
+                            jnp.asarray(z[f"kp{li}"], self.pool.dtype))
+                    self.pool.v_pages[li] = self.pool.v_pages[li].at[
+                        h * pps:(h + 1) * pps].set(
+                            jnp.asarray(z[f"vp{li}"], self.pool.dtype))
+            self.pool._shard_free[h] = [
+                p for p in meta["pool"]["free"]
+                if self.pool.shard_of(p) == h]
+            self.pool._shard_reserved[h] = \
+                int(meta["pool"]["reserved_by"][h])
+
+        self.queue = deque(req(dd) for dd in meta["queue"])
+        self.finished = [req(dd) for dd in meta["finished"]]
+        self.slots = [None] * self.max_slots
+        lost: List[Request] = []
+        for r in (req(dd) for dd in meta["slots"]):
+            if r is None:
+                continue
+            h = self._shard_of(r.slot)
+            if h in dead:
+                r.pages = []
+                r.reserved_left = 0
+                r.slot = -1
+                lost.append(r)
+            else:
+                self.slots[r.slot] = r
+        for r in sorted(lost, key=lambda a: a.admit_seq, reverse=True):
+            self.queue.appendleft(r)
+            self.events.append({"kind": "restore_recompute",
+                                "rid": r.rid, "step": self.n_steps,
+                                "kept_tokens": len(r.tokens_out)})
+        if dead:
+            self.n_recomputes += 1
+            self.watchdog.fault(self.n_steps, "restore_shard_lost",
+                                f"shards {dead}, rids "
+                                f"{[r.rid for r in lost]}")
+        self._rng.bit_generator.state = meta["rng"]
+        self._next_rid = int(meta["next_rid"])
+        self._admit_seq = int(meta["admit_seq"])
+        self.n_steps = int(meta["n_steps"])
+        self.n_decode_steps = int(meta["n_decode_steps"])
+        self.last_logits = None
+        return self
+
     # -- invariants -------------------------------------------------------
     def check_invariants(self):
         """Page accounting + block-table consistency; raises PageError."""
@@ -677,15 +958,22 @@ class Scheduler:
             if any(row[len(r.pages):]):
                 raise PageError(f"stale block-table entries in slot "
                                 f"{r.slot}: {row}")
-        if 0 in live:
+        if any(p % self.pool.pages_per_shard == 0 for p in live):
             raise PageError("null page bound to a live request")
         if len(set(live)) != len(live):
             raise PageError(f"page bound to two live requests: {live}")
+        for r in self.slots:
+            if r is not None and any(
+                    self.pool.shard_of(p) != self._shard_of(r.slot)
+                    for p in r.pages):
+                raise PageError(f"request {r.rid} in slot {r.slot} holds "
+                                f"pages off its host shard: {r.pages}")
         n_accounted = self.pool.num_free + len(live) + self.pool._seized
-        if n_accounted != self.pool.n_pages - 1:
+        n_data = self.pool.n_pages - self.pool.n_shards  # one null each
+        if n_accounted != n_data:
             raise PageError(f"page leak: {self.pool.num_free} free + "
                             f"{len(live)} live + {self.pool._seized} "
-                            f"seized != {self.pool.n_pages - 1}")
+                            f"seized != {n_data}")
         reserved = sum(r.reserved_left for r in self.slots if r is not None)
         if reserved != self.pool._reserved:
             raise PageError(f"reservation drift: pool {self.pool._reserved}"
