@@ -1,0 +1,167 @@
+"""Compile-and-verify lint over the repo's benchmark and model-zoo
+programs.
+
+``python -m repro.analysis.lint`` compiles every benchmark SDFG (and,
+with ``--arch``, serving decode steps for reduced model-zoo configs)
+through **both** backend pipelines with the verification harness armed,
+and emits one machine-readable JSON report: per target/backend the
+error-severity diagnostics (verifier findings, attributed to the
+introducing pass where known) and the info-severity refusal stream.
+Exit status is non-zero iff any error-severity diagnostic (or a
+compile crash) was found — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import traceback
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _benchmark_targets(bench_dir: Path) -> Dict[str, Callable]:
+    """Name -> SDFG builder for every committed benchmark program."""
+    if not bench_dir.is_dir():
+        return {}
+    sys.path.insert(0, str(bench_dir))
+    try:
+        axpydot = importlib.import_module("axpydot")
+        gemver = importlib.import_module("gemver")
+        jacobi = importlib.import_module("jacobi_chain")
+        stencil = importlib.import_module("stencil_bench")
+        lenet = importlib.import_module("lenet")
+    except ImportError as exc:       # pragma: no cover - partial checkout
+        print(f"lint: cannot import benchmarks from {bench_dir}: {exc}",
+              file=sys.stderr)
+        return {}
+    return {
+        "axpydot": lambda: axpydot.build(256),
+        "axpydot_two_producer": lambda: axpydot.build_two_producer(256),
+        "gemver": lambda: gemver.build(64),
+        "gemver_chain": lambda: gemver.build_chain(64),
+        "star_stencil": lambda: stencil._star_sdfg(64, 64),
+        "jacobi_chain": lambda: jacobi._chain_sdfg(128),
+        "lenet_convblock": lambda: lenet._convblock_sdfg(2),
+    }
+
+
+def _model_lowered(arch: str):
+    """Lowered serving decode step for a reduced model-zoo config —
+    exercises the donation metadata and (for the pallas pipeline) the
+    grid/tiling annotation checks on a real multi-layer program."""
+    import dataclasses
+
+    import jax
+
+    from ..configs import get_config
+    from ..models.transformer import TransformerLM
+    from ..serving.compile import DecodeStepCompiler
+
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              activation_dtype="float32")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    compiler = DecodeStepCompiler(model, params, page_size=8, n_pages=16)
+    return compiler._lowered(B=2, ctx=16), compiler
+
+
+def _lint_one(name: str, make_lowered: Callable, backend: str,
+              pipeline=None) -> dict:
+    from ..pipeline.stages import Lowered
+
+    entry = {"target": name, "backend": backend, "ok": True,
+             "diagnostics": [], "refusals": [], "error": None}
+    try:
+        low = make_lowered()
+        if not isinstance(low, Lowered):
+            from ..pipeline import lower
+            low = lower(low)
+        cp = low.compile(backend=backend, cache=None, verify="full",
+                         pipeline=pipeline)
+        vrec = cp.report.get("verify") or {}
+        diags = list(vrec.get("baseline", ()))
+        for p in vrec.get("passes", ()):
+            diags.extend(p.get("violations", ()))
+        errors = [d for d in diags if d.get("severity", "error") == "error"]
+        entry["diagnostics"] = errors
+        entry["refusals"] = list(cp.report.get("refusals", ()))
+        entry["ok"] = not errors
+    except Exception as exc:
+        entry["ok"] = False
+        entry["error"] = f"{type(exc).__name__}: {exc}"
+        entry["traceback"] = traceback.format_exc(limit=8)
+    return entry
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="compile every benchmark (and selected model-zoo "
+                    "configs) through both backend pipelines with the "
+                    "static verifier armed")
+    ap.add_argument("--benchmarks-dir", default="benchmarks",
+                    help="directory holding the benchmark programs")
+    ap.add_argument("--target", action="append", default=None,
+                    help="restrict to named target(s)")
+    ap.add_argument("--backend", choices=BACKENDS, default=None,
+                    help="restrict to one backend (default: both)")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="also lint the serving decode step of this "
+                         "model-zoo arch (reduced config); repeatable")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here instead of stdout")
+    args = ap.parse_args(argv)
+
+    backends = (args.backend,) if args.backend else BACKENDS
+    targets: List[Tuple[str, Callable, object]] = []
+    for name, builder in _benchmark_targets(
+            Path(args.benchmarks_dir)).items():
+        targets.append((name, builder, None))
+    for arch in (args.arch or ()):
+        def make(arch=arch):
+            low, _ = _model_lowered(arch)
+            return low
+        targets.append((f"decode_step[{arch}]", make, None))
+    if args.target:
+        keep = set(args.target)
+        targets = [t for t in targets if t[0] in keep]
+    if not targets:
+        print("lint: no targets found", file=sys.stderr)
+        return 2
+
+    results = []
+    for name, make, pipeline in targets:
+        for backend in backends:
+            if name.startswith("decode_step[") and backend == "pallas":
+                # the decode step's pallas path uses the serving pipeline
+                from ..serving.compile import decode_pipeline
+                pl = decode_pipeline(True, False)
+            else:
+                pl = pipeline
+            r = _lint_one(name, make, backend, pipeline=pl)
+            results.append(r)
+            status = "ok" if r["ok"] else "FAIL"
+            detail = r["error"] or "; ".join(
+                d["code"] for d in r["diagnostics"]) or ""
+            print(f"lint: {name}/{backend}: {status} {detail}".rstrip(),
+                  file=sys.stderr)
+
+    report = {
+        "targets": len(targets), "backends": list(backends),
+        "failures": sum(not r["ok"] for r in results),
+        "results": results,
+    }
+    text = json.dumps(report, indent=2, default=str)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    else:
+        print(text)
+    return 1 if report["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

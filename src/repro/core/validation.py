@@ -22,7 +22,13 @@ from .symbolic import Expr
 
 
 class ValidationError(Exception):
-    pass
+    """Structural validation failure. ``code`` ties the failure into the
+    typed diagnostic taxonomy (``analysis.diagnostics.CODES``); checks
+    predating the taxonomy leave it None (reported as STRUCT000)."""
+
+    def __init__(self, message: str, code: str = None):
+        super().__init__(message)
+        self.code = code
 
 
 def validate_state(state: State, sdfg: SDFG):
@@ -35,6 +41,25 @@ def validate_state(state: State, sdfg: SDFG):
                 f"{e.memlet.data!r}")
     for node in state.nodes:
         if isinstance(node, Tasklet):
+            # connector shadowing: a duplicate within either list makes
+            # the tasklet namespace ambiguous — two edges feed one fn
+            # kwarg / one output key names two edges (STRUCT002). The
+            # same name appearing as both an input and an output is
+            # legal: inputs are fn kwargs, outputs are result-dict keys,
+            # two separate namespaces.
+            dup_in = [c for c in set(node.inputs)
+                      if node.inputs.count(c) > 1]
+            dup_out = [c for c in set(node.outputs)
+                       if node.outputs.count(c) > 1]
+            if dup_in or dup_out:
+                detail = []
+                if dup_in:
+                    detail.append(f"duplicate inputs {sorted(dup_in)}")
+                if dup_out:
+                    detail.append(f"duplicate outputs {sorted(dup_out)}")
+                raise ValidationError(
+                    f"{state.label}/{node.label}: connector shadowing — "
+                    f"{'; '.join(detail)}", code="STRUCT002")
             in_conns = {e.dst_conn for e in state.in_edges(node) if e.dst_conn}
             out_conns = {e.src_conn for e in state.out_edges(node) if e.src_conn}
             missing_in = set(node.inputs) - in_conns
@@ -114,11 +139,15 @@ def validate_state(state: State, sdfg: SDFG):
 
 
 def validate_sdfg(sdfg: SDFG):
-    names = set()
-    for name in sdfg.arrays:
-        if name in names:
-            raise ValidationError(f"duplicate container {name!r}")
-        names.add(name)
+    # container names and symbol names share the argument/closure
+    # namespace at codegen time — a collision silently shadows one with
+    # the other (STRUCT001). (The historical duplicate-container check
+    # iterated dict keys, which cannot repeat, so it never fired.)
+    collisions = sorted(set(sdfg.arrays) & set(sdfg.symbol_values))
+    if collisions:
+        raise ValidationError(
+            f"container name(s) {collisions} collide with symbol names",
+            code="STRUCT001")
     for st in sdfg.states:
         validate_state(st, sdfg)
         for node in st.nodes:

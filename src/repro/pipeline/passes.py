@@ -148,11 +148,15 @@ class MapFusionPass(TransformationPass):
         pruned = prune_dead_scopes(sdfg)
         if pruned:
             report.setdefault("pruned_scopes", []).extend(pruned)
+        from ..analysis.diagnostics import refusal_code, refusal_diagnostic
         for label, reason in t.explain(sdfg):
             report.setdefault("grid_skipped", []).append(
                 (label, f"fusion refused: {reason}"))
             report.setdefault("grid_decisions", []).append(
-                {"map": label, "decision": "unfused", "reason": reason})
+                {"map": label, "decision": "unfused", "reason": reason,
+                 "code": refusal_code("fusion", reason)})
+            report.setdefault("refusals", []).append(
+                refusal_diagnostic("fusion", label, reason).to_dict())
         return count
 
 
@@ -343,6 +347,7 @@ class GridConversionPass(Pass):
         return None
 
     def apply(self, sdfg: SDFG, report: dict) -> List[str]:
+        from ..analysis.diagnostics import refusal_code, refusal_diagnostic
         from ..codegen.pallas_backend import (GRID_ANNOTATION,
                                               analyze_map_scope)
         from ..core.memlet import BlockFactorError
@@ -371,6 +376,9 @@ class GridConversionPass(Pass):
                     # spec would emit a kernel with outdated BlockSpecs
                     node.map.annotations.pop(GRID_ANNOTATION, None)
                     fallbacks.append((node.map.label, str(exc)))
+                    report.setdefault("refusals", []).append(
+                        refusal_diagnostic("grid_fallback", node.map.label,
+                                           str(exc)).to_dict())
                     continue
                 est = self.estimate(spec, sdfg)
                 reason = self.skip_reason(est)
@@ -379,7 +387,11 @@ class GridConversionPass(Pass):
                     skipped.append((node.map.label, reason))
                     decisions.append({"map": node.map.label,
                                       "decision": "vmap", "reason": reason,
+                                      "code": refusal_code("grid", reason),
                                       **est})
+                    report.setdefault("refusals", []).append(
+                        refusal_diagnostic("grid", node.map.label,
+                                           reason).to_dict())
                     continue
                 node.map.annotations[GRID_ANNOTATION] = spec
                 converted.append({"map": spec.kernel_name, **est})
@@ -428,6 +440,7 @@ class ShardMapPass(Pass):
                 "mesh_sig": self.mesh_sig}
 
     def apply(self, sdfg: SDFG, report: dict):
+        from ..analysis.diagnostics import refusal_code, refusal_diagnostic
         from ..transforms.shard_map import partition_sdfg
         res = partition_sdfg(sdfg, self.n_shards, self.axis)
         for d in res["decisions"]:
@@ -436,11 +449,15 @@ class ShardMapPass(Pass):
             entry.update({k: v for k, v in d.items()
                           if k in ("container", "dim", "how", "op",
                                    "extent")})
-            report.setdefault("grid_decisions", []).append(entry)
             if d["decision"] in ("unsharded", "shard_refused"):
+                label = d.get("map") or d.get("container") or "<sdfg>"
+                entry["code"] = refusal_code("shard", d.get("reason"))
                 report.setdefault("grid_skipped", []).append(
-                    (d.get("map") or d.get("container") or "<sdfg>",
-                     f"shard refused: {d.get('reason')}"))
+                    (label, f"shard refused: {d.get('reason')}"))
+                report.setdefault("refusals", []).append(
+                    refusal_diagnostic("shard", label,
+                                       d.get("reason")).to_dict())
+            report.setdefault("grid_decisions", []).append(entry)
         report["shard_map"] = {"sharded": res["sharded"],
                                "n_shards": self.n_shards,
                                "axis": self.axis,
@@ -516,13 +533,26 @@ class PassManager:
     Passes named in ``skip`` (constructor or ``run`` argument) are recorded
     but not executed. ``signature()`` canonicalizes the full configuration
     for the compilation-cache key.
+
+    ``verify`` arms the static verification harness (``analysis.verify``):
+    ``"full"`` re-runs the verifier after every executed pass, diffs the
+    structural snapshot, attributes any *new* violation to the pass that
+    introduced it, and records everything under ``report["verify"]``;
+    ``"strict"`` additionally raises
+    :class:`~repro.analysis.diagnostics.VerificationError` at the first
+    offending pass. Violations present *before* the pipeline ran are
+    recorded as the baseline, not attributed.
     """
 
     def __init__(self, passes: Iterable[PassLike] = (), name: str = "custom",
-                 skip: Iterable[str] = ()):
+                 skip: Iterable[str] = (), verify: Optional[str] = None):
         self.name = name
         self.passes: List[Pass] = [_as_pass(p) for p in passes]
         self.skip = set(skip)
+        if verify not in (None, "full", "strict"):
+            raise ValueError(f"verify must be None, 'full' or 'strict', "
+                             f"got {verify!r}")
+        self.verify = verify
 
     def append(self, p: PassLike) -> "PassManager":
         self.passes.append(_as_pass(p))
@@ -534,10 +564,22 @@ class PassManager:
         return self
 
     def run(self, sdfg: SDFG, report: Optional[dict] = None,
-            skip: Iterable[str] = ()) -> dict:
+            skip: Iterable[str] = (), verify: Optional[str] = None) -> dict:
         report = report if report is not None else {}
         entries = report.setdefault("passes", [])
         skip_names = self.skip | set(skip)
+        verify = verify if verify is not None else self.verify
+        vrec = snap = known = None
+        if verify:
+            from ..analysis.verify import (diff_snapshots, snapshot,
+                                           verify_sdfg)
+            baseline = verify_sdfg(sdfg)
+            known = {d.key() for d in baseline}
+            vrec = {"mode": verify,
+                    "baseline": [d.to_dict() for d in baseline],
+                    "passes": [], "violations": 0}
+            report["verify"] = vrec
+            snap = snapshot(sdfg)
         for p in self.passes:
             entry = {"name": p.name, "skipped": False, "seconds": 0.0,
                      "summary": None}
@@ -548,6 +590,23 @@ class PassManager:
             t0 = time.perf_counter()
             entry["summary"] = _summarize(p.apply(sdfg, report))
             entry["seconds"] = time.perf_counter() - t0
+            if verify:
+                from ..analysis.diagnostics import VerificationError
+                diags = verify_sdfg(sdfg)
+                new = [d.attributed(p.name) for d in diags
+                       if d.key() not in known]
+                known |= {d.key() for d in new}
+                new_snap = snapshot(sdfg)
+                vrec["passes"].append({
+                    "name": p.name,
+                    "clean": not new,
+                    "violations": [d.to_dict() for d in new],
+                    "diff": diff_snapshots(snap, new_snap),
+                })
+                vrec["violations"] += len(new)
+                snap = new_snap
+                if new and verify == "strict":
+                    raise VerificationError(new)
         return report
 
     def signature(self) -> Tuple:

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import copy
 import inspect
+import os
 from typing import Any, Iterable, Optional
 
 import jax
@@ -33,6 +34,16 @@ from .passes import PassManager, PassLike, default_pipeline
 #: registry (and the single "unknown backend" error path) is
 #: ``codegen.get_backend``, which ``Lowered.compile`` consults.
 BACKENDS = ("jnp", "pallas")
+
+
+def _env_verify() -> Optional[str]:
+    """Verify mode requested by the environment: ``REPRO_VERIFY=1`` (or
+    ``full``) records per-pass verifier results, ``REPRO_VERIFY=strict``
+    raises on the first pass that introduces a violation."""
+    v = os.environ.get("REPRO_VERIFY", "").strip().lower()
+    if v in ("", "0", "false", "off"):
+        return None
+    return "strict" if v == "strict" else "full"
 
 
 class Stage:
@@ -136,7 +147,8 @@ class Lowered(Stage):
                 expansion_level: Optional[str] = None,
                 pipeline: Optional[PassManager] = None,
                 cache: Optional[CompilationCache] = COMPILATION_CACHE,
-                in_place: bool = False) -> "Compiled":
+                in_place: bool = False,
+                verify: Optional[str] = None) -> "Compiled":
         """Lower to an executable with the backend's pass pipeline.
 
         ``pipeline`` overrides the backend default (it must then include
@@ -145,17 +157,26 @@ class Lowered(Stage):
         mode never touches the cache: the produced callable aliases the
         caller's live (mutable) graph, and a hit would skip the in-place
         expansion legacy callers rely on.
+
+        ``verify`` (``"full"`` / ``"strict"``, default from the
+        ``REPRO_VERIFY`` env var) arms the per-pass verification harness
+        — see :class:`~repro.pipeline.passes.PassManager`. Results land
+        in ``Compiled.report["verify"]``. A verifying compile keys the
+        cache separately so a cached non-verified artifact is never
+        served where a verification record was requested.
         """
         from ..codegen import get_backend
         backend_mod = get_backend(backend)  # validates the name early
         pm = pipeline if pipeline is not None else default_pipeline(
             backend, interpret=interpret, expansion_level=expansion_level)
+        if verify is None:
+            verify = pm.verify if pm.verify is not None else _env_verify()
         if in_place:
             cache = None
         key = None
         if cache is not None:  # content_hash walks the whole graph
             key = (self._sdfg.content_hash(), backend, pm.signature(),
-                   bool(jit))
+                   bool(jit)) + ((verify,) if verify else ())
             hit = cache.lookup(key)
             if hit is not None:
                 return hit
@@ -170,7 +191,7 @@ class Lowered(Stage):
                   "passes": [], "grid_kernels": [], "grid_converted": [],
                   "grid_skipped": [], "grid_fallbacks": [],
                   "pipeline": pm.name}
-        pm.run(work, report=report)
+        pm.run(work, report=report, verify=verify)
         work.validate()
 
         fn = backend_mod.build_callable(work)

@@ -511,10 +511,15 @@ class DecodeStepCompiler:
             set(state_specs(model)))
 
     def _lowered(self, B: int, ctx: int):
-        return serving_decode_step.lower(
+        low = serving_decode_step.lower(
             model=self.model, wspecs=self._wspecs, B=B, ctx=ctx,
             page_size=self.page_size, n_pages=self.n_pages,
             cache_dtype=self.cache_dtype)
+        # record the donation intent on the SDFG so the static verifier
+        # (analysis.bounds, DON001/DON002) can prove every donated buffer
+        # is genuinely consumed-and-rewritten rather than aliased
+        low.sdfg.metadata["donated"] = sorted(self._donate)
+        return low
 
     def _check_sharded(self, compiled, B: int, ctx: int):
         """A sharded compiler must never silently serve an unsharded

@@ -376,6 +376,11 @@ class _Analysis:
                       for name, dim in sorted(self.assign.items())
                       if not self.sdfg.arrays[name].transient},
             "psum": sorted(self.psum),
+            # (map label, param) pairs whose range was divided by the
+            # shard count — the verifier (analysis.annotations, SHD003)
+            # uses this to prove replicated containers are not written
+            # per shard.
+            "divided": sorted(self.divided),
         }
 
 

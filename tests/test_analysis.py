@@ -1,0 +1,270 @@
+"""Static analysis & verification (ISSUE-10).
+
+Covers: the seeded-mutation self-test (every injected miscompilation
+caught with its expected code and attributed to the mutating pass), the
+verifier being a no-op on all committed benchmark SDFGs through both
+backend pipelines, the repaired structural checks in core.validation
+(STRUCT001 symbol collision, STRUCT002 connector shadowing), the typed
+refusal-code taxonomy shared by ``grid_decisions`` and verifier
+findings, strict-mode failure, verify-aware compilation-cache keys, and
+the serving donation metadata.
+"""
+import importlib
+import os
+import sys
+
+import pytest
+
+from repro.analysis import (CODES, Diagnostic, VerificationError,
+                            refusal_code, verify_sdfg)
+from repro.analysis.selftest import CASES, run_case, vec_sdfg
+from repro.core.validation import ValidationError, validate_sdfg
+from repro.pipeline import lower
+from repro.pipeline.cache import CompilationCache
+from repro.pipeline.passes import PassManager
+from repro.pipeline.stages import _env_verify
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "benchmarks")
+
+
+def _bench(name):
+    if BENCH_DIR not in sys.path:
+        sys.path.insert(0, BENCH_DIR)
+    return importlib.import_module(name)
+
+
+# ---------------------------------------------------------------------------
+# Seeded-mutation self-test
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c.name for c in CASES])
+def test_mutation_caught_with_expected_code(case):
+    """Each injected miscompilation is caught with the right code,
+    attributed to the mutation pass, on a clean baseline."""
+    r = run_case(case)
+    assert r["baseline_clean"], \
+        f"{case.name}: base program not clean: {r}"
+    assert r["prior_passes_clean"], \
+        f"{case.name}: a legitimate pass was blamed: {r}"
+    assert r["caught"], \
+        f"{case.name}: expected {case.expected_code}, got {r['codes']}"
+    assert r["attribution_ok"] and case.name in r["attributed_to"]
+
+
+def test_mutation_classes_are_distinct():
+    """ISSUE-10 acceptance: >= 8 distinct miscompilation classes."""
+    assert len({c.expected_code for c in CASES}) >= 8
+    assert len(CASES) >= 8
+
+
+def test_strict_mode_raises_at_offending_pass():
+    case = CASES[0]  # wcr_drop
+    sdfg = case.build()
+    pm = PassManager(case.passes(), name="strict")
+    from repro.analysis.selftest import _MutationPass
+    pm.append(_MutationPass(case.mutate, case.name))
+    with pytest.raises(VerificationError) as exc:
+        pm.run(sdfg, report={}, verify="strict")
+    assert any(d.code == case.expected_code for d in exc.value.diagnostics)
+    assert all(d.pass_name and d.pass_name.startswith("Mutate[")
+               for d in exc.value.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# Verifier is a no-op on every committed benchmark
+# ---------------------------------------------------------------------------
+
+
+_BENCH_BUILDERS = [
+    ("axpydot", lambda: _bench("axpydot").build(256)),
+    ("axpydot_two_producer",
+     lambda: _bench("axpydot").build_two_producer(256)),
+    ("gemver", lambda: _bench("gemver").build(64)),
+    ("gemver_chain", lambda: _bench("gemver").build_chain(64)),
+    ("star_stencil", lambda: _bench("stencil_bench")._star_sdfg(64, 64)),
+    ("jacobi_chain", lambda: _bench("jacobi_chain")._chain_sdfg(128)),
+    ("lenet_convblock", lambda: _bench("lenet")._convblock_sdfg(2)),
+]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("name,build", _BENCH_BUILDERS,
+                         ids=[n for n, _ in _BENCH_BUILDERS])
+def test_benchmarks_verify_clean(name, build, backend):
+    cp = lower(build()).compile(backend=backend, cache=None, verify="full")
+    vrec = cp.report["verify"]
+    assert vrec["baseline"] == []
+    assert vrec["violations"] == 0, vrec
+    assert all(p["clean"] for p in vrec["passes"])
+    # every executed pass got a verification record
+    executed = [p["name"] for p in cp.report["passes"]
+                if not p["skipped"]]
+    assert [p["name"] for p in vrec["passes"]] == executed
+
+
+def test_verify_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    cp = lower(vec_sdfg()).compile(cache=None)
+    assert "verify" not in cp.report
+
+
+def test_env_verify_parsing(monkeypatch):
+    for raw, want in [("", None), ("0", None), ("off", None),
+                      ("1", "full"), ("full", "full"),
+                      ("strict", "strict"), ("TRUE", "full")]:
+        monkeypatch.setenv("REPRO_VERIFY", raw)
+        assert _env_verify() == want, raw
+
+
+def test_verify_keys_cache_separately(monkeypatch):
+    """A cached non-verified artifact must not satisfy a verifying
+    compile (it has no verify record), and vice versa."""
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    cache = CompilationCache(max_entries=8)
+    low = lower(vec_sdfg())
+    plain = low.compile(cache=cache)
+    verified = low.compile(cache=cache, verify="full")
+    assert "verify" not in plain.report
+    assert verified.report["verify"]["violations"] == 0
+    # both are cached, under distinct keys
+    assert low.compile(cache=cache) is plain
+    assert low.compile(cache=cache, verify="full") is verified
+
+
+# ---------------------------------------------------------------------------
+# core.validation structural checks (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_container_symbol_collision_rejected():
+    s = vec_sdfg()
+    s.specialize(x=3)   # symbol named like the container
+    with pytest.raises(ValidationError) as exc:
+        validate_sdfg(s)
+    assert exc.value.code == "STRUCT001"
+    assert "x" in str(exc.value)
+
+
+def test_connector_shadowing_rejected():
+    from repro.core.sdfg import SDFG
+    s = SDFG("shadow")
+    s.add_array("a", (4,), "float32")
+    st = s.add_state("main", is_start=True)
+    t = st.add_tasklet("t", ["v", "v"], ["o"],
+                       fn=lambda v: {"o": v})
+    acc_in = st.add_access("a")
+    acc_out = st.add_access("a")
+    from repro.core.memlet import Memlet, Range, Subset
+    sub = Subset([Range.make(0, 4)])
+    st.add_edge(acc_in, None, t, "v", Memlet.simple("a", sub))
+    st.add_edge(t, "o", acc_out, None, Memlet.simple("a", sub))
+    with pytest.raises(ValidationError) as exc:
+        validate_sdfg(s)
+    assert exc.value.code == "STRUCT002"
+
+
+def test_same_name_in_and_out_is_legal():
+    """Inputs are fn kwargs, outputs are result keys — one name in both
+    is the serving decode step's idiom, not shadowing."""
+    from repro.core.memlet import Memlet, Range, Subset
+    from repro.core.sdfg import SDFG
+    s = SDFG("inout")
+    s.add_array("a", (4,), "float32")
+    st = s.add_state("main", is_start=True)
+    t = st.add_tasklet("t", ["x"], ["x"], fn=lambda x: {"x": x})
+    sub = Subset([Range.make(0, 4)])
+    st.add_edge(st.add_access("a"), None, t, "x", Memlet.simple("a", sub))
+    st.add_edge(t, "x", st.add_access("a"), None, Memlet.simple("a", sub))
+    validate_sdfg(s)   # must not raise
+
+
+def test_validation_error_surfaces_as_struct_diagnostic():
+    s = vec_sdfg()
+    s.specialize(x=3)
+    diags = verify_sdfg(s)
+    assert any(d.code == "STRUCT001" for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# Typed refusal taxonomy (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_refusal_codes_classify_known_reasons():
+    assert refusal_code("fusion",
+                        "fusing would reorder accesses to t") == "FUS001"
+    assert refusal_code("fusion", "t is pinned to HBM") == "FUS002"
+    assert refusal_code("fusion", "something novel") == "FUS000"
+    assert refusal_code("grid",
+                        "blocks pin 99 B of VMEM > budget 1 B") == "GRD001"
+    assert refusal_code("grid",
+                        "grid of 1 step(s) below min_grid_steps=2; "
+                        "vmap path wins") == "GRD002"
+    assert refusal_code("grid_fallback", "anything") == "GRD004"
+    assert refusal_code("shard",
+                        "read crosses the shard boundary") == "SHR002"
+    assert refusal_code("shard", "mystery") == "SHR000"
+
+
+def test_all_refusal_rules_map_to_registered_codes():
+    from repro.analysis.diagnostics import (_REFUSAL_FALLBACK,
+                                            _REFUSAL_RULES)
+    for rules in _REFUSAL_RULES.values():
+        for _, code in rules:
+            assert code in CODES
+    for code in _REFUSAL_FALLBACK.values():
+        assert code in CODES
+
+
+def test_grid_decisions_carry_codes():
+    """Every refusal-shaped grid decision now carries a typed code, and
+    the verbatim reason strings are untouched."""
+    jacobi = _bench("jacobi_chain")
+    cp = lower(jacobi._chain_sdfg(128)).compile(backend="pallas",
+                                                cache=None)
+    refused = [d for d in cp.report["grid_decisions"]
+               if d["decision"] in ("unfused", "vmap", "unsharded",
+                                    "shard_refused")]
+    assert refused, "expected at least one refusal in the jacobi chain"
+    for d in refused:
+        assert d["code"] in CODES, d
+    # the unified stream mirrors them as info-severity diagnostics
+    assert cp.report["refusals"]
+    for r in cp.report["refusals"]:
+        assert r["code"] in CODES and r["severity"] == "info"
+
+
+def test_diagnostic_identity_excludes_attribution():
+    a = Diagnostic(code="BND001", message="m", state="s")
+    assert a.key() == a.attributed("SomePass").key()
+    assert a.attributed("SomePass").to_dict()["pass"] == "SomePass"
+
+
+# ---------------------------------------------------------------------------
+# Donation metadata on the serving path
+# ---------------------------------------------------------------------------
+
+
+def test_serving_decode_step_stamps_donated_metadata():
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import TransformerLM
+    from repro.serving.compile import DecodeStepCompiler
+
+    cfg = dataclasses.replace(get_config("granite-3-2b").reduced(),
+                              activation_dtype="float32")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    compiler = DecodeStepCompiler(model, params, page_size=8, n_pages=16)
+    low = compiler._lowered(B=2, ctx=16)
+    donated = low.sdfg.metadata["donated"]
+    assert donated == sorted(compiler._donate) and donated
+    # every donated buffer is written by the step: the donation lint
+    # stays silent (DON001 would be the PR-6/PR-8 aliasing bug)
+    from repro.analysis.bounds import check_donation
+    assert check_donation(low.sdfg) == []

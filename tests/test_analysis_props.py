@@ -1,0 +1,123 @@
+"""Property tests for the static verifier (ISSUE-10 satellite).
+
+Randomly generated *legal* map scopes must verify clean, and a random
+single-edit mutation of a legal program (subset shift, wcr drop, range
+resize) must be detected. Skipped unless the optional ``hypothesis``
+dependency is installed.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' "
+                         "dependency (pip install -e .[test])")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
+
+from repro.analysis import verify_sdfg  # noqa: E402
+from repro.core.memlet import Memlet, Range, Subset  # noqa: E402
+from repro.core.sdfg import MapEntry, SDFG, Tasklet  # noqa: E402
+from repro.core.symbolic import sym  # noqa: E402
+
+
+def _legal_sdfg(n, m, wcr, two_d):
+    """An always-legal program: per-iteration disjoint writes (or a
+    wcr-protected accumulation) over static unit-step ranges."""
+    s = SDFG("prop")
+    shape = (n, m) if two_d else (n,)
+    s.add_array("x", shape, "float32")
+    s.add_array("y", shape, "float32")
+    st = s.add_state("main", is_start=True)
+    if two_d:
+        params = {"i": (0, n), "j": (0, m)}
+        sub = lambda: Subset([Range.index(sym("i")),
+                              Range.index(sym("j"))])
+    else:
+        params = {"i": (0, n)}
+        sub = lambda: Subset([Range.index(sym("i"))])
+    outputs = {"yv": Memlet.simple("y", sub())}
+    if wcr:
+        s.add_array("acc", (1,), "float32")
+        outputs["a"] = Memlet.simple("acc", wcr="add")
+        fn = lambda xv: {"yv": xv * 2.0, "a": xv.reshape(-1)[:1]}
+    else:
+        fn = lambda xv: {"yv": xv * 2.0}
+    st.add_mapped_tasklet(
+        "body", params,
+        inputs={"xv": Memlet.simple("x", sub())},
+        outputs=outputs, fn=fn)
+    return s
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=hst.integers(min_value=1, max_value=128),
+       m=hst.integers(min_value=1, max_value=16),
+       wcr=hst.booleans(), two_d=hst.booleans())
+def test_random_legal_scopes_verify_clean(n, m, wcr, two_d):
+    assert verify_sdfg(_legal_sdfg(n, m, wcr, two_d)) == []
+
+
+def _edges_of(sdfg, data, reads):
+    out = []
+    for st in sdfg.states:
+        for e in st.edges:
+            if e.memlet is None or e.memlet.data != data:
+                continue
+            if reads == isinstance(e.dst, Tasklet):
+                out.append(e)
+    return out
+
+
+def _shift_read(sdfg, k):
+    """x[i] -> x[i+k]: k >= 2 provably escapes the container on an
+    (0, n) map; also an in-place RACE002 when y aliases x."""
+    for e in _edges_of(sdfg, "x", reads=True):
+        e.memlet.subset = Subset([Range.index(sym("i") + k)])
+
+
+def _drop_wcr(sdfg):
+    for st in sdfg.states:
+        for e in st.edges:
+            if e.memlet is not None and e.memlet.wcr is not None:
+                e.memlet.wcr = None
+
+
+def _widen_write(sdfg, k):
+    """Per-iteration write of one element becomes a k-element slab
+    starting at i: iterations overlap (RACE001) and the subset escapes
+    the container near the end (BND001)."""
+    for e in _edges_of(sdfg, "y", reads=False):
+        e.memlet.subset = Subset([Range.make(sym("i"), sym("i") + k)])
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=hst.integers(min_value=4, max_value=128),
+       kind=hst.sampled_from(["shift_read", "drop_wcr", "widen_write"]),
+       k=hst.integers(min_value=2, max_value=5))
+def test_random_single_edit_mutations_detected(n, kind, k):
+    s = _legal_sdfg(n, 1, wcr=(kind == "drop_wcr"), two_d=False)
+    assert verify_sdfg(s) == []
+    if kind == "shift_read":
+        _shift_read(s, k)
+        expected = {"BND001"}
+    elif kind == "drop_wcr":
+        _drop_wcr(s)
+        expected = {"RACE001"}
+    else:
+        _widen_write(s, k)
+        expected = {"RACE001", "BND001"}
+    codes = {d.code for d in verify_sdfg(s)}
+    assert codes & expected, (kind, n, k, codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=hst.integers(min_value=2, max_value=64),
+       k=hst.integers(min_value=1, max_value=4))
+def test_range_resize_past_extent_detected(n, k):
+    """Resizing the map range past the container extent makes the
+    (previously in-bounds) per-iteration access provably escape."""
+    s = _legal_sdfg(n, 1, wcr=False, two_d=False)
+    for st in s.states:
+        for node in st.nodes:
+            if isinstance(node, MapEntry):
+                node.map.ranges = [Range.make(0, n + k)]
+    codes = {d.code for d in verify_sdfg(s)}
+    assert "BND001" in codes, (n, k, codes)
